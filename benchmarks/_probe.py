@@ -1,0 +1,84 @@
+"""Subprocess probe: run one (algo, n, dtype) optimization and report JSON.
+
+Run as a child so peak RSS is attributable to exactly one configuration —
+the same methodology as the paper's Process-Explorer measurements.
+
+    python -m benchmarks._probe --algo abo --n 100000 --dtype float32
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import resource
+import sys
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--algo", choices=["abo", "abo_kernel", "nm"],
+                    required=True)
+    ap.add_argument("--n", type=int, required=True)
+    ap.add_argument("--dtype", choices=["float32", "float64"],
+                    default="float32")
+    ap.add_argument("--samples", type=int, default=50)
+    ap.add_argument("--passes", type=int, default=5)
+    ap.add_argument("--nm-max-fe", type=int, default=250)
+    ap.add_argument("--mem-budget-gb", type=float, default=24.0)
+    ap.add_argument("--seed", type=int, default=None)
+    args = ap.parse_args()
+
+    if args.dtype == "float64":
+        os.environ["JAX_ENABLE_X64"] = "1"
+    import jax
+    import jax.numpy as jnp
+    from repro.core import ABOConfig, abo_minimize
+    from repro.objectives import GRIEWANK, griewank
+    from repro.optim import nelder_mead, simplex_bytes
+
+    dtype = jnp.float64 if args.dtype == "float64" else jnp.float32
+    rec = {"algo": args.algo, "n": args.n, "dtype": args.dtype}
+    t0 = time.time()
+    try:
+        if args.algo in ("abo", "abo_kernel"):
+            cfg = ABOConfig(samples_per_pass=args.samples,
+                            n_passes=args.passes,
+                            block_size=min(4096, max(8, args.n)))
+            if args.algo == "abo_kernel":
+                from repro.kernels.coord_sweep.ops import abo_minimize_kernel
+                run = lambda: abo_minimize_kernel(args.n, config=cfg,
+                                                  interpret=True)
+            else:
+                run = lambda: abo_minimize(GRIEWANK, args.n, config=cfg,
+                                           dtype=dtype, seed=args.seed)
+            r = run()                      # wall (includes compile)
+            wall = time.time() - t0
+            t1 = time.time()
+            r = run()                      # algorithmic (compile cached)
+            algo_t = time.time() - t1
+            rec.update(fun=float(r.fun), fe=int(r.fe), wall_s=wall,
+                       algo_s=algo_t)
+        else:
+            budget = int(args.mem_budget_gb * 2**30)
+            need = simplex_bytes(args.n, dtype)
+            if need > budget:
+                raise MemoryError(
+                    f"simplex needs {need/2**30:.1f} GiB > budget")
+            x0 = jnp.full((args.n,), 141.6, dtype)
+            r = nelder_mead(lambda x: griewank(x), x0,
+                            max_fe=args.nm_max_fe * args.n,
+                            memory_budget_bytes=budget)
+            wall = time.time() - t0
+            rec.update(fun=float(r.fun), fe=int(r.fe), wall_s=wall,
+                       algo_s=wall)
+    except MemoryError as e:
+        rec.update(crashed=True, reason=str(e)[:200],
+                   wall_s=time.time() - t0)
+    rec["max_rss_kb"] = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    rec["theoretical_kb"] = args.n * (8 if args.dtype == "float64" else 4) / 1000
+    print(json.dumps(rec))
+
+
+if __name__ == "__main__":
+    main()

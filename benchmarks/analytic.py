@@ -1,0 +1,172 @@
+"""Analytic per-cell cost model (flops / HBM bytes) for the roofline.
+
+XLA's cost_analysis counts each while/scan body ONCE regardless of trip
+count (layer scan, microbatch loop, and the rwkv/rglru time scans), so the
+HLO numbers systematically undercount looped work. The roofline therefore
+uses this explicit model as the primary source for compute/memory terms and
+reports the HLO-derived (unit-delta-corrected) numbers alongside as a
+cross-check — decode cells, which have no significant scans beyond layers,
+agree within ~2× (see EXPERIMENTS.md §Roofline).
+
+Conventions: 2 flops/MAC, bf16 = 2 bytes for params/activations, fp32
+optimizer state, per-DEVICE quantities on the single-pod (16, 16) mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ArchConfig, SHAPES, ShapeCell
+
+
+@dataclasses.dataclass
+class CellCost:
+    exec_flops: float        # per device, including remat/backward/dispatch
+    useful_flops: float      # 6·N_active·D (train) / 2·N_active·D (serve)
+    hbm_bytes: float         # per device
+    notes: str = ""
+
+
+def _attn_flops_per_token(cfg: ArchConfig, kind: str, s_ctx: float) -> float:
+    """QK^T + PV flops per token for one attention layer (2 flops/MAC)."""
+    return 4.0 * cfg.n_heads * cfg.head_dim * s_ctx
+
+
+def _layer_linear_flops(cfg: ArchConfig, li: int) -> float:
+    """Per-token projection/MLP flops (fwd) for layer li."""
+    d, hd = cfg.d_model, cfg.head_dim
+    kind = cfg.mixer_kind(li)
+    mlp = cfg.mlp_kind(li)
+    f = 0.0
+    if kind in ("attn", "swa"):
+        f += 2.0 * d * hd * (cfg.n_heads * 2 + cfg.n_kv_heads * 2)
+        if cfg.cross_attention:
+            f += 2.0 * d * hd * (cfg.n_heads * 2 + cfg.n_kv_heads * 2)
+    elif kind == "rglru":
+        dl = cfg.lru_width
+        f += 2.0 * d * dl * 3 + 2.0 * dl * dl * 2 + 8.0 * dl
+    elif kind == "rwkv6":
+        f += 2.0 * d * d * 5 + 2.0 * d * (32 * 5) * 2 + 2.0 * d * 64 * 2
+        f += 6.0 * cfg.rwkv_heads * cfg.rwkv_head_dim ** 2   # wkv state ops
+    gated = cfg.activation in ("swiglu", "geglu")
+    per_ff = 2.0 * d * cfg.d_ff * (3 if gated else 2)
+    if mlp == "moe":
+        f += cfg.top_k * per_ff + 2.0 * d * cfg.n_experts
+        f += cfg.n_shared_experts * per_ff
+    elif mlp == "channel_mix":
+        f += 2.0 * d * cfg.d_ff * 2 + 2.0 * d * d
+    else:
+        f += per_ff
+    return f
+
+
+def _dispatch_flops_per_token(cfg: ArchConfig, li: int,
+                              tokens_per_device: float,
+                              lossless: bool) -> float:
+    """GShard dense-dispatch einsum cost — the O(T²) term the §Perf pass
+    attacks. dispatch+combine: 2 einsums of T·E·C·d with C=1.25·T_disp·k/E
+    (or C=T when lossless); chunked dispatch caps T_disp at the chunk."""
+    if cfg.mlp_kind(li) != "moe":
+        return 0.0
+    d, e, k = cfg.d_model, cfg.n_experts, cfg.top_k
+    t_disp = tokens_per_device
+    if cfg.moe_dispatch_chunk and not lossless:
+        t_disp = min(t_disp, cfg.moe_dispatch_chunk)
+    cap = tokens_per_device if lossless else 1.25 * t_disp * k / e
+    return 2.0 * 2.0 * e * cap * d      # per token: 2 einsums × E·C·d MACs
+
+
+def cell_cost(cfg: ArchConfig, shape: str | ShapeCell, *,
+              n_devices: int = 256, tp: int = 16,
+              microbatches: int = 8, remat: bool = True) -> CellCost:
+    cell = SHAPES[shape] if isinstance(shape, str) else shape
+    dp = n_devices // tp
+    d, L = cfg.d_model, cfg.n_layers
+
+    if cell.kind == "train":
+        tokens_dev = cell.global_batch * cell.seq_len / dp
+        tok_mb = tokens_dev / microbatches
+        bwd_mult = 3.0 + (1.0 if remat else 0.0)    # fwd + 2×bwd (+ re-fwd)
+        s_avg = cell.seq_len / 2
+    elif cell.kind == "prefill":
+        tokens_dev = cell.global_batch * cell.seq_len / dp
+        tok_mb = tokens_dev
+        bwd_mult = 1.0
+        s_avg = cell.seq_len / 2
+    else:  # decode
+        tokens_dev = max(cell.global_batch / dp, cell.global_batch / n_devices, 1)
+        tok_mb = tokens_dev
+        bwd_mult = 1.0
+        s_avg = cell.seq_len
+
+    # ---- flops ---------------------------------------------------------
+    lin = sum(_layer_linear_flops(cfg, li) for li in range(L)) / tp
+    disp = sum(_dispatch_flops_per_token(cfg, li, tok_mb,
+                                         cfg.moe_capacity_factor is None
+                                         or cell.kind == "decode")
+               for li in range(L)) / tp
+    attn = 0.0
+    for li in range(L):
+        kind = cfg.mixer_kind(li)
+        if kind == "swa" and cfg.window:
+            s_ctx = min(s_avg, cfg.window)
+        elif kind in ("rglru", "rwkv6"):
+            continue
+        else:
+            s_ctx = s_avg
+        attn += _attn_flops_per_token(cfg, kind, s_ctx)
+    attn /= tp
+    logits = 2.0 * d * cfg.vocab_size / tp
+    enc = 0.0
+    if cfg.encoder_layers and cell.kind != "decode":
+        # decode never re-runs the encoder (cross K/V cached at prefill)
+        # encoder processes encoder_len frames once per sequence
+        per_tok_enc = (2.0 * d * cfg.head_dim * (cfg.n_heads * 2 + cfg.n_kv_heads * 2)
+                       + 2.0 * d * cfg.d_ff * 2
+                       + _attn_flops_per_token(cfg, "attn", cfg.encoder_len / 2))
+        seqs_dev = tokens_dev / max(cell.seq_len, 1) if cell.kind != "decode" \
+            else tokens_dev
+        enc = cfg.encoder_layers * per_tok_enc * cfg.encoder_len * seqs_dev \
+            / tp / max(tokens_dev, 1)
+
+    per_token_exec = (lin + disp + attn + logits + enc) * bwd_mult
+    exec_flops = per_token_exec * tokens_dev
+
+    n_act = cfg.n_active_params()
+    useful = (6.0 if cell.kind == "train" else 2.0) * n_act \
+        * cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1) \
+        / n_devices
+
+    # ---- HBM bytes -------------------------------------------------------
+    p_dev = cfg.n_params() / tp
+    if cell.kind == "train":
+        # params: read per microbatch fwd+bwd+remat; grads accumulate fp32;
+        # optimizer: read+write master/m/v fp32 once
+        param_traffic = p_dev * 2.0 * microbatches * (3 if remat else 2) \
+            + p_dev * 4.0 * 2 * 3 + p_dev * 4.0 * 2
+        act_traffic = tokens_dev * d * 2.0 * L * 8.0
+        logit_traffic = tokens_dev * cfg.vocab_size / tp * 2.0 * 2
+        hbm = param_traffic + act_traffic + logit_traffic
+    elif cell.kind == "prefill":
+        hbm = p_dev * 2.0 + tokens_dev * d * 2.0 * L * 4.0 \
+            + tokens_dev * cfg.head_dim * cfg.n_kv_heads * 2 * 2.0 * L
+    else:
+        # decode: params once + KV/state read (the decode roofline)
+        kv_bytes = 0.0
+        kv_elem_bytes = 1.0 + 4.0 / cfg.head_dim if cfg.kv_quant == "int8" \
+            else 2.0
+        for li in range(L):
+            kind = cfg.mixer_kind(li)
+            if kind in ("attn", "swa"):
+                ring = min(cell.seq_len, cfg.window) if kind == "swa" and \
+                    cfg.window else cell.seq_len
+                heads_fac = (1.0 / tp if cfg.n_kv_heads % tp == 0
+                             else 1.0 / tp)   # seq-parallel shards time axis
+                kv_bytes += (2 * cfg.n_kv_heads * cfg.head_dim * ring
+                             * kv_elem_bytes * heads_fac)
+            elif kind == "rglru":
+                kv_bytes += cfg.lru_width * 4.0 * 2
+            elif kind == "rwkv6":
+                kv_bytes += cfg.rwkv_heads * cfg.rwkv_head_dim ** 2 * 4.0 * 2
+        hbm = p_dev * 2.0 + kv_bytes * tokens_dev
+    return CellCost(exec_flops=exec_flops, useful_flops=useful,
+                    hbm_bytes=hbm)

@@ -1,0 +1,83 @@
+"""Kernel micro-benchmarks: per-call wall time of the jnp fallback path on
+CPU (interpret-mode timings are not meaningful) + analytic TPU roofline
+estimates for the Pallas kernels from their block shapes."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PEAK_FLOPS = 197e12          # v5e bf16
+HBM_BW = 819e9
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters
+
+
+def coord_sweep_bench():
+    """ABO sweep: CPU jnp path timing + TPU analytic (memory-bound)."""
+    from repro.core import ABOConfig, abo_minimize
+    from repro.objectives import GRIEWANK
+    n = 1_000_000
+    t0 = time.time()
+    r = abo_minimize(GRIEWANK, n)
+    wall = time.time() - t0
+    probes = r.fe
+    # TPU estimate: stream N f32 per pass, ~20 flop/probe on the VPU
+    bytes_pass = n * 4
+    tpu_mem_s = 5 * bytes_pass / HBM_BW
+    tpu_cmp_s = probes * 20 / PEAK_FLOPS
+    yield ("kernel/coord_sweep_cpu_1e6", wall * 1e6,
+           f"probes_per_s={probes/wall:.3e};fe={probes}")
+    yield ("kernel/coord_sweep_tpu_est", max(tpu_mem_s, tpu_cmp_s) * 1e6,
+           f"mem_bound={tpu_mem_s >= tpu_cmp_s};mem_s={tpu_mem_s:.2e};"
+           f"cmp_s={tpu_cmp_s:.2e}")
+
+
+def griewank_eval_bench():
+    from repro.objectives import griewank
+    n = 10_000_000
+    x = jnp.asarray(np.random.RandomState(0).uniform(-600, 600, n)
+                    .astype(np.float32))
+    f = jax.jit(lambda x: griewank(x))
+    jax.block_until_ready(f(x))
+    t0 = time.time()
+    for _ in range(3):
+        jax.block_until_ready(f(x))
+    per = (time.time() - t0) / 3
+    yield ("kernel/griewank_eval_cpu_1e7", per * 1e6,
+           f"GB_per_s={n*4/per/1e9:.2f}")
+    yield ("kernel/griewank_eval_tpu_est", (n * 4 / HBM_BW) * 1e6,
+           "memory_bound=True")
+
+
+def flash_attention_bench():
+    from repro.kernels.flash_attention.ops import flash_attention
+    b, h, s, d = 1, 8, 2048, 128
+    rng = np.random.RandomState(0)
+    q = jnp.asarray(rng.normal(size=(b, h, s, d)).astype(np.float32))
+    k, v = q, q
+    fn = jax.jit(lambda q, k, v: flash_attention(q, k, v, impl="ref"))
+    jax.block_until_ready(fn(q, k, v))
+    t0 = time.time()
+    jax.block_until_ready(fn(q, k, v))
+    per = time.time() - t0
+    flops = 4 * b * h * s * s * d * 0.5          # causal
+    yield ("kernel/flash_attn_cpu_2k", per * 1e6,
+           f"gflops_per_s={flops/per/1e9:.1f}")
+    yield ("kernel/flash_attn_tpu_est", (flops / PEAK_FLOPS) * 1e6,
+           f"flops={flops:.3e};compute_bound=True")
+
+
+def all_benches():
+    yield from coord_sweep_bench()
+    yield from griewank_eval_bench()
+    yield from flash_attention_bench()

@@ -1,0 +1,77 @@
+"""Paper-table harnesses (Tables 1-3, Figures 4-7) driving the _probe
+subprocess per configuration (isolated RSS, like the paper's methodology).
+
+  table1: fp32 RAM vs N   (ABO vs NM)        — paper Table 1 / Fig 6
+  table2: fp64 RAM vs N   (ABO vs NM)        — paper Table 2 / Fig 7
+  table3: wall time + FE vs N (ABO vs NM)    — paper Table 3 / Figs 4-5
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+DEFAULT_NS = [100, 1_000, 10_000, 100_000, 1_000_000]
+FULL_NS = DEFAULT_NS + [10_000_000, 100_000_000, 1_000_000_000]
+NM_NS = [2, 10, 100, 1_000]          # NM cannot go further (paper's point)
+NM_FULL_NS = NM_NS + [10_000]
+
+
+def probe(**kw) -> dict:
+    cmd = [sys.executable, "-m", "benchmarks._probe"]
+    for k, v in kw.items():
+        if v is not None:
+            cmd += [f"--{k.replace('_', '-')}", str(v)]
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    out = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                         cwd=REPO)
+    if out.returncode != 0:
+        return {"algo": kw.get("algo"), "n": kw.get("n"),
+                "crashed": True, "reason": out.stderr[-200:]}
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def _mem_rows(dtype: str, full: bool):
+    rows = []
+    ns = FULL_NS if full else DEFAULT_NS
+    for n in ns:
+        rows.append(probe(algo="abo", n=n, dtype=dtype))
+    for n in (NM_FULL_NS if full else NM_NS) + [100_000]:
+        rows.append(probe(algo="nm", n=n, dtype=dtype, nm_max_fe=5))
+    return rows
+
+
+def table1(full=False):
+    """fp32 memory: measured RSS vs ABO theoretical bytes(dtype)·N."""
+    for r in _mem_rows("float32", full):
+        yield (f"table1_mem_fp32/{r['algo']}_n{r['n']}",
+               r.get("wall_s", 0) * 1e6,
+               "CRASH" if r.get("crashed") else
+               f"rss_kb={r['max_rss_kb']};theory_kb={r['theoretical_kb']:.0f}")
+
+
+def table2(full=False):
+    for r in _mem_rows("float64", full):
+        yield (f"table2_mem_fp64/{r['algo']}_n{r['n']}",
+               r.get("wall_s", 0) * 1e6,
+               "CRASH" if r.get("crashed") else
+               f"rss_kb={r['max_rss_kb']};theory_kb={r['theoretical_kb']:.0f}")
+
+
+def table3(full=False):
+    """wall time + FE: ABO linear vs NM super-linear (paper Figs 4-5)."""
+    ns = (FULL_NS if full else DEFAULT_NS)
+    for n in ns:
+        r = probe(algo="abo", n=n, dtype="float32")
+        yield (f"table3_walltime/abo_n{n}", r["algo_s"] * 1e6,
+               f"fe={r['fe']};best={r['fun']:.3e};wall_s={r['wall_s']:.2f};"
+               f"algo_s={r['algo_s']:.3f}")
+    for n in NM_NS:
+        r = probe(algo="nm", n=n, dtype="float32", nm_max_fe=250)
+        d = ("CRASH" if r.get("crashed") else
+             f"fe={r['fe']};best={r['fun']:.3e};wall_s={r['wall_s']:.2f}")
+        yield (f"table3_walltime/nm_n{n}", r.get("wall_s", 0) * 1e6, d)

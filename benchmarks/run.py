@@ -1,0 +1,55 @@
+"""Benchmark harness — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # default (minutes)
+    PYTHONPATH=src python -m benchmarks.run --full     # paper-scale (hours)
+    PYTHONPATH=src python -m benchmarks.run --only table3
+
+Prints ``name,us_per_call,derived`` CSV rows. The roofline section reads the
+dry-run artifacts (results/dryrun) if present — run
+``python -m repro.launch.dryrun --all --mesh both`` first for the full table.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (up to 1e9 decision variables)")
+    ap.add_argument("--only", default=None,
+                    help="comma list: table1,table2,table3,kernels,abo_zo")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    print("name,us_per_call,derived")
+    rows = []
+
+    if want("table1"):
+        from benchmarks.paper_tables import table1
+        rows += list(table1(full=args.full))
+    if want("table2"):
+        from benchmarks.paper_tables import table2
+        rows += list(table2(full=args.full))
+    if want("table3"):
+        from benchmarks.paper_tables import table3
+        rows += list(table3(full=args.full))
+    if want("kernels"):
+        from benchmarks.kernel_bench import all_benches
+        rows += list(all_benches())
+    if want("abo_zo"):
+        from benchmarks.abo_zo_train import abo_zo_vs_adamw
+        rows += list(abo_zo_vs_adamw())
+
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+    sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

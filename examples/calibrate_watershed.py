@@ -1,0 +1,68 @@
+"""Model calibration with ABO — the paper's motivating domain (hydrology).
+
+A toy conceptual watershed ("abc" linear-reservoir family): each of N
+sub-catchments has one recession parameter k_i; observed discharge is a
+known mixture of per-catchment unit responses. Calibrating k against
+observations is a separable least-squares problem:
+
+    J(k) = Σ_i w_i · (g(k_i) − y_i)²
+
+which means ABO's O(1)-probe machinery applies verbatim — a 100,000-
+parameter watershed calibrates in seconds on a laptop, the paper's central
+pitch to the environmental-modeling community.
+
+    PYTHONPATH=src python examples/calibrate_watershed.py [--n 100000]
+"""
+import argparse
+import time
+
+import jax.numpy as jnp
+
+from repro.core import ABOConfig, abo_minimize
+from repro.objectives.base import SeparableObjective
+
+
+def make_watershed_objective(n: int) -> tuple[SeparableObjective, jnp.ndarray]:
+    """True parameters k*_i ∈ (0.2, 0.8) generated from the index (no O(N)
+    tables — zero-RAM discipline)."""
+
+    def k_true(idx, dt):
+        return 0.5 + 0.3 * jnp.sin(0.37 * (idx + 1).astype(dt))
+
+    def g(k):
+        # steady-state storage response of a linear reservoir, nonlinear in k
+        return k / (1.0 + k * k)
+
+    def terms(idx, x):
+        dt = x.dtype
+        resid = g(x) - g(k_true(idx, dt))
+        w = 1.0 + 0.5 * jnp.cos(0.11 * (idx + 1).astype(dt))   # gauge weights
+        return (w * resid * resid)[..., None]
+
+    obj = SeparableObjective(
+        name="watershed_abc", n_aggs=1, terms=terms,
+        combine=lambda a: a[..., 0], lower=0.01, upper=1.5)
+    return obj, None
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=100_000)
+    args = ap.parse_args()
+
+    obj, _ = make_watershed_objective(args.n)
+    print(f"calibrating {args.n:,} sub-catchment recession parameters...")
+    t0 = time.time()
+    r = abo_minimize(obj, args.n, config=ABOConfig(n_passes=6))
+    dt = time.time() - t0
+    print(f"  J(k) residual  : {r.fun:.3e}")
+    print(f"  wall time      : {dt:.2f}s  ({r.fe:,} probes)")
+    # recover a few parameters and compare against truth
+    idx = jnp.arange(5)
+    truth = 0.5 + 0.3 * jnp.sin(0.37 * (idx + 1).astype(jnp.float32))
+    print(f"  k[0:5] found   : {[f'{float(v):.4f}' for v in r.x[:5]]}")
+    print(f"  k[0:5] true    : {[f'{float(v):.4f}' for v in truth]}")
+
+
+if __name__ == "__main__":
+    main()

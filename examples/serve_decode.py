@@ -1,0 +1,15 @@
+"""Batched serving example: continuous-batching greedy decode.
+
+Runs the rwkv6 (attention-free, O(1) state) reduced model through the
+slot-based serving loop — the same decode step the decode_32k/long_500k
+dry-run cells compile for 512 chips.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    serve_main(["--arch", "rwkv6-3b", "--reduced",
+                "--requests", "12", "--batch-slots", "4",
+                "--prompt-len", "12", "--max-new", "24",
+                "--max-len", "128"])

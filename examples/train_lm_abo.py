@@ -1,0 +1,52 @@
+"""End-to-end driver: train an LM with AdamW vs ABO-ZO (the paper's
+zero-state optimizer) on the synthetic bigram corpus, with checkpointing.
+
+Default runs a reduced olmoe (MoE) for 200 steps on CPU in a few minutes —
+pass --full-age to scale up on real hardware (the step functions are the
+same pjit graphs the 512-chip dry-run compiles).
+
+    PYTHONPATH=src python examples/train_lm_abo.py --steps 200
+"""
+import argparse
+import time
+
+import jax
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmoe-1b-7b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    args = ap.parse_args()
+
+    print("=== AdamW baseline ===")
+    t0 = time.time()
+    loss_adamw = train_main([
+        "--arch", args.arch, "--reduced", "--steps", str(args.steps),
+        "--seq-len", str(args.seq_len), "--batch", str(args.batch),
+        "--optimizer", "adamw", "--lr", "3e-3",
+        "--ckpt-dir", args.ckpt_dir + "/adamw", "--log-every", "25"])
+    t_adamw = time.time() - t0
+
+    print("=== ABO-ZO (paper technique: zero optimizer state) ===")
+    t0 = time.time()
+    loss_zo = train_main([
+        "--arch", args.arch, "--reduced", "--steps", str(args.steps),
+        "--seq-len", str(args.seq_len), "--batch", str(args.batch),
+        "--optimizer", "abo_zo",
+        "--ckpt-dir", args.ckpt_dir + "/abo_zo", "--log-every", "25"])
+    t_zo = time.time() - t0
+
+    print(f"\nAdamW : loss {loss_adamw:.4f} in {t_adamw:.0f}s "
+          f"(3 fp32 state copies)")
+    print(f"ABO-ZO: loss {loss_zo:.4f} in {t_zo:.0f}s "
+          f"(ZERO optimizer state — the paper's claim)")
+
+
+if __name__ == "__main__":
+    main()

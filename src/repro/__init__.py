@@ -1,0 +1,2 @@
+"""repro — "Super-speeds with Zero-RAM" (Amo-Boateng, 2017) as a JAX framework."""
+__version__ = "1.0.0"

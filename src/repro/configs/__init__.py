@@ -1,0 +1,5 @@
+from repro.configs.base import ArchConfig, SHAPES, ShapeCell, supported_shapes
+from repro.configs.registry import ARCHS, get, input_specs, reduced
+
+__all__ = ["ArchConfig", "SHAPES", "ShapeCell", "supported_shapes",
+           "ARCHS", "get", "input_specs", "reduced"]

@@ -1,0 +1,107 @@
+"""Aggregated registry of the 10 assigned architectures + helpers.
+
+Canonical definitions live in one module per arch (src/repro/configs/<id>.py
+— the deliverable layout); this module aggregates them and provides the
+reduced() smoke-test transform and the dry-run input_specs() builders.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SHAPES, ShapeCell, supported_shapes
+from repro.configs.recurrentgemma_2b import CONFIG as RECURRENTGEMMA_2B
+from repro.configs.qwen2_vl_7b import CONFIG as QWEN2_VL_7B
+from repro.configs.rwkv6_3b import CONFIG as RWKV6_3B
+from repro.configs.moonshot_v1_16b_a3b import CONFIG as MOONSHOT_V1_16B_A3B
+from repro.configs.olmoe_1b_7b import CONFIG as OLMOE_1B_7B
+from repro.configs.granite_20b import CONFIG as GRANITE_20B
+from repro.configs.h2o_danube_3_4b import CONFIG as H2O_DANUBE3_4B
+from repro.configs.mistral_nemo_12b import CONFIG as MISTRAL_NEMO_12B
+from repro.configs.internlm2_20b import CONFIG as INTERNLM2_20B
+from repro.configs.whisper_small import CONFIG as WHISPER_SMALL
+
+ARCHS: dict[str, ArchConfig] = {
+    c.name: c for c in (
+        RECURRENTGEMMA_2B, QWEN2_VL_7B, RWKV6_3B, MOONSHOT_V1_16B_A3B,
+        OLMOE_1B_7B, GRANITE_20B, H2O_DANUBE3_4B, MISTRAL_NEMO_12B,
+        INTERNLM2_20B, WHISPER_SMALL,
+    )
+}
+
+
+# --------------------------------------------------------------------------
+# reduced configs for CPU smoke tests
+# --------------------------------------------------------------------------
+def reduced(cfg: ArchConfig) -> ArchConfig:
+    """Same family/topology, tiny dims: one pattern unit (+head/tail edge
+    cases preserved), small widths, tiny vocab."""
+    unit = len(cfg.pattern)
+    n_layers = cfg.first_dense + 2 * unit + (1 if unit > 1 else 0)
+    d_model = 64
+    n_heads = max(2, min(4, cfg.n_heads))
+    head_dim = 16
+    n_kv = 1 if cfg.n_kv_heads == 1 else max(1, n_heads // 2)
+    return dataclasses.replace(
+        cfg,
+        n_layers=n_layers, d_model=d_model, n_heads=n_heads,
+        n_kv_heads=n_kv, head_dim=head_dim,
+        d_ff=128 if cfg.n_experts == 0 else 32,
+        vocab_size=512,
+        n_experts=min(cfg.n_experts, 8),
+        top_k=min(cfg.top_k, 2),
+        n_shared_experts=min(cfg.n_shared_experts, 1),
+        moe_capacity_factor=None,   # lossless: decode==forward exactly
+
+        window=min(cfg.window, 32) if cfg.window else None,
+        lru_width=d_model if cfg.lru_width else 0,
+        rwkv_heads=4 if cfg.rwkv_heads else 0,
+        rwkv_head_dim=16 if cfg.rwkv_heads else 64,
+        mrope_sections=(4, 2, 2) if cfg.mrope else cfg.mrope_sections,
+        encoder_layers=2 if cfg.encoder_layers else 0,
+        encoder_len=24 if cfg.encoder_layers else 1500,
+        max_position=2048,
+        dtype="float32",
+    )
+
+
+# --------------------------------------------------------------------------
+# dry-run input specs
+# --------------------------------------------------------------------------
+def input_specs(cfg: ArchConfig, shape: ShapeCell | str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of the cell.
+
+    train:   tokens (B, T+1) [+ positions / frames for vlm / audio]
+    prefill: tokens (B, T)
+    decode:  tokens (B, 1) + cache handled by the step builder (dryrun
+             builds the cache specs via eval_shape on init_cache).
+    """
+    cell = SHAPES[shape] if isinstance(shape, str) else shape
+    b, t = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+    if cell.kind == "train":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, t + 1), i32)}
+        if cfg.mrope:
+            specs["positions"] = jax.ShapeDtypeStruct((b, 3, t), i32)
+        if cfg.encoder_layers > 0:
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_len, cfg.d_model), cfg.param_dtype)
+        return specs
+    if cell.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, t), i32)}
+        if cfg.mrope:
+            specs["positions"] = jax.ShapeDtypeStruct((b, 3, t), i32)
+        if cfg.encoder_layers > 0:
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_len, cfg.d_model), cfg.param_dtype)
+        return specs
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+
+
+def get(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]

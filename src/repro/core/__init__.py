@@ -1,0 +1,3 @@
+from repro.core.abo import ABOConfig, ABOResult, abo_minimize, abo_minimize_blackbox
+
+__all__ = ["ABOConfig", "ABOResult", "abo_minimize", "abo_minimize_blackbox"]

@@ -1,0 +1,292 @@
+"""Amo-Boateng Optimization (ABO) — the paper's core algorithm, in JAX.
+
+Faithful structure (DESIGN.md §1):
+  * every pass samples each parameter space **linearly** (a deterministic
+    candidate grid per coordinate — the paper's Fig. 1 arrows),
+  * probes are O(1) via the separable-aggregate algebra (the only reading of
+    Table 3 consistent with 3.9M FE/s single-threaded at N=1e9),
+  * memory = the solution vector + O(block·m) scratch + n_aggs scalars —
+    the paper's "zero additional RAM",
+  * compute = O(m·N) with m = passes × samples_per_pass (paper Eq. 5;
+    Table 3 shows m ≈ 250).
+
+Beyond-paper adaptations (DESIGN.md §3): coordinates are swept in blocks of
+``block_size`` with Jacobi commits (all coordinates of a block move at once
+against frozen aggregates), guarded so the committed objective never
+regresses. This is what makes the sweep a dense (B, m) tile — VPU/MXU-shaped
+on TPU (see kernels/coord_sweep) — instead of a scalar loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.objectives.base import SeparableObjective
+
+
+@dataclasses.dataclass(frozen=True)
+class ABOConfig:
+    """Sampling-rate schedule. Defaults reproduce the paper's m ≈ 250·N FE."""
+
+    samples_per_pass: int = 50   # candidates per coordinate per pass (incl. incumbent)
+    n_passes: int = 5            # total probes/coordinate m = 5 × 50 = 250
+    block_size: int = 4096      # coordinates swept per Jacobi tile
+    shrink: float | None = None  # window factor per pass; None -> 2·safety/(m-2)
+    safety: float = 2.0          # window covers ± safety × previous grid spacing
+    guard_commits: bool = True   # reject a block commit that worsens f (monotone)
+    use_kernel: bool = False     # route the probe tile through the Pallas kernel
+    # "linear": anneal the cross-coordinate coupling weight λ from 0 to 1
+    # over passes (continuation; escapes paired local minima — DESIGN.md §2).
+    # "none": the paper-pure exact objective in every pass.
+    coupling_schedule: str = "linear"
+
+    def resolved_shrink(self) -> float:
+        if self.shrink is not None:
+            return self.shrink
+        return 2.0 * self.safety / max(self.samples_per_pass - 2, 1)
+
+
+@dataclasses.dataclass
+class ABOResult:
+    x: jnp.ndarray           # (n,) solution (unpadded)
+    fun: float               # objective at x
+    fe: int                  # probe-FE count (paper's FE semantics)
+    history: jnp.ndarray     # (n_passes,) objective after each pass
+    n: int
+    config: ABOConfig
+
+
+def _candidate_grid(xb, lo, hi, half_width, m, is_first_pass):
+    """(B, m) linear sampling grid; incumbent is always candidate column m-1.
+
+    Pass 0 ignores the incumbent position and sweeps the full feasible
+    interval (the paper's "sampling each parameter space linearly"); later
+    passes sweep a shrinking window centred on the incumbent.
+
+    ``lo``/``hi`` may be scalars (uniform bounds — the paper's s=1 best
+    case) or (B,) arrays (per-coordinate parameter spaces — the s=3 worst
+    case of Eq. 6, costing exactly the extra O(N) bound vectors the paper
+    predicts). ``half_width`` is a fraction of the full range in [0, 0.5].
+    """
+    dt = xb.dtype
+    lo = jnp.broadcast_to(jnp.asarray(lo, dt), xb.shape)[:, None]   # (B, 1)
+    hi = jnp.broadcast_to(jnp.asarray(hi, dt), xb.shape)[:, None]
+    span = hi - lo
+    center = jnp.where(is_first_pass, 0.5 * (lo + hi), xb[:, None])
+    w = jnp.where(is_first_pass, 0.5 * span,
+                  jnp.asarray(half_width, dt) * span)
+    offs = jnp.linspace(-1.0, 1.0, m - 1, dtype=dt)          # (m-1,)
+    grid = jnp.clip(center + w * offs[None, :], lo, hi)
+    return jnp.concatenate([grid, xb[:, None]], axis=1)       # (B, m)
+
+
+def _sweep_pass(obj, x, aggs, n_valid, half_width, pass_idx, lam, cfg,
+                probe_tile, bounds=None):
+    """One full pass: scan Jacobi block sweeps over the (padded) solution."""
+    n_pad = x.shape[0]
+    bsz, m = cfg.block_size, cfg.samples_per_pass
+    n_blocks = n_pad // bsz
+    agg_dt = aggs.dtype
+
+    def block_body(carry, blk):
+        x, aggs = carry
+        start = blk * bsz
+        xb = jax.lax.dynamic_slice(x, (start,), (bsz,))
+        idx = start + jnp.arange(bsz)
+        valid = idx < n_valid
+
+        if bounds is not None:       # per-coordinate spaces (paper's s=3)
+            lo = jax.lax.dynamic_slice(bounds[0], (start,), (bsz,))
+            hi = jax.lax.dynamic_slice(bounds[1], (start,), (bsz,))
+        else:
+            lo, hi = obj.lower, obj.upper
+        cands = _candidate_grid(xb, lo, hi, half_width, m, pass_idx == 0)
+        # Padding coordinates are frozen: their only candidate is themselves.
+        cands = jnp.where(valid[:, None], cands, xb[:, None])
+
+        f_cand, delta = probe_tile(aggs, idx, xb, cands, lam)  # (B, m), (B, m, A)
+        sel = jnp.argmin(f_cand, axis=1)                       # (B,)
+        x_sel = jnp.take_along_axis(cands, sel[:, None], axis=1)[:, 0]
+        d_sel = jnp.take_along_axis(
+            delta, sel[:, None, None], axis=1)[:, 0, :]        # (B, A)
+        aggs_new = aggs + d_sel.sum(axis=0).astype(agg_dt)
+
+        if cfg.guard_commits:
+            accept = obj.combine_at(aggs_new, lam) <= obj.combine_at(aggs, lam)
+            x_sel = jnp.where(accept, x_sel, xb)
+            aggs = jnp.where(accept, aggs_new, aggs)
+        else:
+            aggs = aggs_new
+        x = jax.lax.dynamic_update_slice(x, x_sel, (start,))
+        return (x, aggs), None
+
+    (x, aggs), _ = jax.lax.scan(block_body, (x, aggs), jnp.arange(n_blocks))
+    return x, aggs
+
+
+def _default_probe_tile(obj):
+    def probe_tile(aggs, idx, xb, cands, lam):
+        delta = obj.term_delta(idx, xb, cands)        # (B, m, A)
+        return obj.combine_at(aggs + delta, lam), delta
+    return probe_tile
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("obj", "n", "cfg", "probe_tile"),
+    donate_argnums=(0,),
+)
+def _abo_jit(x, obj, n, cfg, probe_tile, bounds=None):
+    aggs = obj.aggregates(x, n, chunk_size=1 << 20)
+    shrink = cfg.resolved_shrink()
+
+    def pass_body(p, carry):
+        x, aggs, hist = carry
+        # fractional window after pass p-1 shrinks geometrically from the
+        # full range (0.5 = whole interval)
+        half_width = 0.5 * shrink ** p
+        if cfg.coupling_schedule == "linear" and cfg.n_passes > 1:
+            lam = (p / (cfg.n_passes - 1)).astype(aggs.dtype)
+        else:
+            lam = jnp.ones((), aggs.dtype)
+        x, aggs = _sweep_pass(obj, x, aggs, n, half_width, p, lam, cfg,
+                              probe_tile, bounds)
+        # re-sync aggregates exactly once per pass: kills accumulated-delta
+        # drift (one O(N) streaming scan per pass — amortized over m·N probes)
+        aggs = obj.aggregates(x, n, chunk_size=1 << 20)
+        hist = hist.at[p].set(obj.combine(aggs))
+        return (x, aggs, hist)
+
+    hist = jnp.zeros((cfg.n_passes,), aggs.dtype)
+    x, aggs, hist = jax.lax.fori_loop(0, cfg.n_passes, pass_body, (x, aggs, hist))
+    # One exact O(N) re-evaluation so the reported optimum carries no
+    # accumulated-delta rounding (drift itself is asserted small in tests).
+    f_exact = obj.combine(obj.aggregates(x, n, chunk_size=1 << 20))
+    return x, f_exact, hist
+
+
+def abo_minimize(
+    obj: SeparableObjective,
+    n: int,
+    *,
+    config: ABOConfig | None = None,
+    x0: jnp.ndarray | None = None,
+    dtype: Any = jnp.float32,
+    seed: int | None = None,
+    bounds: tuple[jnp.ndarray, jnp.ndarray] | None = None,
+) -> ABOResult:
+    """Minimize a separable objective with ABO.
+
+    Total live memory is one (padded) solution vector of ``n`` ``dtype``
+    elements plus an O(block_size × samples_per_pass) probe tile.
+
+    Init is the deterministic domain midpoint (the paper's determinism: pass
+    0 sweeps the full interval linearly regardless, so x0 only seeds the
+    incumbent column). Pass ``seed`` for a random feasible start — the
+    multimodality-robustness benchmarks use both (EXPERIMENTS.md).
+    """
+    cfg = config or ABOConfig()
+    # Tiny problems get exact Gauss-Seidel coordinate descent (block=1):
+    # sequential commits resolve the product-term coupling that Jacobi tiles
+    # can miscoordinate on when a block spans most of the problem. At scale,
+    # Jacobi tiles are the paper's parallel variant (Eq. 7) and the coupling
+    # per block is O(block/N) — negligible.
+    bsz = 1 if n <= 128 else cfg.block_size
+    if bsz != cfg.block_size:
+        cfg = dataclasses.replace(cfg, block_size=bsz)
+    n_pad = -(-n // bsz) * bsz
+    bnds = None
+    if bounds is not None:
+        # the paper's s=3 case: two extra O(N) vectors, nothing else
+        lo = jnp.full((n_pad,), obj.lower, dtype).at[:n].set(
+            jnp.asarray(bounds[0], dtype))
+        hi = jnp.full((n_pad,), obj.upper, dtype).at[:n].set(
+            jnp.asarray(bounds[1], dtype))
+        bnds = (lo, hi)
+    if x0 is not None:
+        x = jnp.zeros((n_pad,), dtype).at[:n].set(jnp.asarray(x0, dtype))
+    elif seed is not None:
+        key = jax.random.PRNGKey(seed)
+        x = jax.random.uniform(key, (n_pad,), dtype=dtype,
+                               minval=obj.lower, maxval=obj.upper)
+        if bnds is not None:
+            x = bnds[0] + (bnds[1] - bnds[0]) * (x - obj.lower) \
+                / (obj.upper - obj.lower)
+    else:
+        # Deterministic off-centre start (golden-section point) — midpoint
+        # would coincide with the optimum of symmetric benchmark domains.
+        if bnds is not None:
+            x = bnds[0] + 0.6180339887 * (bnds[1] - bnds[0])
+        else:
+            x = jnp.full((n_pad,), obj.lower
+                         + 0.6180339887 * (obj.upper - obj.lower), dtype)
+
+    if cfg.use_kernel:
+        # the Pallas path implements the whole pass in-kernel (Gauss-Seidel
+        # across blocks with SMEM-carried aggregates) — Griewank only
+        if obj.name != "griewank" or bounds is not None:
+            raise NotImplementedError(
+                "use_kernel supports the uniform-bounds Griewank benchmark; "
+                "use the jnp path for other objectives")
+        from repro.kernels.coord_sweep.ops import abo_minimize_kernel
+        return abo_minimize_kernel(n, config=cfg, x0=x0, dtype=dtype)
+
+    probe_tile = _default_probe_tile(obj)
+    x, fun, hist = _abo_jit(x, obj, n, cfg, probe_tile, bnds)
+    fe = cfg.n_passes * cfg.samples_per_pass * n
+    return ABOResult(x=x[:n], fun=float(fun), fe=fe, history=hist, n=n, config=cfg)
+
+
+# --------------------------------------------------------------------------
+# Black-box (non-separable) fallback — the general-purpose mode the paper
+# advertises. Probes cost O(N) each; memory stays O(N) (lax.map, no (m, N)
+# candidate matrix).
+# --------------------------------------------------------------------------
+def abo_minimize_blackbox(
+    fun,
+    n: int,
+    lower: float,
+    upper: float,
+    *,
+    config: ABOConfig | None = None,
+    x0: jnp.ndarray | None = None,
+    dtype: Any = jnp.float32,
+) -> ABOResult:
+    cfg = config or ABOConfig(block_size=1)
+    m = cfg.samples_per_pass
+    x = (jnp.full((n,), 0.5 * (lower + upper), dtype)
+         if x0 is None else jnp.asarray(x0, dtype))
+
+    @jax.jit
+    def run(x):
+        shrink = cfg.resolved_shrink()
+
+        def coord_body(i, carry):
+            x, f_cur, half_width, p = carry
+            xi = x[i]
+            cands = _candidate_grid(xi[None], lower, upper, half_width, m,
+                                    p == 0)[0]                    # (m,)
+            f_c = jax.lax.map(lambda c: fun(x.at[i].set(c)), cands)
+            j = jnp.argmin(f_c)
+            better = f_c[j] <= f_cur
+            x = x.at[i].set(jnp.where(better, cands[j], xi))
+            return x, jnp.minimum(f_c[j], f_cur), half_width, p
+
+        def pass_body(p, carry):
+            x, f_cur, hist = carry
+            hw = 0.5 * shrink ** p           # fractional window
+            x, f_cur, _, _ = jax.lax.fori_loop(
+                0, n, coord_body, (x, f_cur, hw, p))
+            return x, f_cur, hist.at[p].set(f_cur)
+
+        f0 = fun(x)
+        hist = jnp.zeros((cfg.n_passes,), f0.dtype)
+        return jax.lax.fori_loop(0, cfg.n_passes, pass_body, (x, f0, hist))
+
+    x, f, hist = run(x)
+    return ABOResult(x=x, fun=float(f), fe=cfg.n_passes * m * n,
+                     history=hist, n=n, config=cfg)

@@ -1,0 +1,42 @@
+"""Activation-sharding hints: a tiny context the model consults.
+
+The model code stays distribution-agnostic; the train/serve step factories
+install a rule table (name -> PartitionSpec) before tracing, and
+``hint(x, name)`` becomes a with_sharding_constraint at the few places that
+matter (embeddings out, per-unit hidden, logits). Outside a mesh context it
+is a no-op, so single-device smoke tests are untouched.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+def _rules():
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def sharding_rules(**rules: P):
+    prev = _rules()
+    _state.rules = dict(rules)
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def hint(x, name: str):
+    rules = _rules()
+    if rules is None or name not in rules:
+        return x
+    spec = rules[name]
+    # pad/trim the spec to the array rank (named dims may assume (b, t, d))
+    if len(spec) > x.ndim:
+        spec = P(*tuple(spec)[:x.ndim])
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,142 @@
+"""Parameter/activation sharding rules (DP over pod+data, TP/EP over model).
+
+Rules are name+shape driven so one engine covers every assigned arch:
+
+  * vocab-dim tensors (embed/unembed/pos) ........ P("model", None)
+  * attention/MLP in-projections (d, D_out) ...... P(None, "model")
+  * out-projections (D_in, d) .................... P("model", None)
+  * MoE expert banks (E, ·, ·) ................... P("model", None, None)  [EP]
+  * small vectors / LoRA / router ................ replicated
+  * anything not divisible by the axis size ...... replicated (guarded)
+
+Stacked scan groups carry a leading n_groups dim → specs get a leading None.
+DP axes shard the batch dim of inputs; ZeRO-1 additionally shards optimizer
+state over DP (see repro.optim.adamw).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# trailing param names -> role
+_COL = {"wq", "wk", "wv", "w_in", "w_gate", "w_x", "w_y",
+        "w_input_gate", "w_rec_gate", "w_r", "w_k", "w_g"}
+_ROW = {"wo", "w_out", "w_o", "w_v"}          # (D_in, d) out-projections
+_VOCAB = {"embed", "unembed"}
+# position tables are indexed by a *dynamic scalar* at decode time — sharding
+# them on dim 0 makes that a full-table all-gather (768 MiB/token on
+# granite, found by the HLO audit); shard the embedding dim instead.
+_POS = {"pos_embed", "enc_pos_embed"}
+_EXPERT = {"w_in", "w_gate", "w_out"}          # under a "moe" parent
+_REPLICATE = {"router", "shift_w1", "shift_w2", "mu", "mu_x", "mu_k", "mu_r",
+              "decay_w1", "decay_w2", "decay_base", "bonus_u", "gn_scale",
+              "gn_bias", "scale", "bias", "log_lambda", "conv_w", "conv_b"}
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for e in path:
+        if isinstance(e, jax.tree_util.DictKey):
+            out.append(str(e.key))
+        elif isinstance(e, jax.tree_util.SequenceKey):
+            out.append(f"[{e.idx}]")
+        else:
+            out.append(str(e))
+    return out
+
+
+def _divisible(dim: int, mesh: Mesh, axis: str) -> bool:
+    return dim % mesh.shape[axis] == 0
+
+
+def param_specs(params: Any, mesh: Mesh, *, model_axis: str = "model"):
+    """Pytree of PartitionSpec matching ``params``."""
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        shape = leaf.shape
+        # leading stack dim for scan groups
+        stacked = "groups" in names
+        lead = (None,) if stacked else ()
+        lshape = shape[1:] if stacked else shape
+
+        def guard(p: P) -> P:
+            # replicate any axis the mesh can't divide
+            fixed = []
+            for dim, ax in zip(lshape, tuple(p) + (None,) * (len(lshape) - len(p))):
+                fixed.append(ax if (ax and _divisible(dim, mesh, ax)) else None)
+            return P(*lead, *fixed)
+
+        in_moe = "moe" in names
+        if name in _VOCAB:
+            return guard(P(model_axis, None))
+        if name in _POS:
+            return guard(P(None, model_axis))
+        if in_moe and name in _EXPERT and len(lshape) == 3:
+            return guard(P(model_axis, None, None))
+        if name in _REPLICATE or len(lshape) <= 1:
+            return P(*lead, *([None] * len(lshape)))
+        if name in _COL:
+            return guard(P(None, model_axis))
+        if name in _ROW:
+            return guard(P(model_axis, None))
+        return P(*lead, *([None] * len(lshape)))
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def cache_specs(cache: Any, mesh: Mesh, *, dp_axes: tuple, model_axis="model"):
+    """KV caches: batch over DP, kv-heads over model when divisible."""
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        stacked = "groups" in names
+        lead = (None,) if stacked else ()
+        lshape = leaf.shape[1:] if stacked else leaf.shape
+        batch = lshape[0]
+        dp = dp_axes if batch % _axes_size(mesh, dp_axes) == 0 else None
+        is_kv = names[-1] in ("k", "v", "cross_k", "cross_v",
+                              "k_scale", "v_scale")
+        if len(lshape) == 4:          # (b, h, s, d) kv / (b, h, dk, dv) wkv
+            heads, seq = lshape[1], lshape[2]
+            msize = mesh.shape[model_axis]
+            if heads % msize == 0:
+                return P(*lead, dp, model_axis, None, None)
+            if is_kv and seq % msize == 0 and seq >= msize * 128:
+                # sequence-parallel KV: when kv-heads can't split over TP
+                # (GQA with few kv heads), shard the cache's time axis —
+                # decode attention becomes a partial-softmax + tiny psum,
+                # which pjit derives automatically (DESIGN.md §5).
+                return P(*lead, dp, None, model_axis, None)
+            return P(*lead, dp, None, None, None)
+        if len(lshape) == 3:          # (b, w, d) conv state
+            return P(*lead, dp, None, None)
+        if len(lshape) == 2:          # (b, d) shift state
+            return P(*lead, dp, None)
+        return P(*lead, *([None] * len(lshape)))
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def named(tree, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def dp_axes_of(mesh: Mesh) -> tuple:
+    """All non-model axes, used as flattened data-parallel axes."""
+    return tuple(a for a in mesh.axis_names if a != "model")

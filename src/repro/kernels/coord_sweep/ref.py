@@ -1,0 +1,75 @@
+"""Pure-jnp oracle for the coord_sweep kernel — identical semantics.
+
+Gauss-Seidel across blocks (lax.scan), Jacobi within a block, guarded
+commits, incumbent candidate column, frozen padding — bit-for-bit the same
+algorithm as kernel.py, expressed with plain jnp so interpret-mode kernel
+runs can be asserted allclose against it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.coord_sweep.kernel import _combine, _griewank_planes
+
+
+def sweep_pass_ref(
+    x2d: jnp.ndarray,
+    aggs: jnp.ndarray,          # (1, AGG_LANES)
+    *,
+    m: int,
+    n_valid: int,
+    lower: float,
+    upper: float,
+    half_width: float,
+    lam: float,
+    is_first: bool,
+):
+    n_blocks, block = x2d.shape
+    dt = x2d.dtype
+    s0, l0, k0 = aggs[0, 0], aggs[0, 1], aggs[0, 2]
+
+    def body(carry, blk):
+        x2d, s0, l0, k0 = carry
+        xb = x2d[blk]
+        jlane = jnp.broadcast_to(jnp.arange(m)[None, :], (block, m))
+        bidx = blk * block + jnp.broadcast_to(jnp.arange(block)[:, None], (block, m))
+
+        if is_first:
+            center = jnp.full((block,), 0.5 * (lower + upper), dt)
+            hw = 0.5 * (upper - lower)
+        else:
+            center = xb
+            hw = half_width
+        offs = jlane.astype(dt) * (2.0 / (m - 2)) - 1.0
+        cands = jnp.clip(center[:, None] + hw * offs, lower, upper)
+        cands = jnp.where(jlane == m - 1, xb[:, None], cands)
+        valid = bidx < n_valid
+        cands = jnp.where(valid, cands, xb[:, None])
+
+        s_new, l_new, k_new = _griewank_planes(bidx, cands)
+        s_old, l_old, k_old = _griewank_planes(bidx[:, 0], xb)
+        ds = s_new - s_old[:, None]
+        dl = l_new - l_old[:, None]
+        dk = k_new - k_old[:, None]
+        f = _combine(s0 + ds, l0 + dl, k0 + dk, lam)
+
+        sel = jnp.argmin(f, axis=1)
+        onehot = (jlane == sel[:, None]).astype(dt)
+        x_sel = jnp.sum(cands * onehot, axis=1)
+        s1 = s0 + jnp.sum(ds * onehot)
+        l1 = l0 + jnp.sum(dl * onehot)
+        k1 = k0 + jnp.sum(dk * onehot)
+        accept = _combine(s1, l1, k1, lam) <= _combine(s0, l0, k0, lam)
+
+        x2d = x2d.at[blk].set(jnp.where(accept, x_sel, xb))
+        s0 = jnp.where(accept, s1, s0)
+        l0 = jnp.where(accept, l1, l0)
+        k0 = jnp.where(accept, k1, k0)
+        return (x2d, s0, l0, k0), None
+
+    (x2d, s0, l0, k0), _ = jax.lax.scan(
+        body, (x2d, s0, l0, k0), jnp.arange(n_blocks))
+    aggs_out = jnp.zeros_like(aggs).at[0, 0].set(s0).at[0, 1].set(l0) \
+        .at[0, 2].set(k0)
+    return x2d, aggs_out

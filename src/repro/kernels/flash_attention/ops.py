@@ -1,0 +1,70 @@
+"""Public attention op: GQA/SWA-aware wrapper around the flash kernel.
+
+``flash_attention(q, k, v)`` takes (batch, heads, seq, d) / kv heads may be
+fewer (GQA) — kv heads are repeated to q-head groups outside the kernel.
+Falls back to the jnp reference on CPU unless interpret mode is forced
+(tests sweep shapes in interpret mode; the TPU path uses the kernel).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ref import attention_ref, attention_ref_chunked
+
+
+def _pad_to(x, axis, mult):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "impl"))
+def flash_attention(
+    q: jnp.ndarray,              # (b, hq, sq, d)
+    k: jnp.ndarray,              # (b, hkv, sk, d)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    impl: str = "auto",          # "kernel" | "interpret" | "ref" | "auto"
+) -> jnp.ndarray:
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    if hkv != hq:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+
+    if impl == "auto":
+        impl = "kernel" if jax.devices()[0].platform == "tpu" else "ref"
+    if impl == "ref":
+        # NOTE: stays 4D — merging (batch, heads) would fuse a DP-sharded
+        # dim with a TP-sharded dim and force all-gathers under pjit (found
+        # by the dry-run collective audit). Long sequences take the chunked
+        # online-softmax path so lowered memory matches the TPU kernel.
+        if sk > 2048:
+            return attention_ref_chunked(q, k, v, seq_len=sk, causal=causal,
+                                         window=window)
+        return attention_ref(q, k, v, seq_len=sk, causal=causal,
+                             window=window)
+
+    qp = _pad_to(q.reshape(b * hq, sq, d), 1, block_q)
+    kp = _pad_to(k.reshape(b * hq, sk, d), 1, block_k)
+    vp = _pad_to(v.reshape(b * hq, sk, d), 1, block_k)
+    out = flash_attention_kernel(
+        qp, kp, vp, seq_len=sk, causal=causal, window=window,
+        block_q=block_q, block_k=block_k,
+        interpret=(impl == "interpret"))
+    return out[:, :sq].reshape(b, hq, sq, d)

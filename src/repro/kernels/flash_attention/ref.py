@@ -1,0 +1,104 @@
+"""Pure-jnp oracles: dense attention + chunked (flash-semantics) attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _stable_softmax(s):
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    return p / jnp.where(denom == 0.0, 1.0, denom)
+
+
+def attention_ref(
+    q: jnp.ndarray,              # (..., sq, d) — any leading batch/head dims
+    k: jnp.ndarray,              # (..., sk, d)
+    v: jnp.ndarray,
+    *,
+    seq_len: int | None = None,
+    causal: bool = True,
+    window: int | None = None,
+    sm_scale: float | None = None,
+) -> jnp.ndarray:
+    d = q.shape[-1]
+    sq, sk = q.shape[-2], k.shape[-2]
+    if sm_scale is None:
+        sm_scale = d ** -0.5
+    s = jnp.einsum("...qd,...kd->...qk", q, k).astype(jnp.float32) * sm_scale
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if seq_len is not None:
+        mask &= k_pos < seq_len
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = _stable_softmax(s)
+    return jnp.einsum("...qk,...kd->...qd", p.astype(v.dtype), v)
+
+
+def attention_ref_chunked(
+    q: jnp.ndarray,              # (..., sq, d)
+    k: jnp.ndarray,              # (..., sk, d)
+    v: jnp.ndarray,
+    *,
+    seq_len: int | None = None,
+    causal: bool = True,
+    window: int | None = None,
+    sm_scale: float | None = None,
+    block_k: int = 1024,
+) -> jnp.ndarray:
+    """Online-softmax attention scanning over KV blocks — flash semantics in
+    pure jnp. Never materializes the (sq, sk) score matrix, so lowered memory
+    matches what the Pallas kernel does on TPU (the dry-run lowers THIS on
+    long-context cells; it is also the exact oracle for the kernel)."""
+    d = q.shape[-1]
+    sq, sk = q.shape[-2], k.shape[-2]
+    if sm_scale is None:
+        sm_scale = d ** -0.5
+    n_blocks = -(-sk // block_k)
+    pad = n_blocks * block_k - sk
+    if pad:
+        cfg_pad = [(0, 0)] * (k.ndim - 2) + [(0, pad), (0, 0)]
+        k = jnp.pad(k, cfg_pad)
+        v = jnp.pad(v, cfg_pad)
+    lead = q.shape[:-2]
+    kb = jnp.moveaxis(k.reshape(*lead, n_blocks, block_k, d),
+                      -3, 0)        # (nb, ..., bk, d)
+    vb = jnp.moveaxis(v.reshape(*lead, n_blocks, block_k, d), -3, 0)
+    q_pos = jnp.arange(sq)
+    qf = q.astype(jnp.float32)
+
+    def body(carry, inp):
+        m_prev, l_prev, acc = carry
+        blk, k_c, v_c = inp
+        s = jnp.einsum("...qd,...kd->...qk", qf,
+                       k_c.astype(jnp.float32)) * sm_scale
+        k_pos = blk * block_k + jnp.arange(block_k)
+        mask = (k_pos < (sk if seq_len is None else seq_len))[None, :]
+        if causal:
+            mask = mask & (q_pos[:, None] >= k_pos[None, :])
+        if window is not None:
+            mask = mask & ((q_pos[:, None] - k_pos[None, :]) < window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[..., None])
+        l_cur = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "...qk,...kd->...qd", p, v_c.astype(jnp.float32))
+        return (m_cur, l_cur, acc), None
+
+    init = (jnp.full(lead + (sq,), NEG_INF, jnp.float32),
+            jnp.zeros(lead + (sq,), jnp.float32),
+            jnp.zeros(lead + (sq, d), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(body, init,
+                                  (jnp.arange(n_blocks), kb, vb))
+    l = jnp.where(l == 0.0, 1.0, l)
+    return (acc / l[..., None]).astype(q.dtype)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the griewank evaluation kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.objectives.griewank import GRIEWANK
+
+
+def griewank_aggregates_ref(x2d: jnp.ndarray, *, n_valid: int) -> jnp.ndarray:
+    """Same contract as griewank_aggregates_kernel: (1, 128) [S, L, K]."""
+    flat = x2d.reshape(-1)
+    aggs = GRIEWANK.aggregates(flat, n_valid, agg_dtype=jnp.float32)
+    out = jnp.zeros((1, 128), jnp.float32)
+    return out.at[0, :3].set(aggs)

@@ -1,0 +1,229 @@
+"""Attention block: MHA/GQA/MQA, RoPE/M-RoPE, SWA, KV cache, cross-attn.
+
+Train/prefill uses the flash-attention op (Pallas kernel on TPU, jnp ref on
+CPU); decode attends a single query against the cache with a plain einsum
+(latency-bound, no kernel win). SWA decode keeps a ring-buffer cache of
+``window`` slots — the bounded-memory property that lets the SWA/hybrid
+archs run the 500k-token cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.models.layers import apply_mrope, apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg, dtype):
+    ks = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.head_dim
+    return {
+        "wq": dense_init(ks[0], d, cfg.n_heads * hd, dtype),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, d, dtype),
+    }
+
+
+def _split_heads(x, n_heads, head_dim):
+    b, t, _ = x.shape
+    return x.reshape(b, t, n_heads, head_dim).transpose(0, 2, 1, 3)
+
+
+def _rope(cfg, q, k, positions):
+    if positions is None:
+        return q, k
+    if cfg.mrope and positions.ndim == 3:
+        return (apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections),
+                apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections))
+    if positions.ndim == 3:           # mrope-shaped ids for a non-mrope arch
+        positions = positions[:, 0]
+    return (apply_rope(q, positions, cfg.rope_theta),
+            apply_rope(k, positions, cfg.rope_theta))
+
+
+def attn_apply(params, cfg, x, *, positions, window=None, causal=True,
+               kv_override=None):
+    """Full-sequence attention (training / prefill / encoder).
+
+    kv_override: (k_states, v_states) for cross-attention — already projected
+    encoder K/V, RoPE-free (whisper style).
+    """
+    b, t, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = _split_heads(x @ params["wq"], hq, hd)
+    if kv_override is None:
+        k = _split_heads(x @ params["wk"], hkv, hd)
+        v = _split_heads(x @ params["wv"], hkv, hd)
+        if cfg.use_rope:
+            q, k = _rope(cfg, q, k, positions)
+    else:
+        k, v = kv_override
+    out = flash_attention(q, k, v, causal=causal, window=window)
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, hq * hd)
+    return out @ params["wo"]
+
+
+def cross_kv(params, cfg, enc_out):
+    """Project encoder output once; reused for every decode step."""
+    k = _split_heads(enc_out @ params["wk"], cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(enc_out @ params["wv"], cfg.n_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def attn_prefill(params, cfg, x, *, positions, window=None, max_len=None):
+    """Full-sequence attention that ALSO returns a filled ring cache.
+
+    The ring holds the last min(T, ring) keys/values at slots pos % ring —
+    exactly the state decode_step would have produced token by token, so
+    decode continues seamlessly from pos = T.
+    """
+    b, t, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = _split_heads(x @ params["wq"], hq, hd)
+    k = _split_heads(x @ params["wk"], hkv, hd)
+    v = _split_heads(x @ params["wv"], hkv, hd)
+    if cfg.use_rope:
+        q, k = _rope(cfg, q, k, positions)
+    out = flash_attention(q, k, v, causal=True, window=window)
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, hq * hd)
+
+    ring = max_len if max_len else t
+    if window:
+        ring = min(ring, window)
+    length = min(t, ring)
+    pos = jnp.arange(t - length, t)
+    slots = jnp.mod(pos, ring)
+    shape = (b, hkv, ring, hd)
+    cache = {
+        "k": jnp.zeros(shape, k.dtype).at[:, :, slots].set(k[:, :, -length:]),
+        "v": jnp.zeros(shape, v.dtype).at[:, :, slots].set(v[:, :, -length:]),
+    }
+    return out @ params["wo"], cache
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class CacheSpec:
+    batch: int
+    max_len: int          # ring size: min(window, seq) for SWA
+    n_kv_heads: int
+    head_dim: int
+    dtype: object
+    quant: str | None = None    # "int8": per-slot absmax KV quantization
+
+
+def cache_init(spec: CacheSpec):
+    shape = (spec.batch, spec.n_kv_heads, spec.max_len, spec.head_dim)
+    if spec.quant == "int8":
+        # §Perf iteration 5: decode is memory-bound on the KV read, so
+        # halving cache bytes halves the dominant roofline term. Scales are
+        # per (batch, head, slot) absmax — 1/head_dim the payload size.
+        sshape = shape[:3] + (1,)
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(sshape, jnp.float32),
+                "v_scale": jnp.zeros(sshape, jnp.float32)}
+    return {"k": jnp.zeros(shape, spec.dtype),
+            "v": jnp.zeros(shape, spec.dtype)}
+
+
+def _quantize_slot(x):
+    """(b, h, 1, d) -> int8 payload + fp32 absmax scale."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) \
+        / 127.0
+    safe = jnp.where(scale == 0.0, 1.0, scale)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / safe), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def attn_decode_step(params, cfg, x, cache, pos, *, window=None,
+                     kv_override=None):
+    """One-token decode. x: (b, 1, d); pos: () current position scalar.
+
+    Returns (out, cache). The cache write goes to ``pos % max_len`` — a ring
+    buffer that is exact for SWA (only the last ``window`` keys can attend)
+    and degenerates to a plain cache when max_len >= seq.
+    """
+    b, _, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = _split_heads(x @ params["wq"], hq, hd)            # (b, hq, 1, hd)
+
+    if kv_override is None:
+        k_new = _split_heads(x @ params["wk"], hkv, hd)   # (b, hkv, 1, hd)
+        v_new = _split_heads(x @ params["wv"], hkv, hd)
+        if cfg.use_rope:
+            pos_ids = jnp.full((b, 1), pos, jnp.int32)
+            if cfg.mrope:
+                pos_ids = jnp.broadcast_to(pos_ids[:, None], (b, 3, 1))
+            q, k_new = _rope(cfg, q, k_new, pos_ids)
+        max_len = cache["k"].shape[2]
+        slot = jnp.mod(pos, max_len)
+        # mask-based ring write: keeps the cache's sharding stable under
+        # SPMD (a dynamic-update-slice on a sequence-sharded cache forces
+        # "involuntary full rematerialization" — §Perf hillclimb 3)
+        slot_mask = (jnp.arange(max_len) == slot)[None, None, :, None]
+        if "k_scale" in cache:          # int8-quantized cache (§Perf 5)
+            kq, ks = _quantize_slot(k_new)
+            vq, vs = _quantize_slot(v_new)
+            cache = {
+                "k": jnp.where(slot_mask, kq, cache["k"]),
+                "v": jnp.where(slot_mask, vq, cache["v"]),
+                "k_scale": jnp.where(slot_mask, ks, cache["k_scale"]),
+                "v_scale": jnp.where(slot_mask, vs, cache["v_scale"]),
+            }
+            # scales are folded around the int8 einsums (scores/probs side)
+            # — never materialize a dequantized cache (that costs a second
+            # full-cache tensor + resharding; measured in §Perf 5)
+            k, v = cache["k"], cache["v"]
+        else:
+            k = jnp.where(slot_mask, k_new, cache["k"])
+            v = jnp.where(slot_mask, v_new, cache["v"])
+            cache = {"k": k, "v": v}
+
+        # positions actually stored in each ring slot (for masking)
+        slots = jnp.arange(max_len)
+        slot_pos = jnp.where(
+            slots <= slot, slots + (pos - slot),
+            slots + (pos - slot) - max_len)               # may be negative
+        valid = (slot_pos >= 0) & (slot_pos <= pos)
+        if window is not None:
+            valid &= (pos - slot_pos) < window
+    else:
+        k, v = kv_override
+        valid = jnp.ones((k.shape[2],), bool)
+
+    # GQA-native grouped attention: NEVER jnp.repeat kv to query heads —
+    # the repeat rewrites the head axis and destroys the cache's
+    # sequence-parallel sharding (the dry-run showed two 1 GiB all-gathers
+    # per decoded token on internlm2 — §Perf hillclimb 3). Reshaping Q to
+    # (b, hkv, group, d) keeps the cache einsums local; only the softmax
+    # stats and the (b, hkv, g, d) output cross shards.
+    n_kv = k.shape[1]
+    g = hq // n_kv
+    qg = q.reshape(b, n_kv, g, hd)                        # query groups
+    quantized = kv_override is None and "k_scale" in cache
+    if quantized:
+        s = jnp.einsum("bhgd,bhkd->bhgk", qg.astype(jnp.float32),
+                       k.astype(jnp.float32))
+        s = s * cache["k_scale"][:, :, None, :, 0] * (hd ** -0.5)
+    else:
+        s = jnp.einsum("bhgd,bhkd->bhgk", qg, k).astype(jnp.float32) \
+            * (hd ** -0.5)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    if quantized:
+        pv = p * cache["v_scale"][:, :, None, :, 0]       # fold v scales
+        out = jnp.einsum("bhgk,bhkd->bhgd", pv.astype(jnp.float32),
+                         v.astype(jnp.float32))
+    else:
+        out = jnp.einsum("bhgk,bhkd->bhgd", p.astype(v.dtype), v)
+    out = out.reshape(b, 1, hq * hd).astype(x.dtype)
+    return out @ params["wo"], cache

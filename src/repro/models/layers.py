@@ -1,0 +1,134 @@
+"""Shared NN layers (hand-rolled pytrees — no flax dependency).
+
+Params are nested dicts of jnp arrays; every init function is
+`jax.eval_shape`-able so the dry-run can build abstract params without
+allocating (ShapeDtypeStruct flows through).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, d_in, d_out, dtype):
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    return jax.random.normal(key, (d_in, d_out), dtype) * jnp.asarray(scale, dtype)
+
+
+def embed_init(key, vocab, d, dtype):
+    return jax.random.normal(key, (vocab, d), dtype) * jnp.asarray(d ** -0.5, dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rmsnorm_init(d, dtype):
+    return {"scale": jnp.zeros((d,), dtype)}  # gemma-style (1 + scale)
+
+
+def rmsnorm(params, x, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    nx = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (nx * (1.0 + params["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm_init(d, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    nx = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (nx * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def make_norm(kind: str):
+    if kind == "rmsnorm":
+        return rmsnorm_init, rmsnorm
+    if kind == "layernorm":
+        return layernorm_init, layernorm
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def mlp_init(key, d, d_ff, dtype, gated: bool):
+    ks = jax.random.split(key, 3)
+    p = {"w_in": dense_init(ks[0], d, d_ff, dtype),
+         "w_out": dense_init(ks[1], d_ff, d, dtype)}
+    if gated:
+        p["w_gate"] = dense_init(ks[2], d, d_ff, dtype)
+    return p
+
+
+def mlp_apply(params, x, activation: str):
+    h = x @ params["w_in"]
+    if activation == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * h
+    elif activation == "geglu":
+        h = jax.nn.gelu(x @ params["w_gate"], approximate=True) * h
+    elif activation == "gelu":
+        h = jax.nn.gelu(h, approximate=True)
+    elif activation == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        raise ValueError(activation)
+    return h @ params["w_out"]
+
+
+def is_gated(activation: str) -> bool:
+    return activation in ("swiglu", "geglu")
+
+
+# ---------------------------------------------------------------------------
+# RoPE (plus Qwen2-VL's M-RoPE)
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float, dtype=jnp.float32):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x: (b, h, t, d_head); positions: (b, t) int."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)
+    ang = positions[:, None, :, None].astype(jnp.float32) * freqs  # (b,1,t,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+                sections=(16, 24, 24)):
+    """Qwen2-VL multimodal RoPE: positions (b, 3, t) = (temporal, h, w) ids.
+
+    The rotary half-dim is split into ``sections`` (t/h/w); each section
+    rotates with its own position stream. Text tokens carry identical
+    (t,h,w) ids, reducing to standard RoPE — vision patch ids come from the
+    (stubbed) frontend.
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(x.shape[-1], theta)                     # (half,)
+    ang_parts = []
+    start = 0
+    for s_i, sec in enumerate(sections):
+        pos = positions[:, s_i]                                # (b, t)
+        ang_parts.append(
+            pos[:, None, :, None].astype(jnp.float32) * freqs[start:start + sec])
+        start += sec
+    ang = jnp.concatenate(ang_parts, axis=-1)                  # (b,1,t,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,132 @@
+"""Mixture-of-Experts FFN: top-k router + capacity-based GShard dispatch.
+
+Dispatch is expressed as dense einsums over a fixed expert capacity
+(C = capacity_factor · T·k/E), which keeps the layer fully pjit-shardable:
+the expert dimension is sharded over the "model" mesh axis (expert
+parallelism) and the dispatch/combine einsums lower to all-to-alls under
+pjit. Overflowed tokens are dropped (standard GShard semantics) and the
+auxiliary load-balancing loss is returned for the trainer.
+
+Shared experts (Moonlight/DeepSeek style) are plain always-on MLPs added to
+the routed output.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, is_gated, mlp_apply, mlp_init
+
+
+def moe_init(key, cfg, dtype):
+    ks = jax.random.split(key, 4 + cfg.n_shared_experts)
+    d, dff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    gated = is_gated(cfg.activation)
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32),
+        "w_in": _expert_init(ks[1], e, d, dff, dtype),
+        "w_out": _expert_init(ks[2], e, dff, d, dtype),
+    }
+    if gated:
+        p["w_gate"] = _expert_init(ks[3], e, d, dff, dtype)
+    for i in range(cfg.n_shared_experts):
+        p[f"shared_{i}"] = mlp_init(ks[4 + i], d, dff, dtype, gated)
+    return p
+
+
+def _expert_init(key, e, d_in, d_out, dtype):
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    return jax.random.normal(key, (e, d_in, d_out), dtype) * jnp.asarray(scale, dtype)
+
+
+def moe_apply(params, cfg, x, *, capacity_factor: float | None = "cfg"):
+    """x: (b, t, d) -> (out, aux_loss).
+
+    capacity_factor None => lossless capacity C = n_tokens (no drops) —
+    used for decode (a dropped token would corrupt generation) and for
+    exact-equivalence tests. "cfg" defers to cfg.moe_capacity_factor.
+
+    When cfg.moe_dispatch_chunk is set, tokens are dispatched in chunks of
+    that size (lax.scan): the dense dispatch/combine einsums cost
+    T·E·C·d with C ∝ chunk instead of C ∝ T — linear instead of quadratic
+    in tokens. Found by the roofline pass (§Perf hillclimb 1): at 8k
+    tokens/device the full-T dispatch einsum was ~10× the expert matmul
+    flops on moonshot/olmoe.
+    """
+    b, t, d = x.shape
+    n_tok = b * t
+    chunk = cfg.moe_dispatch_chunk
+    if capacity_factor == "cfg":
+        capacity_factor = cfg.moe_capacity_factor
+    if chunk and n_tok > chunk and n_tok % chunk == 0 \
+            and capacity_factor is not None:
+        tokens = x.reshape(n_tok // chunk, chunk, d)
+
+        def body(aux, chunk_x):
+            out, a = _moe_tokens(params, cfg, chunk_x, capacity_factor)
+            return aux + a, out
+
+        aux, outs = jax.lax.scan(body, jnp.zeros((), jnp.float32), tokens)
+        return outs.reshape(b, t, d), aux / (n_tok // chunk)
+    out, aux = _moe_tokens(params, cfg, x.reshape(n_tok, d), capacity_factor)
+    return out.reshape(b, t, d), aux
+
+
+def _moe_tokens(params, cfg, tokens, capacity_factor):
+    """Dispatch one flat (T, d) token block through the experts."""
+    n_tok, d = tokens.shape
+    e, k = cfg.n_experts, cfg.top_k
+    if capacity_factor is None:
+        capacity = n_tok
+    else:
+        capacity = max(int(capacity_factor * n_tok * k / e), 1)
+        # keep capacity MXU-aligned when it is large enough to matter
+        if capacity >= 8:
+            capacity = -(-capacity // 8) * 8
+
+    logits = tokens.astype(jnp.float32) @ params["router"]     # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)            # (T, k)
+    if cfg.renorm_gates:
+        gate_vals = gate_vals / jnp.maximum(
+            gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, slot) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.int32)    # (T, k, E)
+    flat = onehot.reshape(n_tok * k, e)
+    pos_in_expert = (jnp.cumsum(flat, axis=0) - flat).reshape(n_tok, k, e)
+    pos = jnp.sum(pos_in_expert * onehot, axis=-1)             # (T, k)
+    keep = pos < capacity
+
+    # dispatch/combine tensors (T, E, C) in dense einsum form
+    oh_e = jax.nn.one_hot(expert_idx, e, dtype=tokens.dtype)   # (T,k,E)
+    oh_c = jax.nn.one_hot(pos, capacity, dtype=tokens.dtype)   # (T,k,C)
+    oh_c = oh_c * keep[..., None].astype(tokens.dtype)
+    dispatch = jnp.einsum("tke,tkc->tec", oh_e, oh_c)          # (T,E,C)
+    combine = jnp.einsum(
+        "tke,tkc,tk->tec", oh_e, oh_c, gate_vals.astype(tokens.dtype))
+
+    xs = jnp.einsum("td,tec->ecd", tokens, dispatch)           # (E,C,d)
+    h = jnp.einsum("ecd,edf->ecf", xs, params["w_in"])
+    if "w_gate" in params:
+        gate_h = jnp.einsum("ecd,edf->ecf", xs, params["w_gate"])
+        if cfg.activation == "swiglu":
+            h = jax.nn.silu(gate_h) * h
+        else:
+            h = jax.nn.gelu(gate_h, approximate=True) * h
+    elif cfg.activation == "gelu":
+        h = jax.nn.gelu(h, approximate=True)
+    else:
+        h = jnp.square(jax.nn.relu(h))
+    ys = jnp.einsum("ecf,efd->ecd", h, params["w_out"])        # (E,C,d)
+    out = jnp.einsum("ecd,tec->td", ys, combine)               # (T,d)
+
+    # GShard aux loss: E · Σ_e f_e · p_e
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(expert_idx[:, 0], e, dtype=jnp.float32), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+
+    for i in range(cfg.n_shared_experts):
+        out = out + mlp_apply(params[f"shared_{i}"], tokens, cfg.activation)
+    return out, aux

@@ -1,0 +1,111 @@
+"""Griffin recurrent block (RG-LRU + short conv) — RecurrentGemma's mixer.
+
+Training/prefill uses `jax.lax.associative_scan` over time (log-depth on
+TPU); decode is the O(1)-state single-step update. State per layer is
+(b, lru_width) for the LRU plus (b, conv_width-1, lru_width) for the causal
+conv — bounded memory, which is why the hybrid arch runs the 500k cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+_C = 8.0            # Griffin's recurrence sharpness constant
+CONV_WIDTH = 4
+
+
+def rglru_init(key, cfg, dtype):
+    d, dl = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 7)
+    return {
+        "w_x": dense_init(ks[0], d, dl, dtype),
+        "w_y": dense_init(ks[1], d, dl, dtype),
+        "conv_w": jax.random.normal(ks[2], (CONV_WIDTH, dl), dtype) * 0.1,
+        "conv_b": jnp.zeros((dl,), dtype),
+        "w_input_gate": dense_init(ks[3], dl, dl, dtype),
+        "w_rec_gate": dense_init(ks[4], dl, dl, dtype),
+        # Λ init so that a = exp(-c·softplus(Λ)) is spread in (0.9, 0.999)
+        "log_lambda": jnp.log(jnp.expm1(
+            -jnp.log(jnp.linspace(0.9, 0.999, dl, dtype=jnp.float32)) / _C
+        )).astype(dtype),
+        "w_out": dense_init(ks[5], dl, d, dtype),
+    }
+
+
+def _gates(params, u):
+    """a (decay) and gated input for the LRU, fp32."""
+    i_gate = jax.nn.sigmoid(u @ params["w_input_gate"]).astype(jnp.float32)
+    r_gate = jax.nn.sigmoid(u @ params["w_rec_gate"]).astype(jnp.float32)
+    log_a = -_C * jax.nn.softplus(
+        params["log_lambda"].astype(jnp.float32)) * r_gate
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) \
+        * i_gate * u.astype(jnp.float32)
+    return a, gated_in
+
+
+def _causal_conv(params, u, conv_state=None):
+    """Depthwise causal conv, width 4. u: (b, t, dl). Returns the conv
+    output and the state (last width-1 INPUTS) a decode step would need."""
+    if conv_state is not None:
+        u_hist = jnp.concatenate([conv_state, u], axis=1)     # (b, w-1+t, dl)
+    else:
+        u_hist = jnp.pad(u, ((0, 0), (CONV_WIDTH - 1, 0), (0, 0)))
+    out = sum(
+        u_hist[:, i:i + u.shape[1]] * params["conv_w"][i]
+        for i in range(CONV_WIDTH)) + params["conv_b"]
+    new_state = u_hist[:, -(CONV_WIDTH - 1):]
+    return out, new_state
+
+
+def rglru_apply(params, cfg, x):
+    """Full-sequence mixer. x: (b, t, d) -> (b, t, d)."""
+    u = x @ params["w_x"]
+    u, _ = _causal_conv(params, u)
+    a, b_in = _gates(params, u)
+
+    def compose(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(compose, (a, b_in), axis=1)
+    y = h.astype(x.dtype) * jax.nn.gelu(x @ params["w_y"], approximate=True)
+    return y @ params["w_out"]
+
+
+def rglru_prefill(params, cfg, x):
+    """Full-sequence mixer returning (y, decode state after the sequence)."""
+    u = x @ params["w_x"]
+    u_conv, conv_state = _causal_conv(params, u)
+    a, b_in = _gates(params, u_conv)
+
+    def compose(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(compose, (a, b_in), axis=1)
+    y = h.astype(x.dtype) * jax.nn.gelu(x @ params["w_y"], approximate=True)
+    state = {"h": h[:, -1], "conv": conv_state}
+    return y @ params["w_out"], state
+
+
+def rglru_state_init(batch, cfg, dtype):
+    return {
+        "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_WIDTH - 1, cfg.lru_width), dtype),
+    }
+
+
+def rglru_decode_step(params, cfg, x, state):
+    """x: (b, 1, d) -> (y, state)."""
+    u = x @ params["w_x"]
+    u, conv_state = _causal_conv(params, u, state["conv"])
+    a, b_in = _gates(params, u)
+    h = a[:, 0] * state["h"] + b_in[:, 0]                      # (b, dl)
+    y = h[:, None, :].astype(x.dtype) \
+        * jax.nn.gelu(x @ params["w_y"], approximate=True)
+    return y @ params["w_out"], {"h": h, "conv": conv_state}

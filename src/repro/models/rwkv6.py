@@ -1,0 +1,194 @@
+"""RWKV6 "Finch" — attention-free time-mix with data-dependent decay.
+
+Faithful structure (arXiv:2404.05892): ddlerp token-shift (low-rank
+data-dependent interpolation with the previous token), per-channel decay
+w_t = exp(-exp(·)) produced by a LoRA head, bonus term u for the current
+token, per-head matrix-valued WKV state, group-norm + SiLU output gate, and
+the squared-ReLU channel-mix.
+
+The WKV recurrence over a (dk × dv) state per head is a `lax.scan` over
+time (the chunked block-parallel form is a hillclimb candidate — §Perf);
+decode is the O(1) single-step update. State = (b, H, dk, dv) + two
+token-shift vectors — O(1) in sequence length, which is why this arch runs
+the 500k cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+LORA_SHIFT = 32      # ddlerp low-rank dim
+LORA_DECAY = 64      # decay LoRA dim
+_STREAMS = ("w", "k", "v", "r", "g")
+
+
+def rwkv6_init(key, cfg, dtype):
+    d, h, hd = cfg.d_model, cfg.rwkv_heads, cfg.rwkv_head_dim
+    ks = iter(jax.random.split(key, 24))
+    p = {
+        "mu_x": jnp.full((d,), 0.5, dtype),
+        "shift_w1": dense_init(next(ks), d, LORA_SHIFT * 5, dtype),
+        "shift_w2": jax.random.normal(next(ks), (5, LORA_SHIFT, d), dtype) * 0.02,
+        "mu": jax.random.normal(next(ks), (5, d), dtype) * 0.02 + 0.5,
+        "w_r": dense_init(next(ks), d, d, dtype),
+        "w_k": dense_init(next(ks), d, d, dtype),
+        "w_v": dense_init(next(ks), d, d, dtype),
+        "w_g": dense_init(next(ks), d, d, dtype),
+        "w_o": dense_init(next(ks), d, d, dtype),
+        "decay_w1": dense_init(next(ks), d, LORA_DECAY, dtype),
+        "decay_w2": dense_init(next(ks), LORA_DECAY, d, dtype),
+        "decay_base": jnp.linspace(-6.0, -0.5, d, dtype=jnp.float32).astype(dtype),
+        "bonus_u": jax.random.normal(next(ks), (h, hd), dtype) * 0.02,
+        "gn_scale": jnp.ones((d,), dtype),
+        "gn_bias": jnp.zeros((d,), dtype),
+    }
+    return p
+
+
+def _ddlerp(params, x, x_prev):
+    """Data-dependent token-shift for the five streams. x: (b, t, d)."""
+    xx = x_prev - x
+    xxx = x + xx * params["mu_x"]
+    lora = jnp.tanh(xxx @ params["shift_w1"])                  # (b,t,5*32)
+    b, t, _ = x.shape
+    lora = lora.reshape(b, t, 5, LORA_SHIFT)
+    adj = jnp.einsum("btsl,sld->btsd", lora, params["shift_w2"])
+    mixed = x[:, :, None, :] + xx[:, :, None, :] * (params["mu"] + adj)
+    return tuple(mixed[:, :, i] for i in range(5))             # 5 × (b,t,d)
+
+
+def _decay(params, xw):
+    """Per-channel log-decay (negative, fp32). w = exp(-exp(logw))."""
+    lw = params["decay_base"].astype(jnp.float32) \
+        + (jnp.tanh(xw @ params["decay_w1"]) @ params["decay_w2"]).astype(jnp.float32)
+    return -jnp.exp(lw)                                        # log w_t  (<0)
+
+
+def _group_norm(params, y, n_heads, eps=1e-5):
+    b, t, d = y.shape
+    yf = y.astype(jnp.float32).reshape(b, t, n_heads, d // n_heads)
+    mu = jnp.mean(yf, axis=-1, keepdims=True)
+    var = jnp.var(yf, axis=-1, keepdims=True)
+    yn = ((yf - mu) * jax.lax.rsqrt(var + eps)).reshape(b, t, d)
+    return yn * params["gn_scale"].astype(jnp.float32) \
+        + params["gn_bias"].astype(jnp.float32)
+
+
+def _project(params, cfg, x, x_prev):
+    xw, xk, xv, xr, xg = _ddlerp(params, x, x_prev)
+    b, t, d = x.shape
+    h, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    r = (xr @ params["w_r"]).reshape(b, t, h, hd)
+    k = (xk @ params["w_k"]).reshape(b, t, h, hd)
+    v = (xv @ params["w_v"]).reshape(b, t, h, hd)
+    g = jax.nn.silu(xg @ params["w_g"])
+    logw = _decay(params, xw).reshape(b, t, h, hd)
+    return r, k, v, g, logw
+
+
+def rwkv6_apply(params, cfg, x):
+    """Full-sequence time-mix. x: (b, t, d) -> (b, t, d)."""
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, g, logw = _project(params, cfg, x, x_prev)
+    u = params["bonus_u"].astype(jnp.float32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, logw_t = inp                    # (b,h,hd) each
+        kv = jnp.einsum("bhk,bhv->bhkv",
+                        k_t.astype(jnp.float32), v_t.astype(jnp.float32))
+        y = jnp.einsum("bhk,bhkv->bhv", r_t.astype(jnp.float32),
+                       S + u[None, :, :, None] * kv)
+        S = jnp.exp(logw_t)[..., None] * S + kv
+        return S, y
+
+    b = x.shape[0]
+    S0 = jnp.zeros((b, cfg.rwkv_heads, cfg.rwkv_head_dim, cfg.rwkv_head_dim),
+                   jnp.float32)
+    seq_first = lambda a: jnp.moveaxis(a, 1, 0)        # (t, b, h, hd)
+    _, ys = jax.lax.scan(step, S0, tuple(map(seq_first, (r, k, v, logw))))
+    y = jnp.moveaxis(ys, 0, 1).reshape(*x.shape)       # (b, t, d)
+    y = _group_norm(params, y, cfg.rwkv_heads).astype(x.dtype) * g
+    return y @ params["w_o"]
+
+
+def rwkv6_prefill(params, cfg, x):
+    """Full-sequence time-mix returning (y, decode state)."""
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, g, logw = _project(params, cfg, x, x_prev)
+    u = params["bonus_u"].astype(jnp.float32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, logw_t = inp
+        kv = jnp.einsum("bhk,bhv->bhkv",
+                        k_t.astype(jnp.float32), v_t.astype(jnp.float32))
+        y = jnp.einsum("bhk,bhkv->bhv", r_t.astype(jnp.float32),
+                       S + u[None, :, :, None] * kv)
+        S = jnp.exp(logw_t)[..., None] * S + kv
+        return S, y
+
+    b = x.shape[0]
+    S0 = jnp.zeros((b, cfg.rwkv_heads, cfg.rwkv_head_dim, cfg.rwkv_head_dim),
+                   jnp.float32)
+    seq_first = lambda a: jnp.moveaxis(a, 1, 0)
+    S, ys = jax.lax.scan(step, S0, tuple(map(seq_first, (r, k, v, logw))))
+    y = jnp.moveaxis(ys, 0, 1).reshape(*x.shape)
+    y = _group_norm(params, y, cfg.rwkv_heads).astype(x.dtype) * g
+    return y @ params["w_o"], {"S": S, "shift": x[:, -1]}
+
+
+def rwkv6_state_init(batch, cfg, dtype):
+    return {
+        "S": jnp.zeros((batch, cfg.rwkv_heads, cfg.rwkv_head_dim,
+                        cfg.rwkv_head_dim), jnp.float32),
+        "shift": jnp.zeros((batch, cfg.d_model), dtype),
+    }
+
+
+def rwkv6_decode_step(params, cfg, x, state):
+    """x: (b, 1, d) -> (y, state)."""
+    x_prev = state["shift"][:, None, :]
+    r, k, v, g, logw = _project(params, cfg, x, x_prev)
+    u = params["bonus_u"].astype(jnp.float32)
+    kv = jnp.einsum("bhk,bhv->bhkv",
+                    k[:, 0].astype(jnp.float32), v[:, 0].astype(jnp.float32))
+    y = jnp.einsum("bhk,bhkv->bhv", r[:, 0].astype(jnp.float32),
+                   state["S"] + u[None, :, :, None] * kv)
+    S = jnp.exp(logw[:, 0])[..., None] * state["S"] + kv
+    y = y.reshape(x.shape[0], 1, -1)
+    y = _group_norm(params, y, cfg.rwkv_heads).astype(x.dtype) * g
+    return y @ params["w_o"], {"S": S, "shift": x[:, 0]}
+
+
+# ---------------------------------------------------------------------------
+# channel-mix (RWKV's FFN)
+# ---------------------------------------------------------------------------
+def channel_mix_init(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    d, dff = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_r": jnp.full((d,), 0.5, dtype),
+        "w_k": dense_init(ks[0], d, dff, dtype),
+        "w_v": dense_init(ks[1], dff, d, dtype),
+        "w_r": dense_init(ks[2], d, d, dtype),
+    }
+
+
+def channel_mix_apply(params, x, x_prev):
+    xk = x + (x_prev - x) * params["mu_k"]
+    xr = x + (x_prev - x) * params["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ params["w_k"]))
+    return jax.nn.sigmoid(xr @ params["w_r"]) * (k @ params["w_v"])
+
+
+def channel_mix_full(params, x):
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return channel_mix_apply(params, x, x_prev)
+
+
+def channel_mix_decode(params, x, shift_state):
+    """x: (b, 1, d); shift_state: (b, d)."""
+    out = channel_mix_apply(params, x, shift_state[:, None, :])
+    return out, x[:, 0]

@@ -1,0 +1,361 @@
+"""Generic decoder / encoder-decoder assembly with scan-over-layer-groups.
+
+Layers are grouped into repeating pattern units (e.g. RecurrentGemma's
+(rglru, rglru, attn)); groups with identical structure are STACKED and
+applied with `jax.lax.scan`, keeping the HLO O(pattern) instead of
+O(n_layers) — this is what keeps 40-cell × 512-device dry-run compiles
+tractable and is standard production practice (MaxText does the same).
+
+Layout:
+  params = {"head": [layer...], "groups": stacked-pytree, "tail": [layer...]}
+  head   = leading layers that differ (e.g. Moonlight's first dense layer)
+  groups = n_groups stacked copies of one pattern unit
+  tail   = n_body % len(pattern) trailing layers
+
+Caches mirror the same layout so decode scans over stacked group caches.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ArchConfig
+from repro.distributed.hints import hint
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models.layers import is_gated, make_norm, mlp_apply, mlp_init
+
+
+# ---------------------------------------------------------------------------
+# single layer
+# ---------------------------------------------------------------------------
+def layer_init(key, cfg: ArchConfig, layer_idx: int, dtype):
+    kind = cfg.mixer_kind(layer_idx)
+    mlp_kind = cfg.mlp_kind(layer_idx)
+    norm_init, _ = make_norm(cfg.norm)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: dict[str, Any] = {"norm_mixer": norm_init(cfg.d_model, dtype),
+                         "norm_mlp": norm_init(cfg.d_model, dtype)}
+    if kind in ("attn", "swa"):
+        p["attn"] = attn.attn_init(k1, cfg, dtype)
+        if cfg.cross_attention:
+            p["cross"] = attn.attn_init(k3, cfg, dtype)
+            p["norm_cross"] = norm_init(cfg.d_model, dtype)
+    elif kind == "rglru":
+        p["rglru"] = rglru_mod.rglru_init(k1, cfg, dtype)
+    elif kind == "rwkv6":
+        p["rwkv"] = rwkv_mod.rwkv6_init(k1, cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if mlp_kind == "moe":
+        p["moe"] = moe_mod.moe_init(k2, cfg, dtype)
+    elif mlp_kind == "channel_mix":
+        p["cmix"] = rwkv_mod.channel_mix_init(k2, cfg, dtype)
+    else:
+        p["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff, dtype,
+                            is_gated(cfg.activation))
+    return p
+
+
+def layer_apply(params, cfg: ArchConfig, kind: str, mlp_kind: str, x, *,
+                positions, causal=True, cross_kv=None):
+    """Full-sequence layer. Returns (x, aux_loss)."""
+    _, norm = make_norm(cfg.norm)
+    h = norm(params["norm_mixer"], x)
+    if kind in ("attn", "swa"):
+        window = cfg.window if kind == "swa" else None
+        h = attn.attn_apply(params["attn"], cfg, h, positions=positions,
+                            window=window, causal=causal)
+    elif kind == "rglru":
+        h = rglru_mod.rglru_apply(params["rglru"], cfg, h)
+    elif kind == "rwkv6":
+        h = rwkv_mod.rwkv6_apply(params["rwkv"], cfg, h)
+    # tag post-all-reduce tensors: the "save_collectives" remat policy keeps
+    # these so backward recompute does NOT re-run TP collectives (§Perf 2)
+    h = checkpoint_name(h, "post_collective")
+    x = x + h
+    if cross_kv is not None:
+        h = norm(params["norm_cross"], x)
+        h = attn.attn_apply(params["cross"], cfg, h, positions=None,
+                            causal=False, kv_override=cross_kv)
+        x = x + h
+    h = norm(params["norm_mlp"], x)
+    aux = jnp.zeros((), jnp.float32)
+    if mlp_kind == "moe":
+        h, aux = moe_mod.moe_apply(params["moe"], cfg, h)
+    elif mlp_kind == "channel_mix":
+        h = rwkv_mod.channel_mix_full(params["cmix"], h)
+    else:
+        h = mlp_apply(params["mlp"], h, cfg.activation)
+    h = checkpoint_name(h, "post_collective")
+    return x + h, aux
+
+
+# ---------------------------------------------------------------------------
+# layer cache (decode)
+# ---------------------------------------------------------------------------
+def layer_cache_init(cfg: ArchConfig, kind: str, batch, max_len, dtype,
+                     with_cross: bool):
+    c: dict[str, Any] = {}
+    if kind in ("attn", "swa"):
+        ring = min(max_len, cfg.window) if kind == "swa" and cfg.window else max_len
+        c["kv"] = attn.cache_init(attn.CacheSpec(
+            batch, ring, cfg.n_kv_heads, cfg.head_dim, dtype,
+            quant=cfg.kv_quant))
+        if with_cross:
+            c["cross_k"] = jnp.zeros(
+                (batch, cfg.n_kv_heads, cfg.encoder_len, cfg.head_dim), dtype)
+            c["cross_v"] = jnp.zeros_like(c["cross_k"])
+    elif kind == "rglru":
+        c["rec"] = rglru_mod.rglru_state_init(batch, cfg, dtype)
+    elif kind == "rwkv6":
+        c["rec"] = rwkv_mod.rwkv6_state_init(batch, cfg, dtype)
+        c["cmix_shift"] = jnp.zeros((batch, cfg.d_model), dtype)
+    return c
+
+
+def layer_decode(params, cfg: ArchConfig, kind: str, mlp_kind: str, x,
+                 cache, pos):
+    """One-token decode. x: (b, 1, d). Returns (x, cache)."""
+    _, norm = make_norm(cfg.norm)
+    h = norm(params["norm_mixer"], x)
+    if kind in ("attn", "swa"):
+        window = cfg.window if kind == "swa" else None
+        h, kv = attn.attn_decode_step(params["attn"], cfg, h, cache["kv"],
+                                      pos, window=window)
+        cache = {**cache, "kv": kv}
+    elif kind == "rglru":
+        h, rec = rglru_mod.rglru_decode_step(params["rglru"], cfg, h,
+                                             cache["rec"])
+        cache = {**cache, "rec": rec}
+    elif kind == "rwkv6":
+        h, rec = rwkv_mod.rwkv6_decode_step(params["rwkv"], cfg, h,
+                                            cache["rec"])
+        cache = {**cache, "rec": rec}
+    x = x + h
+    if "cross_k" in cache:
+        h = norm(params["norm_cross"], x)
+        h, _ = attn.attn_decode_step(
+            params["cross"], cfg, h, None, pos,
+            kv_override=(cache["cross_k"], cache["cross_v"]))
+        x = x + h
+    h = norm(params["norm_mlp"], x)
+    if mlp_kind == "moe":
+        h, _ = moe_mod.moe_apply(params["moe"], cfg, h, capacity_factor=None)
+    elif mlp_kind == "channel_mix":
+        h, shift = rwkv_mod.channel_mix_decode(params["cmix"], h,
+                                               cache["cmix_shift"])
+        cache = {**cache, "cmix_shift": shift}
+    else:
+        h = mlp_apply(params["mlp"], h, cfg.activation)
+    return x + h, cache
+
+
+# ---------------------------------------------------------------------------
+# stack layout: head / groups / tail
+# ---------------------------------------------------------------------------
+def stack_layout(cfg: ArchConfig):
+    """(head_idxs, n_groups, unit_len, tail_idxs) over decoder layers."""
+    head = list(range(cfg.first_dense))
+    body = cfg.n_layers - cfg.first_dense
+    unit = len(cfg.pattern)
+    n_groups = body // unit
+    tail_start = cfg.first_dense + n_groups * unit
+    tail = list(range(tail_start, cfg.n_layers))
+    return head, n_groups, unit, tail
+
+
+def _unit_kinds(cfg: ArchConfig):
+    """Mixer/mlp kinds for one pattern unit (body layers all share these)."""
+    base = cfg.first_dense
+    return [(cfg.mixer_kind(base + j), cfg.mlp_kind(base + j))
+            for j in range(len(cfg.pattern))]
+
+
+def stack_init(key, cfg: ArchConfig, dtype):
+    head, n_groups, unit, tail = stack_layout(cfg)
+    keys = jax.random.split(key, max(len(head) + n_groups * unit + len(tail), 1))
+    ki = iter(keys)
+    params: dict[str, Any] = {}
+    params["head"] = [layer_init(next(ki), cfg, i, dtype) for i in head]
+    group_list = []
+    for g in range(n_groups):
+        unit_params = [layer_init(next(ki), cfg, cfg.first_dense + g * unit + j,
+                                  dtype) for j in range(unit)]
+        group_list.append(unit_params)
+    if group_list:
+        params["groups"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *group_list)
+    else:
+        params["groups"] = None
+    params["tail"] = [layer_init(next(ki), cfg, i, dtype) for i in tail]
+    return params
+
+
+def _remat_wrap(fn, remat):
+    """remat: False | True (full) | "save_collectives" (policy remat)."""
+    if not remat:
+        return fn
+    if remat == "save_collectives":
+        pol = jax.checkpoint_policies.save_only_these_names("post_collective")
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+def stack_apply(params, cfg: ArchConfig, x, *, positions, causal=True,
+                cross_kv=None, remat=False):
+    """Full-sequence stack. Returns (x, aux)."""
+    head, n_groups, unit, tail = stack_layout(cfg)
+    kinds = _unit_kinds(cfg)
+    aux = jnp.zeros((), jnp.float32)
+
+    for i, lp in zip(head, params["head"]):
+        x, a = layer_apply(lp, cfg, cfg.mixer_kind(i), cfg.mlp_kind(i), x,
+                           positions=positions, causal=causal,
+                           cross_kv=cross_kv)
+        aux = aux + a
+
+    if n_groups > 0:
+        def unit_apply(x, unit_params):
+            a_sum = jnp.zeros((), jnp.float32)
+            for j, (kind, mlp_kind) in enumerate(kinds):
+                x, a = layer_apply(unit_params[j], cfg, kind, mlp_kind, x,
+                                   positions=positions, causal=causal,
+                                   cross_kv=cross_kv)
+                a_sum = a_sum + a
+            return hint(x, "hidden"), a_sum
+
+        unit_apply = _remat_wrap(unit_apply, remat)
+
+        def scan_body(carry, unit_params):
+            x, aux = carry
+            x, a = unit_apply(x, unit_params)
+            return (x, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(scan_body, (x, aux), params["groups"])
+
+    for i, lp in zip(tail, params["tail"]):
+        x, a = layer_apply(lp, cfg, cfg.mixer_kind(i), cfg.mlp_kind(i), x,
+                           positions=positions, causal=causal,
+                           cross_kv=cross_kv)
+        aux = aux + a
+    return x, aux
+
+
+def layer_prefill(params, cfg: ArchConfig, kind: str, mlp_kind: str, x, *,
+                  positions, max_len):
+    """Full-sequence layer that also emits the post-sequence decode cache."""
+    _, norm = make_norm(cfg.norm)
+    h = norm(params["norm_mixer"], x)
+    cache: dict[str, Any] = {}
+    if kind in ("attn", "swa"):
+        window = cfg.window if kind == "swa" else None
+        h, kv = attn.attn_prefill(params["attn"], cfg, h,
+                                  positions=positions, window=window,
+                                  max_len=max_len)
+        cache["kv"] = kv
+    elif kind == "rglru":
+        h, rec = rglru_mod.rglru_prefill(params["rglru"], cfg, h)
+        cache["rec"] = rec
+    elif kind == "rwkv6":
+        h, rec = rwkv_mod.rwkv6_prefill(params["rwkv"], cfg, h)
+        cache["rec"] = rec
+    x = x + h
+    h = norm(params["norm_mlp"], x)
+    if mlp_kind == "moe":
+        h, _ = moe_mod.moe_apply(params["moe"], cfg, h, capacity_factor=None)
+    elif mlp_kind == "channel_mix":
+        cache["cmix_shift"] = h[:, -1]      # last token's normed input
+        h = rwkv_mod.channel_mix_full(params["cmix"], h)
+    else:
+        h = mlp_apply(params["mlp"], h, cfg.activation)
+    return x + h, cache
+
+
+def stack_prefill(params, cfg: ArchConfig, x, *, positions, max_len):
+    """Forward the whole stack, returning (x, cache in stack layout)."""
+    head, n_groups, unit, tail = stack_layout(cfg)
+    kinds = _unit_kinds(cfg)
+    cache: dict[str, Any] = {"head": [], "tail": [], "groups": None}
+
+    for i, lp in zip(head, params["head"]):
+        x, lc = layer_prefill(lp, cfg, cfg.mixer_kind(i), cfg.mlp_kind(i), x,
+                              positions=positions, max_len=max_len)
+        cache["head"].append(lc)
+
+    if n_groups > 0:
+        def scan_body(x, unit_params):
+            unit_cache = []
+            for j, (kind, mlp_kind) in enumerate(kinds):
+                x, lc = layer_prefill(unit_params[j], cfg, kind, mlp_kind, x,
+                                      positions=positions, max_len=max_len)
+                unit_cache.append(lc)
+            return x, unit_cache
+        x, group_cache = jax.lax.scan(scan_body, x, params["groups"])
+        cache["groups"] = group_cache
+
+    for i, lp in enumerate(params["tail"]):
+        li = tail[i]
+        x, lc = layer_prefill(lp, cfg, cfg.mixer_kind(li), cfg.mlp_kind(li),
+                              x, positions=positions, max_len=max_len)
+        cache["tail"].append(lc)
+    return x, cache
+
+
+def stack_cache_init(cfg: ArchConfig, batch, max_len, dtype,
+                     with_cross: bool = False):
+    head, n_groups, unit, tail = stack_layout(cfg)
+    kinds = _unit_kinds(cfg)
+    cache: dict[str, Any] = {}
+    cache["head"] = [layer_cache_init(cfg, cfg.mixer_kind(i), batch, max_len,
+                                      dtype, with_cross) for i in head]
+    if n_groups > 0:
+        one_group = [layer_cache_init(cfg, kinds[j][0], batch, max_len, dtype,
+                                      with_cross) for j in range(unit)]
+        cache["groups"] = jax.tree.map(
+            lambda leaf: jnp.broadcast_to(
+                leaf, (n_groups,) + leaf.shape).copy(), one_group)
+    else:
+        cache["groups"] = None
+    cache["tail"] = [layer_cache_init(cfg, cfg.mixer_kind(i), batch, max_len,
+                                      dtype, with_cross) for i in tail]
+    return cache
+
+
+def stack_decode(params, cfg: ArchConfig, x, cache, pos):
+    """One-token decode through the whole stack. Returns (x, cache)."""
+    head, n_groups, unit, tail = stack_layout(cfg)
+    kinds = _unit_kinds(cfg)
+    new_cache: dict[str, Any] = {"head": [], "tail": [], "groups": None}
+
+    for i, (lp, lc) in enumerate(zip(params["head"], cache["head"])):
+        li = head[i]
+        x, lc = layer_decode(lp, cfg, cfg.mixer_kind(li), cfg.mlp_kind(li),
+                             x, lc, pos)
+        new_cache["head"].append(lc)
+
+    if n_groups > 0:
+        def scan_body(x, scanned):
+            unit_params, unit_cache = scanned
+            for j, (kind, mlp_kind) in enumerate(kinds):
+                x, uc = layer_decode(unit_params[j], cfg, kind, mlp_kind, x,
+                                     unit_cache[j], pos)
+                unit_cache = unit_cache[:j] + [uc] + unit_cache[j + 1:]
+            return x, unit_cache
+
+        x, new_groups = jax.lax.scan(scan_body, x,
+                                     (params["groups"], cache["groups"]))
+        new_cache["groups"] = new_groups
+
+    for i, (lp, lc) in enumerate(zip(params["tail"], cache["tail"])):
+        li = tail[i]
+        x, lc = layer_decode(lp, cfg, cfg.mixer_kind(li), cfg.mlp_kind(li),
+                             x, lc, pos)
+        new_cache["tail"].append(lc)
+    return x, new_cache

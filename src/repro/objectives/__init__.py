@@ -1,0 +1,10 @@
+from repro.objectives.base import SeparableObjective
+from repro.objectives.griewank import GRIEWANK, griewank, griewank_naive
+from repro.objectives.suite import RASTRIGIN, REGISTRY, SCHWEFEL_222, SHIFTED_SPHERE, SPHERE
+
+OBJECTIVES = {"griewank": GRIEWANK, **REGISTRY}
+
+__all__ = [
+    "SeparableObjective", "GRIEWANK", "griewank", "griewank_naive",
+    "RASTRIGIN", "SPHERE", "SCHWEFEL_222", "SHIFTED_SPHERE", "OBJECTIVES", "REGISTRY",
+]

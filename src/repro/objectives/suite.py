@@ -1,0 +1,82 @@
+"""Additional separable benchmark objectives (CEC-style large-scale suite).
+
+The paper positions ABO as general-purpose; these verify the incremental
+algebra on objectives with different curvature/multimodality than Griewank.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.objectives.base import SeparableObjective
+
+
+def _sphere_terms(idx, x):
+    return (x * x)[..., None]
+
+
+SPHERE = SeparableObjective(
+    name="sphere",
+    n_aggs=1,
+    terms=_sphere_terms,
+    combine=lambda a: a[..., 0],
+    lower=-100.0,
+    upper=100.0,
+)
+
+
+def _rastrigin_terms(idx, x):
+    dt = x.dtype
+    two_pi = jnp.asarray(2.0 * jnp.pi, dt)
+    # per-coordinate term x² − 10·cos(2πx); the "+10d" offset is added in
+    # combine via a unit-count aggregate so padding/masking stays exact.
+    val = x * x - 10.0 * jnp.cos(two_pi * x)
+    one = jnp.ones_like(x)
+    return jnp.stack([val, one], axis=-1)
+
+
+RASTRIGIN = SeparableObjective(
+    name="rastrigin",
+    n_aggs=2,
+    terms=_rastrigin_terms,
+    combine=lambda a: a[..., 0] + 10.0 * a[..., 1],
+    lower=-5.12,
+    upper=5.12,
+)
+
+
+def _schwefel222_terms(idx, x):
+    # Schwefel 2.22: Σ|x| + Π|x| — same log-product trick as Griewank.
+    a = jnp.abs(x)
+    log_a = jnp.log(jnp.maximum(a, 1e-38))
+    return jnp.stack([a, log_a], axis=-1)
+
+
+SCHWEFEL_222 = SeparableObjective(
+    name="schwefel_2_22",
+    n_aggs=2,
+    terms=_schwefel222_terms,
+    combine=lambda a: a[..., 0] + jnp.exp(a[..., 1]),
+    lower=-10.0,
+    upper=10.0,
+)
+
+def _shifted_sphere_terms(idx, x):
+    # CEC-style shifted optimum, generated on the fly from the coordinate
+    # index (no O(N) shift table — the zero-RAM discipline applies to the
+    # objective too). Optimum x*_i = 3·sin(idx+1) is OFF any symmetric
+    # sampling grid, so convergence genuinely exercises window refinement.
+    shift = 3.0 * jnp.sin((idx + 1).astype(x.dtype))
+    d = x - shift
+    return (d * d)[..., None]
+
+
+SHIFTED_SPHERE = SeparableObjective(
+    name="shifted_sphere",
+    n_aggs=1,
+    terms=_shifted_sphere_terms,
+    combine=lambda a: a[..., 0],
+    lower=-100.0,
+    upper=100.0,
+)
+
+REGISTRY = {o.name: o for o in (SPHERE, RASTRIGIN, SCHWEFEL_222, SHIFTED_SPHERE)}

@@ -1,0 +1,3 @@
+from repro.optim.nelder_mead import NMResult, nelder_mead, simplex_bytes
+
+__all__ = ["NMResult", "nelder_mead", "simplex_bytes"]

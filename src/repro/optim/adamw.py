@@ -1,0 +1,102 @@
+"""AdamW with mixed precision, ZeRO-1 state sharding, and bf16 gradient
+compression — the first-order baseline ABO-ZO is compared against.
+
+Memory layout (the thing the paper is about):
+  * model params: bf16, TP-sharded               (2 bytes/param / 16)
+  * master + m + v: fp32, TP-sharded AND ZeRO-1-sharded over the DP axes
+    when the leading dim divides                  (12 bytes/param / 256)
+ABO-ZO (repro/train/abo_zo.py) needs NONE of the fp32 state — that delta is
+the paper's "zero-RAM" thesis made measurable in memory_analysis().
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def init_state(params):
+    """fp32 master + moments (cast from bf16 params)."""
+    f32 = lambda p: p.astype(jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "master": jax.tree.map(f32, params),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+    }
+
+
+def apply_update(params, grads, state, cfg: AdamWConfig):
+    """Returns (new_params, new_state). grads may be bf16 (compressed)."""
+    step = state["step"] + 1
+    gnorm = jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(master, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        master = master - cfg.lr * (
+            mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * master)
+        return master, m, v
+
+    flat_master, tdef = jax.tree.flatten(state["master"])
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    outs = [upd(a, b, c, d) for a, b, c, d in
+            zip(flat_master, flat_g, flat_m, flat_v)]
+    master = jax.tree.unflatten(tdef, [o[0] for o in outs])
+    m = jax.tree.unflatten(tdef, [o[1] for o in outs])
+    v = jax.tree.unflatten(tdef, [o[2] for o in outs])
+    new_params = jax.tree.map(
+        lambda ms, p: ms.astype(p.dtype), master, params)
+    return new_params, {"step": step, "master": master, "m": m, "v": v}, gnorm
+
+
+def state_specs(params, param_spec_tree, mesh: Mesh, *, zero1: bool,
+                dp_axes: tuple):
+    """PartitionSpecs for the optimizer state.
+
+    ZeRO-1: additionally shard each fp32 leaf over the (flattened) DP axes on
+    its first dimension that is (a) unsharded in the param spec and (b)
+    divisible by the DP extent. Falls back to the param spec otherwise.
+    """
+    dp_size = 1
+    for a in dp_axes:
+        dp_size *= mesh.shape[a]
+
+    def zspec(spec: P, leaf):
+        if not zero1 or dp_size == 1:
+            return spec
+        entries = list(spec) + [None] * (leaf.ndim - len(spec))
+        for i, (dim, ax) in enumerate(zip(leaf.shape, entries)):
+            if ax is None and dim % dp_size == 0:
+                entries[i] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+                return P(*entries)
+        return spec
+
+    fp32_specs = jax.tree.map(zspec, param_spec_tree, params,
+                              is_leaf=lambda x: isinstance(x, P))
+    return {"step": P(), "master": fp32_specs, "m": fp32_specs,
+            "v": fp32_specs}

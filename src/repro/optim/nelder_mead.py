@@ -1,0 +1,134 @@
+"""Nelder-Mead downhill simplex — the paper's comparison baseline, in JAX.
+
+Deliberately the textbook algorithm (Nelder & Mead 1965, the same family the
+paper obtained from TAO/PETSc): an (N+1)-vertex simplex, i.e. **O(N²) memory**
+— the property that makes it crash past ~1e4–1e5 variables on a laptop
+(paper Tables 1–2) and that ABO's O(N) footprint is contrasted against.
+
+Standard coefficients: reflect α=1, expand γ=2, outside-contract ρ=0.5,
+shrink σ=0.5. Loop is a single `lax.while_loop`; each iteration performs the
+usual ordered reflect/expand/contract/shrink casework, vectorized over N.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class NMResult:
+    x: jnp.ndarray
+    fun: float
+    fe: int            # true O(N)-cost function evaluations
+    iterations: int
+    converged: bool
+
+
+def simplex_bytes(n: int, dtype=jnp.float32) -> int:
+    """Theoretical NM working-set: the paper's O(N² + 6N + 1) analysis."""
+    itemsize = jnp.dtype(dtype).itemsize
+    return itemsize * ((n + 1) * n + 6 * n + 1)
+
+
+@functools.partial(jax.jit, static_argnames=("fun", "max_fe"))
+def _nm_jit(x0, fun, max_fe, ftol, xtol):
+    n = x0.shape[0]
+    dt = x0.dtype
+
+    # Standard right-angled initial simplex: x0 plus h·e_i vertices.
+    h = jnp.where(x0 == 0, 0.00025, 0.05 * jnp.abs(x0)).astype(dt)
+    simplex = jnp.concatenate(
+        [x0[None, :], x0[None, :] + jnp.diag(h)], axis=0)      # (n+1, n)
+    fvals = jax.vmap(fun)(simplex)                             # (n+1,)
+    fe0 = n + 1
+
+    def cond(state):
+        simplex, fvals, fe, it = state
+        f_spread = jnp.max(fvals) - jnp.min(fvals)
+        x_spread = jnp.max(jnp.abs(simplex - simplex[:1]))
+        return (fe < max_fe) & ((f_spread > ftol) | (x_spread > xtol))
+
+    def body(state):
+        simplex, fvals, fe, it = state
+        order = jnp.argsort(fvals)
+        simplex = simplex[order]
+        fvals = fvals[order]
+        best, worst, second = fvals[0], fvals[-1], fvals[-2]
+        centroid = jnp.mean(simplex[:-1], axis=0)
+
+        xr = centroid + (centroid - simplex[-1])               # reflect
+        fr = fun(xr)
+        xe = centroid + 2.0 * (centroid - simplex[-1])         # expand
+        xc = centroid + 0.5 * (simplex[-1] - centroid)         # contract
+        do_expand = fr < best
+        do_contract = fr >= second
+        x_probe = jnp.where(do_expand, xe, xc)
+        f_probe = fun(x_probe)
+        fe = fe + 2  # fr + (fe|fc); the branch not taken is discarded
+
+        # Casework for replacing the worst vertex.
+        def replace(with_x, with_f):
+            return simplex.at[-1].set(with_x), fvals.at[-1].set(with_f)
+
+        accept_reflect = (~do_expand) & (~do_contract)
+        take_expand = do_expand & (f_probe < fr)
+        take_contract = do_contract & (f_probe < worst)
+
+        new_x = jnp.where(take_expand | take_contract, x_probe,
+                          jnp.where(accept_reflect | do_expand, xr, simplex[-1]))
+        new_f = jnp.where(take_expand | take_contract, f_probe,
+                          jnp.where(accept_reflect | do_expand, fr, worst))
+        simplex_r, fvals_r = replace(new_x, new_f)
+
+        # Shrink everything toward the best vertex when contraction failed.
+        do_shrink = do_contract & (f_probe >= worst)
+        shrunk = simplex[:1] + 0.5 * (simplex - simplex[:1])
+        f_shrunk = jax.vmap(fun)(shrunk)
+        simplex_s = shrunk.at[0].set(simplex[0])
+        fvals_s = f_shrunk.at[0].set(fvals[0])
+
+        simplex = jnp.where(do_shrink, simplex_s, simplex_r)
+        fvals = jnp.where(do_shrink, fvals_s, fvals_r)
+        fe = fe + jnp.where(do_shrink, n, 0)
+        return simplex, fvals, fe, it + 1
+
+    state = (simplex, fvals, jnp.asarray(fe0, jnp.int64 if
+             jax.config.jax_enable_x64 else jnp.int32), 0)
+    simplex, fvals, fe, it = jax.lax.while_loop(cond, body, state)
+    i_best = jnp.argmin(fvals)
+    return simplex[i_best], fvals[i_best], fe, it
+
+
+def nelder_mead(
+    fun: Callable[[jnp.ndarray], jnp.ndarray],
+    x0: jnp.ndarray,
+    *,
+    max_fe: int = 2_000_000,
+    ftol: float = 1e-10,
+    xtol: float = 1e-10,
+    memory_budget_bytes: int | None = None,
+) -> NMResult:
+    """Minimize ``fun`` from ``x0``.
+
+    ``memory_budget_bytes`` reproduces the paper's crash rows without taking
+    the host down: if the simplex alone would exceed the budget, raise
+    ``MemoryError`` (recorded as NM's failure in the benchmarks).
+    """
+    n = int(x0.shape[0])
+    if memory_budget_bytes is not None:
+        need = simplex_bytes(n, x0.dtype)
+        if need > memory_budget_bytes:
+            raise MemoryError(
+                f"Nelder-Mead simplex needs {need/1e9:.2f} GB for n={n} "
+                f"(O(N²)); budget is {memory_budget_bytes/1e9:.2f} GB — "
+                "this is the paper's NM crash regime.")
+    x, f, fe, it = _nm_jit(jnp.asarray(x0), fun, max_fe,
+                           jnp.asarray(ftol, x0.dtype),
+                           jnp.asarray(xtol, x0.dtype))
+    max_reached = int(fe) >= max_fe
+    return NMResult(x=x, fun=float(f), fe=int(fe), iterations=int(it),
+                    converged=not max_reached)

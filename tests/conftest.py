@@ -1,0 +1,9 @@
+# NOTE: deliberately no XLA_FLAGS here — smoke tests and benches must see
+# ONE device. Multi-device tests spawn subprocesses with their own flags.
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.RandomState(0)

@@ -1,0 +1,232 @@
+"""Multi-device tests — run in SUBPROCESSES with their own XLA_FLAGS so this
+pytest process keeps its single CPU device (conftest guarantee)."""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _run(script: str, devices: int = 8, mesh: str | None = None,
+         timeout: int = 900) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = str(REPO / "src")
+    if mesh:
+        env["REPRO_MESH_SHAPE"] = mesh
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_sharded_abo_converges_on_mesh():
+    out = _run("""
+        import jax, jax.numpy as jnp
+        from repro.core.sharded import make_sharded_abo
+        from repro.core import ABOConfig
+        from repro.objectives import GRIEWANK, griewank
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        cfg = ABOConfig(block_size=128)
+        step, x_sh, a_sh, n_pad = make_sharded_abo(GRIEWANK, 5000, mesh,
+                                                   config=cfg)
+        x = jax.device_put(jnp.full((n_pad,), 141.6, jnp.float32), x_sh)
+        aggs = jax.device_put(GRIEWANK.aggregates(x, 5000), a_sh)
+        for p in range(cfg.n_passes):
+            x, aggs = step(x, aggs, jnp.asarray(p))
+        f = float(griewank(x[:5000]))
+        assert f < 1e-6, f
+        print("OK", f)
+    """)
+    assert "OK" in out
+
+
+def test_train_step_dp_tp_grads_match_single_device():
+    """Same batch, same init: 4x2 mesh loss == single-device loss."""
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp, dataclasses
+        from repro.configs import ARCHS, reduced
+        from repro.models.model import Model
+        from repro.train import steps as steps_mod
+        from repro.launch.mesh import make_host_mesh
+
+        cfg = reduced(ARCHS["mistral-nemo-12b"])
+        model = Model(cfg)
+        rng = np.random.RandomState(0)
+        batch_np = rng.randint(0, cfg.vocab_size, (8, 33))
+
+        # single device reference
+        params = model.init(jax.random.PRNGKey(0))
+        ref_loss = float(model.loss(params, {"tokens": jnp.asarray(batch_np)})[0])
+
+        mesh = make_host_mesh(model_parallel=2)
+        step, sh = steps_mod.make_train_step(model, mesh, zero1=True,
+                                             grad_compression="bf16")
+        with mesh:
+            params = jax.jit(model.init, out_shardings=sh["params"])(
+                jax.random.PRNGKey(0))
+            opt = steps_mod.init_opt_state(model, mesh, params)
+            batch = {"tokens": jax.device_put(
+                jnp.asarray(batch_np), jax.tree.leaves(sh["batch"])[0])}
+            params, opt, metrics = step(params, opt, batch)
+        dist_loss = float(metrics["loss"])
+        assert abs(ref_loss - dist_loss) < 5e-3, (ref_loss, dist_loss)
+        print("OK", ref_loss, dist_loss)
+    """)
+    assert "OK" in out
+
+
+def test_zero1_state_is_sharded():
+    out = _run("""
+        import jax, jax.numpy as jnp
+        from repro.configs import ARCHS, reduced
+        from repro.models.model import Model
+        from repro.train import steps as steps_mod
+        from repro.launch.mesh import make_host_mesh
+        cfg = reduced(ARCHS["mistral-nemo-12b"])
+        model = Model(cfg)
+        mesh = make_host_mesh(model_parallel=2)   # data=4, model=2
+        with mesh:
+            params = jax.jit(model.init)(jax.random.PRNGKey(0))
+            opt = steps_mod.init_opt_state(model, mesh, params, zero1=True)
+        # the embedding master copy must be sharded over data (ZeRO-1):
+        emb = opt["m"]["embed"]
+        nshards = len({s.index for s in emb.addressable_shards})
+        assert nshards >= 4, nshards
+        print("OK", nshards)
+    """)
+    assert "OK" in out
+
+
+def test_abo_zo_trains_on_mesh():
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.configs import ARCHS, reduced
+        from repro.models.model import Model
+        from repro.train import steps as steps_mod
+        from repro.train.abo_zo import ABOZOConfig
+        from repro.launch.mesh import make_host_mesh
+        cfg = reduced(ARCHS["olmoe-1b-7b"])
+        model = Model(cfg)
+        mesh = make_host_mesh(model_parallel=2)
+        step, sh = steps_mod.make_train_step(
+            model, mesh, optimizer="abo_zo",
+            abo_cfg=ABOZOConfig(m_candidates=5, window=1e-3))
+        rng = np.random.RandomState(0)
+        with mesh:
+            params = jax.jit(model.init, out_shardings=sh["params"])(
+                jax.random.PRNGKey(0))
+            from repro.train import abo_zo
+            state = abo_zo.init_state(ABOZOConfig(m_candidates=5))
+            batch = {"tokens": jax.device_put(
+                jnp.asarray(rng.randint(0, cfg.vocab_size, (8, 17))),
+                jax.tree.leaves(sh["batch"])[0])}
+            losses = []
+            for i in range(3):
+                params, state, metrics = step(params, state, batch,
+                                              jax.random.PRNGKey(i))
+                losses.append(float(metrics["loss"]))
+        assert all(np.isfinite(losses)), losses
+        assert losses[-1] <= losses[0] + 1e-3, losses  # monotone (incumbent kept)
+        print("OK", losses)
+    """)
+    assert "OK" in out
+
+
+def test_elastic_restore_across_meshes(tmp_path):
+    """Save on a 4x2 mesh, restore on 2x2 (elastic downscale) — same values."""
+    out = _run(f"""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.configs import ARCHS, reduced
+        from repro.models.model import Model
+        from repro.checkpoint.manager import CheckpointManager
+        from repro.distributed.sharding import param_specs, named
+        from repro.launch.mesh import make_host_mesh
+        cfg = reduced(ARCHS["rwkv6-3b"])
+        model = Model(cfg)
+        mesh = make_host_mesh(model_parallel=2)
+        sh = named(param_specs(jax.eval_shape(
+            lambda: model.init(jax.random.PRNGKey(0))), mesh), mesh)
+        with mesh:
+            params = jax.jit(model.init, out_shardings=sh)(
+                jax.random.PRNGKey(0))
+        mgr = CheckpointManager({str(tmp_path)!r})
+        mgr.save(1, params)
+        # "restart" on a smaller mesh
+        mesh2 = jax.make_mesh((2, 2), ("data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 2,
+            devices=jax.devices()[:4])
+        sh2 = named(param_specs(jax.eval_shape(
+            lambda: model.init(jax.random.PRNGKey(0))), mesh2), mesh2)
+        restored = mgr.restore(1, params, sh2)
+        a = np.asarray(jax.tree.leaves(params)[0])
+        b = np.asarray(jax.tree.leaves(restored)[0])
+        np.testing.assert_array_equal(a, b)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_dryrun_machinery_small_mesh():
+    """The real dryrun path (run_cell) on an 8-device mesh, reduced arch."""
+    out = _run("""
+        import dataclasses
+        import repro.launch.dryrun as dr
+        from repro.configs import ARCHS, reduced
+        from repro.configs.base import ShapeCell
+        rcfg = dataclasses.replace(reduced(ARCHS["recurrentgemma-2b"]),
+                                   name="mini")
+        dr.ARCHS["mini"] = rcfg
+        cells = {"train_4k": ShapeCell("train_4k", 64, 8, "train"),
+                 "decode_32k": ShapeCell("decode_32k", 128, 8, "decode")}
+        dr.SHAPES.update(cells)
+        import repro.configs.registry as reg
+        reg.SHAPES.update(cells)
+        r1 = dr.run_cell("mini", "train_4k", multi_pod=False, verbose=False)
+        r2 = dr.run_cell("mini", "decode_32k", multi_pod=True, verbose=False)
+        assert r1["flops"] > 0 and r2["memory"]["peak_bytes"] > 0
+        print("OK")
+    """, mesh="4,2")
+    assert "OK" in out
+
+
+def test_decode_no_giant_collectives():
+    """Regression guard for §Perf 3/5: the decode step on a sharded cache
+    must not all-gather cache-sized tensors (the GQA-repeat bug class)."""
+    out = _run("""
+        import dataclasses, re
+        import repro.launch.dryrun as dr
+        from repro.configs import ARCHS
+        from repro.configs.base import ShapeCell
+        # full internlm2 geometry, shrunk layer count for speed
+        cfg = dataclasses.replace(ARCHS["internlm2-20b"], name="mini",
+                                  n_layers=4)
+        dr.ARCHS["mini"] = cfg
+        cells = {"decode_32k": ShapeCell("decode_32k", 8192, 16, "decode")}
+        dr.SHAPES.update(cells)
+        import repro.configs.registry as reg
+        reg.SHAPES.update(cells)
+        mesh = dr.make_production_mesh(multi_pod=False)
+        fn, args = dr.build_cell("mini", "decode_32k", mesh)
+        with mesh:
+            compiled = fn.lower(*args).compile()
+        biggest = 0
+        for line in compiled.as_text().splitlines():
+            s = line.strip()
+            for c in ("all-gather(", "all-reduce(", "all-to-all("):
+                i = s.find(" " + c)
+                if i > 0 and " = " in s[:i]:
+                    biggest = max(biggest,
+                                  dr._shape_bytes(s[:i].split(" = ", 1)[1]))
+        # cache shard is ~16 MiB here; a repeat-style bug gathers >100 MiB
+        assert biggest < 32 * 2**20, f"giant collective: {biggest/2**20} MiB"
+        print("OK", biggest)
+    """, mesh="4,2")
+    assert "OK" in out

@@ -1,0 +1,156 @@
+"""Per-arch smoke tests (reduced configs): one forward + one train step on
+CPU, output shapes + no NaNs; decode == forward consistency; family
+specifics (ring-buffer SWA, MoE losslessness, M-RoPE, enc-dec)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.models.model import Model
+from repro.optim.adamw import AdamWConfig, apply_update, init_state
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+def _batch(cfg, b, t, rng, with_labels=True):
+    batch = {"tokens": jnp.asarray(
+        rng.randint(0, cfg.vocab_size, (b, t + (1 if with_labels else 0))))}
+    if cfg.mrope:
+        pos = np.broadcast_to(np.arange(t), (b, t))
+        batch["positions"] = jnp.asarray(
+            np.broadcast_to(pos[:, None], (b, 3, t)).copy()).astype(jnp.int32)
+    if cfg.encoder_layers:
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(b, cfg.encoder_len, cfg.d_model))
+            .astype(np.float32))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward_shapes_no_nans(arch, rng):
+    cfg = reduced(ARCHS[arch])
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b, t = 2, 16
+    batch = _batch(cfg, b, t, rng, with_labels=False)
+    logits, aux = model.forward(params, batch["tokens"],
+                                positions=batch.get("positions"),
+                                frames=batch.get("frames"))
+    assert logits.shape == (b, t, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_train_step(arch, rng):
+    cfg = reduced(ARCHS[arch])
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, 2, 16, rng)
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch), has_aux=True)(params)
+        params, opt_state, gnorm = apply_update(
+            params, grads, opt_state, AdamWConfig(lr=1e-3))
+        return params, opt_state, loss, gnorm
+
+    opt_state = init_state(params)
+    l0 = None
+    for _ in range(3):
+        params, opt_state, loss, gnorm = step(params, opt_state, batch)
+        assert bool(jnp.isfinite(loss)), arch
+        assert bool(jnp.isfinite(gnorm)), arch
+        l0 = float(loss) if l0 is None else l0
+    assert float(loss) < l0 + 0.5      # no blowup over repeated steps
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_decode_matches_forward(arch, rng):
+    cfg = reduced(ARCHS[arch])
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    b, t = 2, 12
+    batch = _batch(cfg, b, t, rng, with_labels=False)
+    logits_full, _ = model.forward(params, batch["tokens"],
+                                   positions=batch.get("positions"),
+                                   frames=batch.get("frames"))
+    cache = model.init_cache(b, max_len=32, dtype=jnp.float32)
+    if cfg.encoder_layers:
+        cache = model.fill_cross_cache(params, cache, batch["frames"])
+    outs = []
+    for i in range(t):
+        lg, cache = model.decode_step(params, batch["tokens"][:, i:i + 1],
+                                      cache, jnp.asarray(i))
+        outs.append(lg[:, 0])
+    err = float(jnp.max(jnp.abs(logits_full - jnp.stack(outs, axis=1))))
+    assert err < 5e-3, (arch, err)
+
+
+def test_swa_ring_buffer_exactness(rng):
+    """Decode past the window: ring cache must equal full-seq SWA."""
+    cfg = reduced(ARCHS["h2o-danube-3-4b"])   # window=32 after reduction
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(2))
+    b, t = 1, 48                               # t > window
+    toks = jnp.asarray(rng.randint(0, cfg.vocab_size, (b, t)))
+    logits_full, _ = model.forward(params, toks)
+    cache = model.init_cache(b, max_len=cfg.window, dtype=jnp.float32)
+    outs = []
+    for i in range(t):
+        lg, cache = model.decode_step(params, toks[:, i:i + 1], cache,
+                                      jnp.asarray(i))
+        outs.append(lg[:, 0])
+    err = float(jnp.max(jnp.abs(logits_full - jnp.stack(outs, axis=1))))
+    assert err < 5e-3, err
+
+
+def test_moe_router_balance_loss(rng):
+    cfg = reduced(ARCHS["olmoe-1b-7b"])
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, 2, 16, rng)
+    loss, metrics = model.loss(params, batch)
+    assert float(metrics["aux"]) >= 1.0 - 1e-3   # E·Σ f·p >= 1 always
+
+
+def test_mrope_differs_from_plain_positions(rng):
+    cfg = reduced(ARCHS["qwen2-vl-7b"])
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b, t = 1, 8
+    toks = jnp.asarray(rng.randint(0, cfg.vocab_size, (b, t)))
+    text_pos = np.broadcast_to(np.arange(t), (b, t))
+    p_text = jnp.asarray(np.broadcast_to(text_pos[:, None], (b, 3, t)).copy(),
+                         dtype=jnp.int32)
+    # vision-style ids: distinct temporal/h/w streams
+    p_vis = np.stack([np.zeros((b, t)), np.tile(np.arange(t), (b, 1)),
+                      np.tile(np.arange(t)[::-1], (b, 1))], axis=1)
+    l1, _ = model.forward(params, toks, positions=p_text)
+    l2, _ = model.forward(params, toks,
+                          positions=jnp.asarray(p_vis, jnp.int32))
+    assert float(jnp.max(jnp.abs(l1 - l2))) > 1e-6
+
+
+def test_rwkv_long_context_state_is_constant_memory():
+    cfg = reduced(ARCHS["rwkv6-3b"])
+    model = Model(cfg)
+    c1 = model.init_cache(1, max_len=64, dtype=jnp.float32)
+    c2 = model.init_cache(1, max_len=4096, dtype=jnp.float32)
+    b1 = sum(x.size for x in jax.tree.leaves(c1))
+    b2 = sum(x.size for x in jax.tree.leaves(c2))
+    assert b1 == b2     # attention-free: state independent of seq_len
+
+
+def test_param_count_analytic_vs_actual():
+    for arch in ["mistral-nemo-12b", "olmoe-1b-7b", "rwkv6-3b",
+                 "whisper-small"]:
+        cfg = reduced(ARCHS[arch])
+        model = Model(cfg)
+        actual = sum(x.size for x in jax.tree.leaves(
+            model.init(jax.random.PRNGKey(0))))
+        analytic = cfg.n_params()
+        assert abs(actual - analytic) / actual < 0.15, \
+            (arch, actual, analytic)

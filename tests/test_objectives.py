@@ -1,0 +1,95 @@
+"""Objective algebra: stable eval == naive eval, O(1) probe == full recompute,
+streaming aggregates == direct sums (incl. hypothesis property tests)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.objectives import (GRIEWANK, OBJECTIVES, RASTRIGIN, SCHWEFEL_222,
+                              SHIFTED_SPHERE, SPHERE, griewank, griewank_naive)
+
+
+def test_griewank_known_values():
+    assert float(griewank(jnp.zeros(10))) == pytest.approx(0.0, abs=1e-6)
+    x = jnp.array([1.0, -2.0, 3.0, 0.5])
+    np.testing.assert_allclose(float(griewank(x)),
+                               float(griewank_naive(x)), rtol=1e-6)
+
+
+@pytest.mark.parametrize("d", [1, 7, 100, 1000])
+def test_griewank_stable_vs_naive(d, rng):
+    x = jnp.asarray(rng.uniform(-600, 600, d).astype(np.float32))
+    np.testing.assert_allclose(float(griewank(x)),
+                               float(griewank_naive(x)), rtol=2e-5)
+
+
+@pytest.mark.parametrize("obj", [GRIEWANK, SPHERE, RASTRIGIN, SCHWEFEL_222,
+                                 SHIFTED_SPHERE], ids=lambda o: o.name)
+def test_probe_equals_full_recompute(obj, rng):
+    n = 64
+    x = rng.uniform(obj.lower, obj.upper, n).astype(np.float32)
+    aggs = obj.aggregates(jnp.asarray(x))
+    idx = jnp.asarray([0, 13, 63])
+    cands = jnp.asarray(
+        rng.uniform(obj.lower, obj.upper, (3, 5)).astype(np.float32))
+    probed = obj.probe(aggs, idx, jnp.asarray(x)[idx], cands)
+    for b in range(3):
+        for m in range(5):
+            xm = x.copy()
+            xm[int(idx[b])] = float(cands[b, m])
+            full = float(obj.value(jnp.asarray(xm)))
+            np.testing.assert_allclose(full, float(probed[b, m]),
+                                       rtol=5e-4, atol=5e-5)
+
+
+def test_streaming_aggregates_match_direct(rng):
+    x = jnp.asarray(rng.uniform(-600, 600, 10_000).astype(np.float32))
+    direct = GRIEWANK.aggregates(x)
+    chunked = GRIEWANK.aggregates(x, chunk_size=999)   # non-dividing chunk
+    np.testing.assert_allclose(np.asarray(direct), np.asarray(chunked),
+                               rtol=1e-5)
+
+
+def test_aggregates_masking(rng):
+    x = rng.uniform(-5, 5, 100).astype(np.float32)
+    xp = np.concatenate([x, rng.uniform(-5, 5, 28).astype(np.float32)])
+    a = RASTRIGIN.aggregates(jnp.asarray(x))
+    b = RASTRIGIN.aggregates(jnp.asarray(xp), n_valid=100)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_relaxed_combine_endpoints(rng):
+    x = jnp.asarray(rng.uniform(-600, 600, 50).astype(np.float32))
+    aggs = GRIEWANK.aggregates(x)
+    f1 = float(GRIEWANK.combine_at(aggs, jnp.asarray(1.0)))
+    f_exact = float(GRIEWANK.combine(aggs))
+    np.testing.assert_allclose(f1, f_exact, rtol=1e-6)
+    f0 = float(GRIEWANK.combine_at(aggs, jnp.asarray(0.0)))
+    np.testing.assert_allclose(f0, float(aggs[0]), rtol=1e-6)  # pure S term
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests
+# ---------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(-600, 600, width=32), min_size=2, max_size=50),
+       st.integers(0, 49), st.floats(-600, 600, width=32))
+def test_probe_consistency_property(xs, i, c):
+    i = i % len(xs)
+    x = jnp.asarray(np.asarray(xs, np.float32))
+    aggs = GRIEWANK.aggregates(x)
+    probed = float(GRIEWANK.probe(aggs, jnp.asarray([i]), x[jnp.asarray([i])],
+                                  jnp.asarray([[c]], jnp.float32))[0, 0])
+    xm = np.asarray(xs, np.float32)
+    xm[i] = c
+    full = float(griewank(jnp.asarray(xm)))
+    assert abs(probed - full) <= 5e-4 * max(1.0, abs(full))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(-600, 600, width=32), min_size=1, max_size=64))
+def test_griewank_nonnegative_property(xs):
+    x = jnp.asarray(np.asarray(xs, np.float32))
+    # mathematical invariant: f >= 0 (allow tiny fp slack near optimum)
+    assert float(griewank(x)) >= -1e-4

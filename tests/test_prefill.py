@@ -1,0 +1,89 @@
+"""Prefill-with-cache: prefill(prompt) + decode_step(continuation) must
+equal full forward over the concatenation — for every cache family
+(full attn, SWA ring incl. wrap-around, RG-LRU, RWKV6, MoE)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.models.model import Model
+
+CACHE_FAMILIES = ["mistral-nemo-12b", "h2o-danube-3-4b", "recurrentgemma-2b",
+                  "rwkv6-3b", "olmoe-1b-7b"]
+
+
+@pytest.mark.parametrize("arch", CACHE_FAMILIES)
+def test_prefill_then_decode_matches_forward(arch, rng):
+    cfg = reduced(ARCHS[arch])
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(3))
+    b, t_prompt, t_gen = 2, 40, 6        # prompt > reduced SWA window (32)
+    max_len = 64
+    toks = jnp.asarray(
+        rng.randint(0, cfg.vocab_size, (b, t_prompt + t_gen)))
+
+    logits_full, _ = model.forward(params, toks)
+
+    logits_pre, cache = model.prefill(params, toks[:, :t_prompt],
+                                      max_len=max_len)
+    err_pre = float(jnp.max(jnp.abs(
+        logits_full[:, :t_prompt] - logits_pre)))
+    assert err_pre < 5e-3, (arch, "prefill logits", err_pre)
+
+    outs = []
+    for i in range(t_prompt, t_prompt + t_gen):
+        lg, cache = model.decode_step(params, toks[:, i:i + 1], cache,
+                                      jnp.asarray(i))
+        outs.append(lg[:, 0])
+    err_dec = float(jnp.max(jnp.abs(
+        logits_full[:, t_prompt:] - jnp.stack(outs, axis=1))))
+    assert err_dec < 5e-3, (arch, "decode continuation", err_dec)
+
+
+def test_prefill_ring_wraparound(rng):
+    """Prompt longer than the SWA ring: cache holds only the last window."""
+    cfg = reduced(ARCHS["h2o-danube-3-4b"])      # window = 32 reduced
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b, t_prompt = 1, 50                           # > window
+    toks = jnp.asarray(rng.randint(0, cfg.vocab_size, (b, t_prompt + 4)))
+    logits_full, _ = model.forward(params, toks)
+    _, cache = model.prefill(params, toks[:, :t_prompt],
+                             max_len=cfg.window)
+    outs = []
+    for i in range(t_prompt, t_prompt + 4):
+        lg, cache = model.decode_step(params, toks[:, i:i + 1], cache,
+                                      jnp.asarray(i))
+        outs.append(lg[:, 0])
+    err = float(jnp.max(jnp.abs(
+        logits_full[:, t_prompt:] - jnp.stack(outs, axis=1))))
+    assert err < 5e-3, err
+
+
+def test_int8_kv_cache_decode(rng):
+    """int8 KV quantization (§Perf 5): decode stays close to full precision."""
+    import dataclasses
+    cfg = reduced(ARCHS["mistral-nemo-12b"])
+    qcfg = dataclasses.replace(cfg, kv_quant="int8")
+    model, qmodel = Model(cfg), Model(qcfg)
+    params = model.init(jax.random.PRNGKey(4))
+    b, t = 2, 16
+    toks = jnp.asarray(rng.randint(0, cfg.vocab_size, (b, t)))
+    logits_full, _ = model.forward(params, toks)
+
+    cache = qmodel.init_cache(b, max_len=32, dtype=jnp.float32)
+    assert cache["groups"][0]["kv"]["k"].dtype == jnp.int8
+    outs = []
+    for i in range(t):
+        lg, cache = qmodel.decode_step(params, toks[:, i:i + 1], cache,
+                                       jnp.asarray(i))
+        outs.append(lg[:, 0])
+    logits_q = jnp.stack(outs, axis=1)
+    # int8 KV is lossy; logits must stay close and argmax mostly agree
+    rel = float(jnp.max(jnp.abs(logits_q - logits_full))
+                / (jnp.max(jnp.abs(logits_full)) + 1e-9))
+    agree = float(jnp.mean(
+        (jnp.argmax(logits_q, -1) == jnp.argmax(logits_full, -1))))
+    assert rel < 0.15, rel
+    assert agree > 0.9, agree

@@ -1,0 +1,79 @@
+"""Substrate-layer tests: data pipeline resumability, MoE chunk equivalence,
+sharding-hint no-op, AdamW behaviors."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCHS, reduced
+from repro.data.synthetic import BigramStream, StreamConfig
+from repro.distributed.hints import hint, sharding_rules
+from repro.models.model import Model
+from repro.optim.adamw import AdamWConfig, apply_update, init_state
+
+
+def test_stream_deterministic_and_resumable():
+    cfg = StreamConfig(vocab_size=64, seq_len=16, global_batch=4, seed=7)
+    s1, s2 = BigramStream(cfg), BigramStream(cfg)
+    # same cursor -> identical batch, from independent instances (resume)
+    np.testing.assert_array_equal(s1.batch(123), s2.batch(123))
+    assert not np.array_equal(s1.batch(123), s1.batch(124))
+
+
+def test_stream_has_learnable_structure():
+    cfg = StreamConfig(vocab_size=64, seq_len=64, global_batch=8, seed=0)
+    s = BigramStream(cfg)
+    b = s.batch(0)
+    # every transition must be one of the `branching` allowed successors
+    nxt = s.next_tokens
+    for row in b[:4]:
+        for a, bb in zip(row[:-1], row[1:]):
+            assert bb in nxt[a]
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 10_000))
+def test_stream_cursor_property(cursor):
+    cfg = StreamConfig(vocab_size=32, seq_len=8, global_batch=2, seed=1)
+    s = BigramStream(cfg)
+    np.testing.assert_array_equal(s.batch(cursor), s.batch(cursor))
+
+
+def test_moe_chunked_equals_full_when_no_drops(rng):
+    rcfg = reduced(ARCHS["olmoe-1b-7b"])
+    # capacity large enough that nothing drops in either dispatch scheme
+    full = dataclasses.replace(rcfg, moe_capacity_factor=8.0,
+                               moe_dispatch_chunk=None)
+    chunked = dataclasses.replace(rcfg, moe_capacity_factor=8.0,
+                                  moe_dispatch_chunk=8)
+    mA, mB = Model(full), Model(chunked)
+    params = mA.init(jax.random.PRNGKey(0))
+    toks = jnp.asarray(rng.randint(0, rcfg.vocab_size, (2, 16)))
+    lA, _ = mA.forward(params, toks)
+    lB, _ = mB.forward(params, toks)
+    assert float(jnp.max(jnp.abs(lA - lB))) < 1e-4
+
+
+def test_hint_noop_without_rules(rng):
+    x = jnp.asarray(rng.normal(size=(4, 4)).astype(np.float32))
+    np.testing.assert_array_equal(np.asarray(hint(x, "hidden")),
+                                  np.asarray(x))
+
+
+def test_adamw_grad_clip_and_decay(rng):
+    params = {"w": jnp.asarray(rng.normal(size=(8,)).astype(np.float32))}
+    state = init_state(params)
+    huge = {"w": jnp.full((8,), 1e6, jnp.float32)}
+    cfg = AdamWConfig(lr=1e-2, grad_clip=1.0, weight_decay=0.0)
+    new, state, gnorm = apply_update(params, huge, state, cfg)
+    # clipped update magnitude is bounded by lr · (1/eps-ish scale)
+    assert float(jnp.max(jnp.abs(new["w"] - params["w"]))) < 0.2
+    assert float(gnorm) > 1e5
+    # pure weight decay shrinks weights
+    zero = {"w": jnp.zeros((8,), jnp.float32)}
+    cfg2 = AdamWConfig(lr=1e-1, weight_decay=0.5)
+    p2 = {"w": jnp.ones((8,), jnp.float32)}
+    new2, _, _ = apply_update(p2, zero, init_state(p2), cfg2)
+    assert float(jnp.max(new2["w"])) < 1.0
