@@ -1,0 +1,93 @@
+"""Engine throughput: batched multi-tenant engine vs a sequential
+``abo_minimize`` loop at K ∈ {1, 8, 32}.
+
+    PYTHONPATH=src python -m benchmarks.engine_bench
+
+Emits the same ``name,us_per_call,derived`` CSV rows as benchmarks/run.py
+(also mounted there as ``--only engine``). "us_per_call" is per *job*;
+"derived" reports jobs/sec, probe-FE/sec, and the batched/sequential
+speedup. Both paths are warmed first so the comparison is steady-state
+compute + dispatch, not compile time.
+
+Workload: paper-default sampling (m=250 probes/coordinate) at n=100 — the
+exact Gauss-Seidel regime where each job is a coordinate-scan over (1, 50)
+tiles and a sequential abo_minimize loop is dominated by per-call dispatch
+and host-sync latency. That is precisely the workload class (many
+small/medium solves) the engine exists for: it packs jobs into (K, 1, m)
+tiles, fuses whole generations into one jitted call, and never syncs the
+host mid-flight. The headline sweep uses the sphere objective; the
+K=32 per-objective rows show the spread — transcendental-heavy objectives
+(griewank) are compute-bound on CPU and gain less from batching than
+dispatch-bound ones (sphere, rastrigin).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import ABOConfig, abo_minimize
+from repro.engine.jobs import JobSpec
+from repro.engine.scheduler import SolveEngine
+from repro.objectives import OBJECTIVES
+
+N = 100
+CFG = ABOConfig()
+OBJ = "sphere"
+KS = (1, 8, 32)
+MAX_LANES = 32
+REPEATS = 3
+
+
+def _sequential(obj: str, k: int, seed0: int) -> float:
+    t0 = time.perf_counter()
+    for i in range(k):
+        abo_minimize(OBJECTIVES[obj], N, config=CFG, seed=seed0 + i)
+    return time.perf_counter() - t0
+
+
+def _engine(obj: str, k: int, seed0: int) -> float:
+    eng = SolveEngine(lanes=min(k, MAX_LANES))
+    eng.submit_many(JobSpec(obj, N, CFG, seed=seed0 + i) for i in range(k))
+    t0 = time.perf_counter()
+    eng.run()
+    return time.perf_counter() - t0
+
+
+def _pair(obj: str, k: int):
+    """(sequential, batched) wall time for k jobs, best of REPEATS."""
+    dt_seq = min(_sequential(obj, k, seed0=1000 + r) for r in range(REPEATS))
+    dt_eng = min(_engine(obj, k, seed0=1000 + r) for r in range(REPEATS))
+    return dt_seq, dt_eng
+
+
+def _rows(tag: str, k: int, dt_seq: float, dt_eng: float):
+    fe = CFG.n_passes * CFG.samples_per_pass * N
+    yield (f"{tag}_seq_k{k}", dt_seq / k * 1e6,
+           f"jobs_per_s={k / dt_seq:.1f} fe_per_s={k * fe / dt_seq:.3g}")
+    yield (f"{tag}_batched_k{k}", dt_eng / k * 1e6,
+           f"jobs_per_s={k / dt_eng:.1f} fe_per_s={k * fe / dt_eng:.3g} "
+           f"speedup={dt_seq / dt_eng:.2f}x")
+
+
+def engine_vs_sequential(ks=KS):
+    _sequential(OBJ, 1, seed0=0)         # warm abo_minimize's jit cache
+    for k in ks:                         # warm the engine's compile caches
+        _engine(OBJ, k, seed0=0)
+    for k in ks:
+        dt_seq, dt_eng = _pair(OBJ, k)
+        yield from _rows(f"engine_{OBJ}", k, dt_seq, dt_eng)
+    # per-objective spread at the deepest queue
+    for obj in ("rastrigin", "griewank"):
+        _sequential(obj, 1, seed0=0)
+        _engine(obj, max(ks), seed0=0)
+        dt_seq, dt_eng = _pair(obj, max(ks))
+        yield from _rows(f"engine_{obj}", max(ks), dt_seq, dt_eng)
+
+
+def main():
+    print("name,us_per_call,derived")
+    for name, us, derived in engine_vs_sequential():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -19,7 +19,8 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (up to 1e9 decision variables)")
     ap.add_argument("--only", default=None,
-                    help="comma list: table1,table2,table3,kernels,abo_zo")
+                    help="comma list: table1,table2,table3,kernels,abo_zo,"
+                         "engine")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -44,6 +45,9 @@ def main() -> None:
     if want("abo_zo"):
         from benchmarks.abo_zo_train import abo_zo_vs_adamw
         rows += list(abo_zo_vs_adamw())
+    if want("engine"):
+        from benchmarks.engine_bench import engine_vs_sequential
+        rows += list(engine_vs_sequential())
 
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

@@ -40,15 +40,20 @@ class CheckpointManager:
         self._thread: threading.Thread | None = None
 
     # ------------------------------------------------------------------ save
-    def save(self, step: int, tree: Any, *, blocking: bool = True):
+    def save(self, step: int, tree: Any, *, blocking: bool = True,
+             aux: Any = None):
+        """``aux`` is an optional JSON-serializable sidecar stored inside the
+        manifest — it commits atomically with the array leaves, so callers
+        (e.g. the solve engine's job table) can't observe state/metadata
+        skew after a crash."""
         self.wait()               # at most one writer — never race a .tmp dir
         leaves, treedef = _flatten(tree)
         host_leaves = [np.asarray(x) for x in leaves]   # device -> host copy
         if blocking:
-            self._write(step, host_leaves, treedef)
+            self._write(step, host_leaves, treedef, aux)
         else:
             self._thread = threading.Thread(
-                target=self._write, args=(step, host_leaves, treedef),
+                target=self._write, args=(step, host_leaves, treedef, aux),
                 daemon=True)
             self._thread.start()
 
@@ -57,7 +62,7 @@ class CheckpointManager:
             self._thread.join()
             self._thread = None
 
-    def _write(self, step: int, leaves: list, treedef):
+    def _write(self, step: int, leaves: list, treedef, aux: Any = None):
         tmp = self.dir / f"step_{step:012d}.tmp"
         final = self.dir / f"step_{step:012d}"
         if tmp.exists():
@@ -73,6 +78,8 @@ class CheckpointManager:
             "dtypes": [str(l.dtype) for l in leaves],
             "committed": True,
         }
+        if aux is not None:
+            manifest["aux"] = aux
         (tmp / "manifest.json").write_text(json.dumps(manifest))
         if final.exists():
             shutil.rmtree(final)
@@ -99,6 +106,11 @@ class CheckpointManager:
             except (OSError, json.JSONDecodeError):
                 continue       # torn checkpoint -> ignore
         return best
+
+    def aux(self, step: int) -> Any:
+        """The JSON sidecar stored with ``save(..., aux=...)`` (or None)."""
+        path = self.dir / f"step_{step:012d}"
+        return json.loads((path / "manifest.json").read_text()).get("aux")
 
     def restore(self, step: int, like: Any, shardings: Any = None) -> Any:
         """Load into the structure of ``like`` (shapes validated); if

@@ -1,3 +1,8 @@
-from repro.core.abo import ABOConfig, ABOResult, abo_minimize, abo_minimize_blackbox
+from repro.core.abo import (ABOConfig, ABOResult, ABOState, abo_init,
+                            abo_make_state, abo_minimize,
+                            abo_minimize_blackbox, abo_pass_step,
+                            effective_config)
 
-__all__ = ["ABOConfig", "ABOResult", "abo_minimize", "abo_minimize_blackbox"]
+__all__ = ["ABOConfig", "ABOResult", "ABOState", "abo_init",
+           "abo_make_state", "abo_minimize", "abo_minimize_blackbox",
+           "abo_pass_step", "effective_config"]

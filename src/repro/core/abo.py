@@ -44,6 +44,22 @@ class ABOConfig:
     # "none": the paper-pure exact objective in every pass.
     coupling_schedule: str = "linear"
 
+    def __post_init__(self):
+        if self.samples_per_pass < 3:
+            raise ValueError(
+                f"samples_per_pass must be >= 3, got {self.samples_per_pass}: "
+                "m=2 degenerates the candidate grid's linspace to a single "
+                "point (the incumbent plus one fixed probe), so the window "
+                "never refines")
+        if self.n_passes < 1:
+            raise ValueError(
+                f"n_passes must be >= 1, got {self.n_passes}: ABO needs at "
+                "least the full-interval pass 0")
+        if self.block_size < 1:
+            raise ValueError(
+                f"block_size must be >= 1, got {self.block_size}: each Jacobi "
+                "tile must hold at least one coordinate")
+
     def resolved_shrink(self) -> float:
         if self.shrink is not None:
             return self.shrink
@@ -128,77 +144,78 @@ def _sweep_pass(obj, x, aggs, n_valid, half_width, pass_idx, lam, cfg,
     return x, aggs
 
 
+@functools.lru_cache(maxsize=None)
 def _default_probe_tile(obj):
+    # lru_cache keeps the closure's identity stable per objective so jitted
+    # callers (abo_minimize, the engine's compile cache) hit their caches
+    # across calls instead of recompiling per solve.
     def probe_tile(aggs, idx, xb, cands, lam):
         delta = obj.term_delta(idx, xb, cands)        # (B, m, A)
         return obj.combine_at(aggs + delta, lam), delta
     return probe_tile
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("obj", "n", "cfg", "probe_tile"),
-    donate_argnums=(0,),
-)
-def _abo_jit(x, obj, n, cfg, probe_tile, bounds=None):
-    aggs = obj.aggregates(x, n, chunk_size=1 << 20)
-    shrink = cfg.resolved_shrink()
+# --------------------------------------------------------------------------
+# Reentrant pass-level API. ``abo_init`` builds an ABOState; one call to
+# ``abo_pass_step`` advances it by exactly one pass. ``abo_minimize`` is a
+# fori_loop over the same step; the batched engine (repro.engine) vmaps it
+# across solve lanes — both paths execute identical per-pass math.
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class ABOState:
+    """Complete in-flight solver state at a pass boundary (a JAX pytree).
 
-    def pass_body(p, carry):
-        x, aggs, hist = carry
-        # fractional window after pass p-1 shrinks geometrically from the
-        # full range (0.5 = whole interval)
-        half_width = 0.5 * shrink ** p
-        if cfg.coupling_schedule == "linear" and cfg.n_passes > 1:
-            lam = (p / (cfg.n_passes - 1)).astype(aggs.dtype)
-        else:
-            lam = jnp.ones((), aggs.dtype)
-        x, aggs = _sweep_pass(obj, x, aggs, n, half_width, p, lam, cfg,
-                              probe_tile, bounds)
-        # re-sync aggregates exactly once per pass: kills accumulated-delta
-        # drift (one O(N) streaming scan per pass — amortized over m·N probes)
-        aggs = obj.aggregates(x, n, chunk_size=1 << 20)
-        hist = hist.at[p].set(obj.combine(aggs))
-        return (x, aggs, hist)
-
-    hist = jnp.zeros((cfg.n_passes,), aggs.dtype)
-    x, aggs, hist = jax.lax.fori_loop(0, cfg.n_passes, pass_body, (x, aggs, hist))
-    # One exact O(N) re-evaluation so the reported optimum carries no
-    # accumulated-delta rounding (drift itself is asserted small in tests).
-    f_exact = obj.combine(obj.aggregates(x, n, chunk_size=1 << 20))
-    return x, f_exact, hist
-
-
-def abo_minimize(
-    obj: SeparableObjective,
-    n: int,
-    *,
-    config: ABOConfig | None = None,
-    x0: jnp.ndarray | None = None,
-    dtype: Any = jnp.float32,
-    seed: int | None = None,
-    bounds: tuple[jnp.ndarray, jnp.ndarray] | None = None,
-) -> ABOResult:
-    """Minimize a separable objective with ABO.
-
-    Total live memory is one (padded) solution vector of ``n`` ``dtype``
-    elements plus an O(block_size × samples_per_pass) probe tile.
-
-    Init is the deterministic domain midpoint (the paper's determinism: pass
-    0 sweeps the full interval linearly regardless, so x0 only seeds the
-    incumbent column). Pass ``seed`` for a random feasible start — the
-    multimodality-robustness benchmarks use both (EXPERIMENTS.md).
+    Everything ABO needs to continue — and everything a checkpoint needs to
+    capture — lives here: the (padded) solution, the running aggregates, the
+    per-pass objective history, the next pass index, and the true coordinate
+    count (traced, so same-padded-n jobs can share a compiled executable).
     """
-    cfg = config or ABOConfig()
-    # Tiny problems get exact Gauss-Seidel coordinate descent (block=1):
-    # sequential commits resolve the product-term coupling that Jacobi tiles
-    # can miscoordinate on when a block spans most of the problem. At scale,
-    # Jacobi tiles are the paper's parallel variant (Eq. 7) and the coupling
-    # per block is O(block/N) — negligible.
+
+    x: jnp.ndarray          # (n_pad,) padded solution vector
+    aggs: jnp.ndarray       # (n_aggs,) running aggregates
+    hist: jnp.ndarray       # (n_passes,) objective after each pass
+    pass_idx: jnp.ndarray   # () int32, next pass to run
+    n_valid: jnp.ndarray    # () int32, true n (padding coords are frozen)
+
+
+jax.tree_util.register_dataclass(
+    ABOState,
+    data_fields=["x", "aggs", "hist", "pass_idx", "n_valid"],
+    meta_fields=[],
+)
+
+
+def effective_config(cfg: ABOConfig, n: int) -> ABOConfig:
+    """The block size actually used for an n-dimensional solve.
+
+    Tiny problems get exact Gauss-Seidel coordinate descent (block=1):
+    sequential commits resolve the product-term coupling that Jacobi tiles
+    can miscoordinate on when a block spans most of the problem. At scale,
+    Jacobi tiles are the paper's parallel variant (Eq. 7) and the coupling
+    per block is O(block/N) — negligible.
+    """
     bsz = 1 if n <= 128 else cfg.block_size
     if bsz != cfg.block_size:
         cfg = dataclasses.replace(cfg, block_size=bsz)
-    n_pad = -(-n // bsz) * bsz
+    return cfg
+
+
+def abo_make_state(obj: SeparableObjective, x: jnp.ndarray, n_valid,
+                   cfg: ABOConfig) -> ABOState:
+    """Pass-0 state from a (padded) start vector. Traceable — the engine
+    builds lane states inside its jitted place op with this."""
+    aggs = obj.aggregates(x, n_valid, chunk_size=1 << 20)
+    return ABOState(
+        x=x,
+        aggs=aggs,
+        hist=jnp.zeros((cfg.n_passes,), aggs.dtype),
+        pass_idx=jnp.zeros((), jnp.int32),
+        n_valid=jnp.asarray(n_valid, jnp.int32),
+    )
+
+
+def _init_x(obj, n, n_pad, x0, dtype, seed, bounds):
+    """The start vector + padded bounds (host-side, a handful of ops)."""
     bnds = None
     if bounds is not None:
         # the paper's s=3 case: two extra O(N) vectors, nothing else
@@ -224,6 +241,108 @@ def abo_minimize(
         else:
             x = jnp.full((n_pad,), obj.lower
                          + 0.6180339887 * (obj.upper - obj.lower), dtype)
+    return x, bnds
+
+
+def abo_init(
+    obj: SeparableObjective,
+    n: int,
+    *,
+    config: ABOConfig | None = None,
+    x0: jnp.ndarray | None = None,
+    dtype: Any = jnp.float32,
+    seed: int | None = None,
+    bounds: tuple[jnp.ndarray, jnp.ndarray] | None = None,
+) -> tuple[ABOState, ABOConfig, tuple[jnp.ndarray, jnp.ndarray] | None]:
+    """Build the pass-0 state for a solve.
+
+    Returns ``(state, cfg, padded_bounds)`` where ``cfg`` is the effective
+    (block-size-resolved) config — callers must thread that same cfg into
+    every ``abo_pass_step``.
+    """
+    cfg = effective_config(config or ABOConfig(), n)
+    n_pad = -(-n // cfg.block_size) * cfg.block_size
+    x, bnds = _init_x(obj, n, n_pad, x0, dtype, seed, bounds)
+    return abo_make_state(obj, x, n, cfg), cfg, bnds
+
+
+def abo_pass_step(
+    obj: SeparableObjective,
+    state: ABOState,
+    *,
+    config: ABOConfig,
+    probe_tile=None,
+    bounds: tuple[jnp.ndarray, jnp.ndarray] | None = None,
+) -> ABOState:
+    """Advance a solve by exactly one pass. Pure and traceable: safe under
+    jit, vmap (the engine's (K, B, m) batched tile), scan, and fori_loop.
+
+    ``state.pass_idx`` drives the shrink/continuation schedule, so lanes at
+    different passes can share one vmapped executable.
+    """
+    cfg = config
+    probe_tile = probe_tile or _default_probe_tile(obj)
+    p = state.pass_idx
+    # fractional window after pass p-1 shrinks geometrically from the
+    # full range (0.5 = whole interval)
+    half_width = 0.5 * cfg.resolved_shrink() ** p
+    if cfg.coupling_schedule == "linear" and cfg.n_passes > 1:
+        lam = (p / (cfg.n_passes - 1)).astype(state.aggs.dtype)
+    else:
+        lam = jnp.ones((), state.aggs.dtype)
+    x, aggs = _sweep_pass(obj, state.x, state.aggs, state.n_valid, half_width,
+                          p, lam, cfg, probe_tile, bounds)
+    # re-sync aggregates exactly once per pass: kills accumulated-delta
+    # drift (one O(N) streaming scan per pass — amortized over m·N probes)
+    aggs = obj.aggregates(x, state.n_valid, chunk_size=1 << 20)
+    hist = state.hist.at[p].set(obj.combine(aggs))
+    return ABOState(x=x, aggs=aggs, hist=hist, pass_idx=p + 1,
+                    n_valid=state.n_valid)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("obj", "n", "cfg", "probe_tile"),
+    donate_argnums=(0,),
+)
+def _abo_jit(x, obj, n, cfg, probe_tile, bounds=None):
+    state = abo_make_state(obj, x, n, cfg)
+
+    def pass_body(_, s):
+        return abo_pass_step(obj, s, config=cfg, probe_tile=probe_tile,
+                             bounds=bounds)
+
+    state = jax.lax.fori_loop(0, cfg.n_passes, pass_body, state)
+    # One exact O(N) re-evaluation so the reported optimum carries no
+    # accumulated-delta rounding (drift itself is asserted small in tests).
+    f_exact = obj.combine(
+        obj.aggregates(state.x, state.n_valid, chunk_size=1 << 20))
+    return state, f_exact
+
+
+def abo_minimize(
+    obj: SeparableObjective,
+    n: int,
+    *,
+    config: ABOConfig | None = None,
+    x0: jnp.ndarray | None = None,
+    dtype: Any = jnp.float32,
+    seed: int | None = None,
+    bounds: tuple[jnp.ndarray, jnp.ndarray] | None = None,
+) -> ABOResult:
+    """Minimize a separable objective with ABO.
+
+    Total live memory is one (padded) solution vector of ``n`` ``dtype``
+    elements plus an O(block_size × samples_per_pass) probe tile.
+
+    Init is the deterministic domain midpoint (the paper's determinism: pass
+    0 sweeps the full interval linearly regardless, so x0 only seeds the
+    incumbent column). Pass ``seed`` for a random feasible start — the
+    multimodality-robustness benchmarks use both (EXPERIMENTS.md).
+    """
+    cfg = effective_config(config or ABOConfig(), n)
+    n_pad = -(-n // cfg.block_size) * cfg.block_size
+    x, bnds = _init_x(obj, n, n_pad, x0, dtype, seed, bounds)
 
     if cfg.use_kernel:
         # the Pallas path implements the whole pass in-kernel (Gauss-Seidel
@@ -236,9 +355,10 @@ def abo_minimize(
         return abo_minimize_kernel(n, config=cfg, x0=x0, dtype=dtype)
 
     probe_tile = _default_probe_tile(obj)
-    x, fun, hist = _abo_jit(x, obj, n, cfg, probe_tile, bnds)
+    state, fun = _abo_jit(x, obj, n, cfg, probe_tile, bnds)
     fe = cfg.n_passes * cfg.samples_per_pass * n
-    return ABOResult(x=x[:n], fun=float(fun), fe=fe, history=hist, n=n, config=cfg)
+    return ABOResult(x=state.x[:n], fun=float(fun), fe=fe, history=state.hist,
+                     n=n, config=cfg)
 
 
 # --------------------------------------------------------------------------

@@ -83,9 +83,12 @@ def make_sharded_abo(
 
     def step(x_loc, aggs, pass_idx):
         # flattened linear device index over all mesh axes
+        # (jax < 0.5 has no lax.axis_size; psum(1, ax) is the classic form)
+        axis_size = getattr(jax.lax, "axis_size",
+                            lambda ax: jax.lax.psum(1, ax))
         dev = jnp.zeros((), jnp.int32)
         for ax in axes:
-            dev = dev * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+            dev = dev * axis_size(ax) + jax.lax.axis_index(ax)
         offset = dev.astype(jnp.int64 if jax.config.jax_enable_x64 else
                             jnp.int32) * shard
         if cfg.coupling_schedule == "linear" and cfg.n_passes > 1:
@@ -94,7 +97,9 @@ def make_sharded_abo(
             lam = jnp.ones((), aggs.dtype)
         half_width = 0.5 * cfg.resolved_shrink() ** pass_idx  # fractional
         # aggs enters replicated; local commits make it device-varying.
-        aggs_v = jax.lax.pcast(aggs, axes, to="varying")
+        # (jax < 0.7 has no lax.pcast / varying types — identity there)
+        pcast = getattr(jax.lax, "pcast", None)
+        aggs_v = pcast(aggs, axes, to="varying") if pcast else aggs
         x_loc, d_aggs = _local_pass(obj, cfg, probe_tile, x_loc, aggs_v,
                                     half_width, pass_idx, lam, offset, n)
         # O(1) traffic: one all-reduce of the n_aggs scalar deltas.

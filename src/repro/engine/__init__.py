@@ -1,0 +1,9 @@
+"""Batched multi-tenant solve engine: many concurrent ABO jobs through one
+jitted, vmapped sweep (see scheduler.SolveEngine for the step loop and
+batched.bucket_key for the compile-sharing contract)."""
+from repro.engine.jobs import CANCELLED, DONE, QUEUED, RUNNING, JobSpec, JobState
+from repro.engine.scheduler import LaneGroup, SolveEngine
+from repro.engine.service import SolveService
+
+__all__ = ["JobSpec", "JobState", "LaneGroup", "SolveEngine", "SolveService",
+           "QUEUED", "RUNNING", "DONE", "CANCELLED"]

@@ -1,0 +1,176 @@
+"""Vmapped batched ABO sweep + explicit compile cache.
+
+K same-bucket jobs are packed into one stacked :class:`ABOState` (leading
+lane axis K), and one jitted ``vmap(abo_pass_step)`` advances every lane by
+one pass — a single (K, B, m) probe tile per block instead of K separate
+(B, m) dispatches. Lanes carry their own ``pass_idx`` and ``n_valid``, so a
+freshly refilled lane (pass 0) rides in the same executable as a lane on its
+final pass, and jobs whose true n differs can share a bucket as long as they
+pad to the same n_pad.
+
+Bucketing: a *bucket* is (objective, n_pad, effective config, K, dtype) —
+everything that shapes the compiled executables. The explicit module-level
+cache maps bucket keys to a :class:`LaneOps` bundle of jitted functions so
+every lane group with the same shape shares one set of compiled programs
+for the life of the process (jax.jit would also cache, but only if closure
+identities stayed stable; the dict makes the sharing contract explicit and
+inspectable).
+
+Everything per-job-hot is jitted: placing a job into a lane (start vector +
+aggregates + scatter, one dispatch), stepping all K lanes (one dispatch per
+pass), and finalizing a finished lane (exact re-eval + gather, one
+dispatch). The scheduler never syncs the device mid-flight — lane progress
+is tracked host-side — so successive pass steps pipeline through JAX's
+async dispatch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.abo import (ABOConfig, ABOState, _default_probe_tile,
+                            abo_make_state, abo_pass_step, effective_config)
+from repro.objectives.base import SeparableObjective, _default_agg_dtype
+
+# bucket key -> LaneOps (jitted step/place/finalize for that shape)
+_COMPILE_CACHE: dict[tuple, "LaneOps"] = {}
+
+
+def bucket_key(obj_name: str, n: int, cfg: ABOConfig, k: int,
+               dtype=jnp.float32) -> tuple:
+    """Compile-sharing key for an n-dimensional job on a K-lane group."""
+    eff = effective_config(cfg, n)
+    n_pad = -(-n // eff.block_size) * eff.block_size
+    return (obj_name, n_pad, eff, k, jnp.dtype(dtype).name)
+
+
+def padded_n(key: tuple) -> int:
+    return key[1]
+
+
+def key_config(key: tuple) -> ABOConfig:
+    return key[2]
+
+
+@dataclasses.dataclass(frozen=True)
+class LaneOps:
+    """Jitted per-bucket operations over a stacked K-lane ABOState.
+
+    ``place_many``/``finalize_many`` are whole-group ops — one dispatch no
+    matter how many lanes turn over in a step — so per-job host overhead is
+    O(1/K). ``step_r(r)`` returns a step that advances ``r`` passes in one
+    jitted fori_loop; the scheduler fuses a full generation when every
+    active lane has >= r passes left.
+    """
+
+    step: Callable          # (batch_state) -> batch_state: one pass
+    step_r: Callable        # (r: int) -> jitted r-pass step (cached)
+    step_compact: Callable  # (r, w) -> jitted (bs, lane_idx (w,)) step that
+    #                         gathers w lanes, runs r passes, scatters back —
+    #                         partially-filled groups skip idle-lane compute
+    place_x: Callable       # (batch_state, lane, x, n_valid) -> batch_state
+    place_many: Callable    # (batch_state, mask, seeded, seeds, n_valid)
+    finalize_many: Callable  # (batch_state) -> (f (K,), x (K,n_pad), hist)
+
+
+def get_lane_ops(obj: SeparableObjective, key: tuple) -> LaneOps:
+    ops = _COMPILE_CACHE.get(key)
+    if ops is None:
+        _, n_pad, cfg, _, dtype_name = key
+        dt = jnp.dtype(dtype_name)
+        probe_tile = _default_probe_tile(obj)
+
+        def one_pass(bs: ABOState) -> ABOState:
+            return jax.vmap(
+                lambda s: abo_pass_step(obj, s, config=cfg,
+                                        probe_tile=probe_tile)
+            )(bs)
+
+        step_cache: dict[tuple, Callable] = {}
+
+        def step_r(r: int) -> Callable:
+            fn = step_cache.get((r, None))
+            if fn is None:
+                fn = jax.jit(lambda bs: jax.lax.fori_loop(
+                    0, r, lambda _, s: one_pass(s), bs))
+                step_cache[(r, None)] = fn
+            return fn
+
+        def step_compact(r: int, w: int) -> Callable:
+            fn = step_cache.get((r, w))
+            if fn is None:
+                def run(bs: ABOState, lane_idx) -> ABOState:
+                    sub = jax.tree_util.tree_map(lambda a: a[lane_idx], bs)
+                    sub = jax.lax.fori_loop(0, r, lambda _, s: one_pass(s),
+                                            sub)
+                    return jax.tree_util.tree_map(
+                        lambda a, s: a.at[lane_idx].set(s), bs, sub)
+                fn = jax.jit(run)
+                step_cache[(r, w)] = fn
+            return fn
+
+        def place_x(bs: ABOState, lane, x, n_valid) -> ABOState:
+            lane_state = abo_make_state(obj, x.astype(dt), n_valid, cfg)
+            return jax.tree_util.tree_map(
+                lambda b, s: b.at[lane].set(s.astype(b.dtype)), bs,
+                lane_state)
+
+        def place_many(bs: ABOState, mask, seeded, seeds,
+                       n_valid) -> ABOState:
+            """Re-initialize every lane where ``mask``; seeded lanes start
+            from their PRNG stream (identical bits to abo_minimize's seeded
+            start — the PRNG is counter-based, so tracing doesn't change
+            it), the rest from the deterministic golden-section point."""
+            def init_lane(seed, is_seeded, nv):
+                xs = jax.random.uniform(jax.random.PRNGKey(seed), (n_pad,),
+                                        dtype=dt, minval=obj.lower,
+                                        maxval=obj.upper)
+                xg = jnp.full((n_pad,), obj.lower + 0.6180339887
+                              * (obj.upper - obj.lower), dt)
+                return abo_make_state(obj, jnp.where(is_seeded, xs, xg),
+                                      nv, cfg)
+
+            fresh = jax.vmap(init_lane)(seeds, seeded, n_valid)
+            return jax.tree_util.tree_map(
+                lambda f, b: jnp.where(
+                    jnp.reshape(mask, mask.shape + (1,) * (f.ndim - 1)),
+                    f.astype(b.dtype), b),
+                fresh, bs)
+
+        def finalize_many(bs: ABOState):
+            # same exact O(N) re-evaluation abo_minimize reports — the
+            # result carries no accumulated-delta rounding
+            f = jax.vmap(lambda x, nv: obj.combine(
+                obj.aggregates(x, nv, chunk_size=1 << 20)))(bs.x, bs.n_valid)
+            return f, bs.x, bs.hist
+
+        ops = LaneOps(step=step_r(1), step_r=step_r,
+                      step_compact=step_compact,
+                      place_x=jax.jit(place_x),
+                      place_many=jax.jit(place_many),
+                      finalize_many=jax.jit(finalize_many))
+        _COMPILE_CACHE[key] = ops
+    return ops
+
+
+def compile_cache_size() -> int:
+    return len(_COMPILE_CACHE)
+
+
+def zeros_batch_state(obj: SeparableObjective, key: tuple) -> ABOState:
+    """An all-idle K-lane stacked state (also the checkpoint-restore
+    ``like`` tree). Idle lanes hold a benign dummy solve: x=0 is feasible
+    for every registered objective, and n_valid=n_pad keeps the masked
+    sweep well-defined."""
+    _, n_pad, cfg, k, dtype = key
+    agg_dt = _default_agg_dtype()
+    return ABOState(
+        x=jnp.zeros((k, n_pad), jnp.dtype(dtype)),
+        aggs=jnp.zeros((k, obj.n_aggs), agg_dt),
+        hist=jnp.zeros((k, cfg.n_passes), agg_dt),
+        pass_idx=jnp.zeros((k,), jnp.int32),
+        n_valid=jnp.full((k,), n_pad, jnp.int32),
+    )

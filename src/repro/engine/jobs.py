@@ -1,0 +1,148 @@
+"""Job model for the batched multi-tenant solve engine.
+
+A *job* is one ABO solve request: objective name, dimensionality, config,
+and an optional seed/x0. The engine (repro.engine.scheduler) owns a table of
+``JobState`` records and drives the QUEUED -> RUNNING -> DONE lifecycle;
+CANCELLED short-circuits it at any point before completion.
+
+Both classes round-trip through plain JSON dicts — that is what lets the
+checkpoint aux sidecar capture the whole job table atomically with the
+in-flight solver arrays, and what the service front-end speaks over the
+wire.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from repro.core.abo import ABOConfig, ABOResult
+
+QUEUED = "queued"
+RUNNING = "running"
+DONE = "done"
+CANCELLED = "cancelled"
+STATUSES = (QUEUED, RUNNING, DONE, CANCELLED)
+
+
+@dataclasses.dataclass(frozen=True)
+class JobSpec:
+    """What to solve. Frozen + hashable so bucket keys can embed configs."""
+
+    objective: str                   # name in repro.objectives.OBJECTIVES
+    n: int                           # number of decision variables
+    config: ABOConfig = dataclasses.field(default_factory=ABOConfig)
+    seed: int | None = None          # random feasible start
+    x0: tuple[float, ...] | None = None   # explicit start (overrides seed)
+    tag: str = ""                    # free-form client label
+
+    def __post_init__(self):
+        if not isinstance(self.config, ABOConfig):
+            # reject early: a str/list here would otherwise surface as an
+            # AttributeError deep inside the engine's step loop
+            raise ValueError(
+                f"config must be an ABOConfig (or a dict via from_dict), "
+                f"got {type(self.config).__name__}")
+        if self.n < 1:
+            raise ValueError(f"n must be >= 1, got {self.n}")
+        if self.x0 is not None and len(self.x0) != self.n:
+            raise ValueError(
+                f"x0 has {len(self.x0)} entries for an n={self.n} job")
+
+    def to_dict(self) -> dict:
+        d = {"objective": self.objective, "n": self.n,
+             "config": dataclasses.asdict(self.config), "tag": self.tag}
+        if self.seed is not None:
+            d["seed"] = self.seed
+        if self.x0 is not None:
+            d["x0"] = list(self.x0)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "JobSpec":
+        cfg = d.get("config")
+        if isinstance(cfg, dict):
+            try:
+                cfg = ABOConfig(**cfg)
+            except TypeError as e:      # unknown keys -> clear client error
+                raise ValueError(f"bad config: {e}") from e
+        elif cfg is not None and not isinstance(cfg, ABOConfig):
+            raise ValueError(
+                f"config must be a dict of ABOConfig fields, "
+                f"got {type(cfg).__name__}")
+        x0 = d.get("x0")
+        return cls(objective=d["objective"], n=int(d["n"]),
+                   config=cfg or ABOConfig(),
+                   seed=d.get("seed"),
+                   x0=tuple(float(v) for v in x0) if x0 is not None else None,
+                   tag=d.get("tag", ""))
+
+
+@dataclasses.dataclass
+class JobState:
+    """Engine-side record: spec + lifecycle + (once DONE) the result."""
+
+    job_id: str
+    spec: JobSpec
+    status: str = QUEUED
+    passes_done: int = 0
+    history: list[float] = dataclasses.field(default_factory=list)
+    fun: float | None = None
+    x: np.ndarray | None = None      # final solution (DONE only)
+
+    @property
+    def n_passes(self) -> int:
+        return self.spec.config.n_passes
+
+    def poll_dict(self) -> dict:
+        """Cheap status snapshot (no solution vector) for poll responses."""
+        d = {"job_id": self.job_id, "status": self.status,
+             "passes_done": self.passes_done, "n_passes": self.n_passes,
+             "objective": self.spec.objective, "n": self.spec.n,
+             "tag": self.spec.tag}
+        if self.fun is not None:
+            d["fun"] = self.fun
+        return d
+
+    def result(self) -> ABOResult:
+        if self.status != DONE:
+            raise RuntimeError(
+                f"job {self.job_id} is {self.status}, not {DONE}")
+        cfg = self.spec.config
+        return ABOResult(x=self.x, fun=self.fun,
+                         fe=cfg.n_passes * cfg.samples_per_pass * self.spec.n,
+                         history=np.asarray(self.history), n=self.spec.n,
+                         config=cfg)
+
+    # ---- checkpoint (de)serialization -----------------------------------
+    # Bound on DONE-job solution vectors carried in the aux JSON sidecar:
+    # bigger results are dropped from snapshots (fun/history survive; the
+    # solution itself is only lost if the process dies AFTER the job
+    # finished and BEFORE the client fetched it).
+    AUX_X_MAX_N = 65536
+
+    def to_dict(self) -> dict:
+        d = {"job_id": self.job_id, "spec": self.spec.to_dict(),
+             "status": self.status, "passes_done": self.passes_done,
+             "history": [float(v) for v in self.history]}
+        if self.fun is not None:
+            d["fun"] = self.fun
+        if self.x is not None and self.x.size <= self.AUX_X_MAX_N:
+            d["x"] = np.asarray(self.x, np.float64).tolist()
+            d["x_dtype"] = str(np.asarray(self.x).dtype)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "JobState":
+        x = d.get("x")
+        if x is not None:
+            x = np.asarray(x, np.dtype(d.get("x_dtype", "float32")))
+        return cls(job_id=d["job_id"], spec=JobSpec.from_dict(d["spec"]),
+                   status=d["status"], passes_done=d.get("passes_done", 0),
+                   history=list(d.get("history", [])), fun=d.get("fun"),
+                   x=x)
+
+
+def next_job_id(counter: int) -> str:
+    return f"job-{counter:06d}"

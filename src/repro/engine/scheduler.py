@@ -1,0 +1,339 @@
+"""Slot-based continuous batching of ABO solve lanes.
+
+The engine owns a fixed budget of ``lanes`` concurrent solves. Jobs are
+bucketed by compiled shape (see batched.bucket_key); each bucket gets a
+K-lane group driven by one jitted vmapped pass step. Between steps, lanes
+whose job has run all its passes are finalized and immediately refilled from
+the queue — the swap-finished-jobs-between-steps pattern of
+``launch/serve.py``, at pass granularity instead of token granularity.
+
+Every lane advances exactly one pass per step, so job progress is tracked
+host-side (``JobState.passes_done``) and the step loop never reads device
+memory: pass steps pipeline through JAX's async dispatch, and the engine
+only syncs when a job finishes (its exact final objective) or a checkpoint
+is cut.
+
+Fault tolerance: with a ``checkpoint_dir``, the engine snapshots every
+``ckpt_every`` steps — the stacked lane states as array leaves, and the job
+table / queue / bucket map as the manifest's aux JSON — in one atomic
+CheckpointManager commit. ``SolveEngine.resume(dir)`` rebuilds the whole
+engine mid-solve; because snapshots land on pass boundaries and every pass
+is deterministic, a killed-and-resumed engine reproduces an uninterrupted
+run's results exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Iterable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.abo import ABOConfig, ABOState
+from repro.engine import batched
+from repro.engine.jobs import (CANCELLED, DONE, QUEUED, RUNNING, JobSpec,
+                               JobState, next_job_id)
+from repro.objectives import OBJECTIVES
+from repro.objectives.base import SeparableObjective
+
+
+@dataclasses.dataclass
+class LaneGroup:
+    """One bucket's K solve lanes: stacked state + lane -> job binding."""
+
+    key: tuple
+    obj: SeparableObjective
+    state: ABOState                      # stacked, leading dim K
+    job_ids: list[str | None]            # per-lane binding (None = idle)
+
+    @property
+    def active(self) -> int:
+        return sum(j is not None for j in self.job_ids)
+
+    def free_lane(self) -> int | None:
+        for i, j in enumerate(self.job_ids):
+            if j is None:
+                return i
+        return None
+
+
+class SolveEngine:
+    """Serve many concurrent ABO jobs through shared jitted sweeps.
+
+    Usage::
+
+        eng = SolveEngine(lanes=8)
+        jid = eng.submit(JobSpec("griewank", 1000, seed=0))
+        eng.run()                  # or step() from your own loop
+        res = eng.result(jid)      # an ABOResult, same as abo_minimize's
+    """
+
+    def __init__(self, *, lanes: int = 8, dtype: Any = jnp.float32,
+                 objectives: dict[str, SeparableObjective] | None = None,
+                 checkpoint_dir: str | None = None, ckpt_every: int = 1,
+                 keep: int = 3, max_fuse: int | None = None):
+        if lanes < 1:
+            raise ValueError(f"lanes must be >= 1, got {lanes}")
+        self.lanes = lanes
+        # cap on passes fused into one jitted call per step (None = fuse
+        # whole generations); 1 restores strict pass-per-step stepping,
+        # which is also the finest checkpoint/refill granularity
+        self.max_fuse = max_fuse
+        self.dtype = dtype
+        self.objectives = dict(objectives or OBJECTIVES)
+        self.jobs: dict[str, JobState] = {}
+        self.queue: deque[str] = deque()
+        self.groups: dict[tuple, LaneGroup] = {}
+        self.step_count = 0
+        self._next = 0
+        self.ckpt = (CheckpointManager(checkpoint_dir, keep=keep)
+                     if checkpoint_dir else None)
+        self.ckpt_every = max(ckpt_every, 1)
+
+    # ------------------------------------------------------------- client API
+    def submit(self, spec: JobSpec) -> str:
+        if spec.objective not in self.objectives:
+            raise KeyError(
+                f"unknown objective {spec.objective!r}; registered: "
+                f"{sorted(self.objectives)}")
+        job_id = next_job_id(self._next)
+        self._next += 1
+        self.jobs[job_id] = JobState(job_id=job_id, spec=spec)
+        self.queue.append(job_id)
+        return job_id
+
+    def poll(self, job_id: str) -> dict:
+        return self.jobs[job_id].poll_dict()
+
+    def result(self, job_id: str):
+        return self.jobs[job_id].result()
+
+    def cancel(self, job_id: str) -> bool:
+        rec = self.jobs[job_id]
+        if rec.status == QUEUED:
+            rec.status = CANCELLED
+            return True
+        if rec.status == RUNNING:
+            group, lane = self._locate(job_id)
+            if group is not None:
+                group.job_ids[lane] = None   # lane is refilled next step;
+            rec.status = CANCELLED           # stale device state is benign
+            return True
+        return False                     # already DONE/CANCELLED
+
+    # --------------------------------------------------------------- stepping
+    @property
+    def active_lanes(self) -> int:
+        return sum(g.active for g in self.groups.values())
+
+    def pending(self) -> bool:
+        return self.active_lanes > 0 or any(
+            self.jobs[j].status == QUEUED for j in self.queue)
+
+    def step(self) -> int:
+        """Refill idle lanes, advance every active bucket by one fused
+        chunk of passes, harvest finished lanes. Returns the number of jobs
+        completed.
+
+        Per active bucket the chunk is ``r = min`` remaining passes over
+        its lanes — a full generation when lanes are phase-aligned (the
+        steady state after a group refill), one pass when a fresh job rides
+        alongside nearly-finished ones. Either way no lane overshoots its
+        job's pass budget, so per-job math is untouched.
+        """
+        self._refill()
+        finished = 0
+        for group in self.groups.values():
+            if group.active == 0:
+                continue
+            ops = batched.get_lane_ops(group.obj, group.key)
+            cfg = batched.key_config(group.key)
+            remaining = [cfg.n_passes - self.jobs[j].passes_done
+                         for j in group.job_ids if j is not None]
+            r = max(min(remaining), 1)
+            if self.max_fuse is not None:
+                r = min(r, self.max_fuse)
+            active = [i for i, j in enumerate(group.job_ids)
+                      if j is not None]
+            w = 1 << (len(active) - 1).bit_length()   # pow2-bucketed width
+            if w < self.lanes:
+                # partially filled group: gather the active lanes (padded
+                # to w with idle ones) so idle lanes cost no compute
+                idx = active + [i for i, j in enumerate(group.job_ids)
+                                if j is None][:w - len(active)]
+                group.state = ops.step_compact(r, w)(
+                    group.state, jnp.asarray(idx, jnp.int32))
+            else:
+                group.state = ops.step_r(r)(group.state)
+            for job_id in group.job_ids:
+                if job_id is not None:
+                    self.jobs[job_id].passes_done += r
+            finished += self._harvest(group, ops)
+        self.step_count += 1
+        if self.ckpt is not None and self.step_count % self.ckpt_every == 0:
+            self._snapshot()
+        return finished
+
+    def run(self, max_steps: int | None = None) -> int:
+        """Drain the queue. Returns total jobs completed."""
+        done = 0
+        while self.pending():
+            done += self.step()
+            if max_steps is not None and self.step_count >= max_steps:
+                break
+        return done
+
+    def submit_many(self, specs: Iterable[JobSpec]) -> list[str]:
+        return [self.submit(s) for s in specs]
+
+    # -------------------------------------------------------------- internals
+    def _locate(self, job_id: str) -> tuple[LaneGroup | None, int]:
+        for group in self.groups.values():
+            if job_id in group.job_ids:
+                return group, group.job_ids.index(job_id)
+        return None, -1
+
+    def _refill(self):
+        # Stage lane bindings first, then write every group's new lanes in
+        # ONE jitted place_many dispatch — refilling 8 lanes costs the same
+        # host overhead as refilling one.
+        staged: dict[tuple, list[tuple[int, JobState]]] = {}
+        while self.queue and self.active_lanes < self.lanes:
+            job_id = self.queue.popleft()
+            rec = self.jobs[job_id]
+            if rec.status != QUEUED:     # cancelled while queued
+                continue
+            spec = rec.spec
+            obj = self.objectives[spec.objective]
+            key = batched.bucket_key(spec.objective, spec.n, spec.config,
+                                     self.lanes, self.dtype)
+            group = self.groups.get(key)
+            if group is None:
+                group = LaneGroup(key=key, obj=obj,
+                                  state=batched.zeros_batch_state(obj, key),
+                                  job_ids=[None] * self.lanes)
+                self.groups[key] = group
+            lane = group.free_lane()
+            assert lane is not None      # K == lane budget, so never full
+            group.job_ids[lane] = rec.job_id
+            rec.passes_done = 0
+            rec.status = RUNNING
+            staged.setdefault(key, []).append((lane, rec))
+        for key, placed in staged.items():
+            group = self.groups[key]
+            ops = batched.get_lane_ops(group.obj, key)
+            k = self.lanes
+            mask = np.zeros((k,), bool)
+            seeded = np.zeros((k,), bool)
+            seeds = np.zeros((k,), np.int32)
+            n_valid = np.full((k,), batched.padded_n(key), np.int32)
+            x0_jobs = []
+            for lane, rec in placed:
+                spec = rec.spec
+                if spec.x0 is not None:
+                    x0_jobs.append((lane, spec))
+                    continue
+                mask[lane] = True
+                n_valid[lane] = spec.n
+                if spec.seed is not None:
+                    seeded[lane] = True
+                    seeds[lane] = spec.seed
+            if mask.any():
+                group.state = ops.place_many(group.state, mask, seeded,
+                                             seeds, n_valid)
+            for lane, spec in x0_jobs:   # explicit-x0 jobs: rare, per-lane
+                x = jnp.zeros((batched.padded_n(key),), self.dtype) \
+                    .at[:spec.n].set(jnp.asarray(spec.x0, self.dtype))
+                group.state = ops.place_x(group.state, lane, x, spec.n)
+
+    def _harvest(self, group: LaneGroup, ops: batched.LaneOps) -> int:
+        cfg = batched.key_config(group.key)
+        fins = [(lane, self.jobs[jid])
+                for lane, jid in enumerate(group.job_ids)
+                if jid is not None
+                and self.jobs[jid].passes_done >= cfg.n_passes]
+        if not fins:
+            return 0
+        # one dispatch + one device sync for every finished lane at once
+        f_all, x_all, hist_all = ops.finalize_many(group.state)
+        f_np = np.asarray(f_all)
+        x_np = np.asarray(x_all)
+        h_np = np.asarray(hist_all)
+        for lane, rec in fins:
+            rec.fun = float(f_np[lane])
+            rec.x = x_np[lane, :rec.spec.n].copy()
+            rec.history = [float(v) for v in h_np[lane]]
+            rec.status = DONE
+            group.job_ids[lane] = None   # lane free; refilled next step
+        return len(fins)
+
+    # ------------------------------------------------------------ checkpoint
+    def snapshot(self):
+        """Cut a checkpoint now (e.g. right after enqueueing a batch, so a
+        kill before the first step's snapshot can't lose the queue)."""
+        if self.ckpt is None:
+            raise RuntimeError("engine has no checkpoint_dir")
+        self._snapshot()
+
+    def _snapshot(self):
+        tree = {f"g{i:03d}": g.state
+                for i, g in enumerate(self.groups.values())}
+        aux = {
+            "version": 1,
+            "lanes": self.lanes,
+            "max_fuse": self.max_fuse,
+            "dtype": jnp.dtype(self.dtype).name,
+            "step_count": self.step_count,
+            "next": self._next,
+            "queue": list(self.queue),
+            "jobs": {jid: rec.to_dict() for jid, rec in self.jobs.items()},
+            "groups": [{"objective": g.key[0], "n_pad": g.key[1],
+                        "config": dataclasses.asdict(g.key[2]),
+                        "k": g.key[3], "dtype": g.key[4],
+                        "job_ids": g.job_ids}
+                       for g in self.groups.values()],
+        }
+        self.ckpt.save(self.step_count, tree, aux=aux)
+
+    @classmethod
+    def resume(cls, checkpoint_dir: str, *,
+               objectives: dict[str, SeparableObjective] | None = None,
+               keep: int = 3, ckpt_every: int = 1) -> "SolveEngine":
+        """Rebuild an engine (jobs, queue, and mid-solve lane states) from
+        the newest committed checkpoint in ``checkpoint_dir``. With no
+        checkpoint present, returns a fresh empty engine."""
+        probe = CheckpointManager(checkpoint_dir, keep=keep)
+        step = probe.latest_step()
+        if step is None:
+            return cls(checkpoint_dir=checkpoint_dir, keep=keep,
+                       ckpt_every=ckpt_every, objectives=objectives)
+        aux = probe.aux(step)
+        if aux is None:
+            raise RuntimeError(
+                f"checkpoint step {step} in {checkpoint_dir} has no engine "
+                "aux metadata — not a SolveEngine checkpoint")
+        eng = cls(lanes=aux["lanes"], dtype=jnp.dtype(aux["dtype"]),
+                  objectives=objectives, checkpoint_dir=checkpoint_dir,
+                  ckpt_every=ckpt_every, keep=keep,
+                  max_fuse=aux.get("max_fuse"))
+        eng.step_count = aux["step_count"]
+        eng._next = aux["next"]
+        eng.jobs = {jid: JobState.from_dict(d)
+                    for jid, d in aux["jobs"].items()}
+        eng.queue = deque(aux["queue"])
+        like = {}
+        metas = []
+        for i, g in enumerate(aux["groups"]):
+            obj = eng.objectives[g["objective"]]
+            key = (g["objective"], g["n_pad"], ABOConfig(**g["config"]),
+                   g["k"], g["dtype"])
+            like[f"g{i:03d}"] = batched.zeros_batch_state(obj, key)
+            metas.append((key, obj, g["job_ids"]))
+        tree = probe.restore(step, like) if like else {}
+        for i, (key, obj, job_ids) in enumerate(metas):
+            eng.groups[key] = LaneGroup(key=key, obj=obj,
+                                        state=tree[f"g{i:03d}"],
+                                        job_ids=list(job_ids))
+        return eng

@@ -1,0 +1,65 @@
+"""Thin dict-in/dict-out front-end over :class:`SolveEngine`.
+
+This is the boundary a wire protocol (CLI, HTTP, RPC) talks to: every
+method takes and returns JSON-serializable payloads, never JAX objects.
+``repro.launch.solve_server`` mounts it behind argparse and an optional
+demo HTTP listener; ``examples/solve_service.py`` drives it in-process.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.engine.jobs import DONE, JobSpec
+from repro.engine.scheduler import SolveEngine
+
+
+class SolveService:
+    def __init__(self, engine: SolveEngine | None = None, **engine_kw):
+        self.engine = engine or SolveEngine(**engine_kw)
+
+    # ------------------------------------------------------------- endpoints
+    def submit(self, request: dict) -> dict:
+        """request: {objective, n, config?: {...}, seed?, x0?, tag?}"""
+        spec = JobSpec.from_dict(request)
+        job_id = self.engine.submit(spec)
+        return {"job_id": job_id, "status": self.engine.jobs[job_id].status}
+
+    def poll(self, job_id: str) -> dict:
+        if job_id not in self.engine.jobs:
+            return {"job_id": job_id, "error": "unknown job"}
+        return self.engine.poll(job_id)
+
+    def result(self, job_id: str) -> dict:
+        if job_id not in self.engine.jobs:
+            return {"job_id": job_id, "error": "unknown job"}
+        rec = self.engine.jobs[job_id]
+        if rec.status != DONE:
+            return {"job_id": job_id, "status": rec.status,
+                    "error": "not done"}
+        return {"job_id": job_id, "status": DONE, "fun": rec.fun,
+                "history": list(rec.history),
+                "x": np.asarray(rec.x, np.float64).tolist()}
+
+    def cancel(self, job_id: str) -> dict:
+        if job_id not in self.engine.jobs:
+            return {"job_id": job_id, "error": "unknown job"}
+        ok = self.engine.cancel(job_id)
+        return {"job_id": job_id, "cancelled": ok,
+                "status": self.engine.jobs[job_id].status}
+
+    def stats(self) -> dict:
+        eng = self.engine
+        by_status: dict[str, int] = {}
+        for rec in eng.jobs.values():
+            by_status[rec.status] = by_status.get(rec.status, 0) + 1
+        return {"steps": eng.step_count, "lanes": eng.lanes,
+                "active_lanes": eng.active_lanes,
+                "queued": len(eng.queue), "jobs": by_status,
+                "buckets": len(eng.groups)}
+
+    # ------------------------------------------------------------- execution
+    def step(self) -> int:
+        return self.engine.step()
+
+    def drain(self, max_steps: int | None = None) -> int:
+        return self.engine.run(max_steps=max_steps)

@@ -31,6 +31,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax >= 0.6 renamed TPUCompilerParams -> CompilerParams; support both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
 # aggregate lanes: [S, L, K] padded to one 128-lane vector for the HBM i/o
 AGG_LANES = 128
 
@@ -149,7 +153,7 @@ def sweep_pass_kernel(
             jax.ShapeDtypeStruct((1, AGG_LANES), jnp.float32),
         ],
         scratch_shapes=[pltpu.SMEM((4,), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(x2d, aggs)

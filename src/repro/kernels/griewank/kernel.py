@@ -15,6 +15,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax >= 0.6 renamed TPUCompilerParams -> CompilerParams; support both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
 from repro.kernels.coord_sweep.kernel import AGG_LANES, _griewank_planes
 
 
@@ -57,7 +61,7 @@ def griewank_aggregates_kernel(
         out_specs=pl.BlockSpec((1, AGG_LANES), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((1, AGG_LANES), jnp.float32),
         scratch_shapes=[pltpu.SMEM((4,), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(x2d)

@@ -7,6 +7,14 @@ import os
 import jax
 
 
+def _axis_types_kw(ndim: int) -> dict:
+    # jax >= 0.5 wants explicit AxisType; 0.4.x has no such argument
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * ndim}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod.
 
@@ -23,15 +31,12 @@ def make_production_mesh(*, multi_pod: bool = False):
     else:
         dims = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model")[-len(dims):]
-    return jax.make_mesh(
-        dims, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(dims))
+    return jax.make_mesh(dims, axes, **_axis_types_kw(len(dims)))
 
 
 def make_host_mesh(model_parallel: int = 1):
     """Whatever this host has (tests / examples): (n_dev/mp, mp)."""
     n = len(jax.devices())
     mp = max(1, min(model_parallel, n))
-    return jax.make_mesh(
-        (n // mp, mp), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return jax.make_mesh((n // mp, mp), ("data", "model"),
+                         **_axis_types_kw(2))

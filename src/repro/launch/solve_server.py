@@ -1,0 +1,162 @@
+"""Solve-service launcher: queue many ABO jobs through the batched engine.
+
+    PYTHONPATH=src python -m repro.launch.solve_server --jobs 32 --lanes 8
+    PYTHONPATH=src python -m repro.launch.solve_server --jobs 32 \
+        --ckpt-dir results/solve_ckpt --resume
+
+Drives repro.engine end to end: submits a synthetic mix of jobs across
+``--objectives``, drains the queue with continuous lane refill, and prints
+jobs/sec + probe-FE/sec. With ``--ckpt-dir`` the engine snapshots every
+``--ckpt-every`` steps and ``--resume`` picks up in-flight jobs from the
+newest committed checkpoint.
+
+``--http PORT`` additionally exposes submit/poll/result/cancel as
+JSON-over-HTTP on localhost (stdlib only, demo-grade — single engine lock,
+no auth; hardening is a ROADMAP item). Endpoints:
+
+    POST /submit   {"objective": "griewank", "n": 1000, "seed": 0}
+    GET  /poll?job_id=job-000000
+    GET  /result?job_id=job-000000
+    POST /cancel   {"job_id": "job-000000"}
+    GET  /stats
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+
+from repro.core.abo import ABOConfig
+from repro.engine.jobs import JobSpec
+from repro.engine.scheduler import SolveEngine
+from repro.engine.service import SolveService
+
+
+def _mixed_specs(n_jobs, objectives, n, cfg, seed0=0):
+    return [JobSpec(objectives[i % len(objectives)], n, cfg, seed=seed0 + i)
+            for i in range(n_jobs)]
+
+
+def _serve_http(service: SolveService, port: int, poll_s: float = 0.01):
+    """Demo JSON-over-HTTP front-end; blocks forever. A background thread
+    steps the engine whenever work is pending; the lock serializes engine
+    access between the stepper and request handlers."""
+    from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+    from urllib.parse import parse_qs, urlparse
+
+    lock = threading.Lock()
+
+    def stepper():
+        while True:
+            with lock:
+                if service.engine.pending():
+                    service.step()
+            time.sleep(poll_s)
+
+    threading.Thread(target=stepper, daemon=True).start()
+
+    class Handler(BaseHTTPRequestHandler):
+        def _reply(self, payload, code=200):
+            body = json.dumps(payload).encode()
+            self.send_response(code)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def log_message(self, *a):      # quiet
+            pass
+
+        def do_GET(self):
+            url = urlparse(self.path)
+            q = parse_qs(url.query)
+            job_id = q.get("job_id", [""])[0]
+            with lock:
+                if url.path == "/poll":
+                    self._reply(service.poll(job_id))
+                elif url.path == "/result":
+                    self._reply(service.result(job_id))
+                elif url.path == "/stats":
+                    self._reply(service.stats())
+                else:
+                    self._reply({"error": "unknown endpoint"}, 404)
+
+        def do_POST(self):
+            length = int(self.headers.get("Content-Length", 0))
+            try:
+                req = json.loads(self.rfile.read(length) or b"{}")
+            except json.JSONDecodeError:
+                return self._reply({"error": "bad json"}, 400)
+            with lock:
+                try:
+                    if self.path == "/submit":
+                        self._reply(service.submit(req))
+                    elif self.path == "/cancel":
+                        self._reply(service.cancel(req.get("job_id", "")))
+                    else:
+                        self._reply({"error": "unknown endpoint"}, 404)
+                except (KeyError, TypeError, ValueError) as e:
+                    self._reply({"error": str(e)}, 400)
+
+    print(f"[solve_server] listening on http://127.0.0.1:{port}", flush=True)
+    ThreadingHTTPServer(("127.0.0.1", port), Handler).serve_forever()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jobs", type=int, default=32)
+    ap.add_argument("--lanes", type=int, default=8)
+    ap.add_argument("--n", type=int, default=1000)
+    ap.add_argument("--objectives", default="griewank,sphere,rastrigin")
+    ap.add_argument("--samples", type=int, default=50)
+    ap.add_argument("--passes", type=int, default=5)
+    ap.add_argument("--block", type=int, default=4096)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=1)
+    ap.add_argument("--resume", action="store_true",
+                    help="resume in-flight jobs from --ckpt-dir")
+    ap.add_argument("--http", type=int, default=None, metavar="PORT",
+                    help="serve submit/poll/result over HTTP instead of "
+                         "running a synthetic batch")
+    args = ap.parse_args(argv)
+
+    if args.resume and args.ckpt_dir:
+        engine = SolveEngine.resume(args.ckpt_dir, ckpt_every=args.ckpt_every)
+    else:
+        engine = SolveEngine(lanes=args.lanes, checkpoint_dir=args.ckpt_dir,
+                             ckpt_every=args.ckpt_every)
+    service = SolveService(engine)
+
+    if args.http is not None:
+        _serve_http(service, args.http)
+        return None                      # unreachable (serve_forever)
+
+    cfg = ABOConfig(samples_per_pass=args.samples, n_passes=args.passes,
+                    block_size=args.block)
+    objectives = [o for o in args.objectives.split(",") if o]
+    if not args.resume:
+        engine.submit_many(_mixed_specs(args.jobs, objectives, args.n, cfg))
+        if args.ckpt_dir:
+            engine.snapshot()    # a kill during warmup can't lose the queue
+    done_before = {j for j, r in engine.jobs.items() if r.status == "done"}
+    t0 = time.time()
+    done = engine.run()
+    dt = max(time.time() - t0, 1e-9)
+    # FE from the specs of jobs THIS run finished (on --resume they may
+    # differ from this invocation's CLI defaults)
+    fe = sum(r.spec.config.n_passes * r.spec.config.samples_per_pass
+             * r.spec.n for j, r in engine.jobs.items()
+             if r.status == "done" and j not in done_before)
+    stats = {"done": done, "steps": engine.step_count, "dt_s": dt,
+             "jobs_per_s": done / dt, "fe_per_s": fe / dt,
+             "buckets": len(engine.groups)}
+    print(f"[solve_server] {done} jobs in {dt:.2f}s over "
+          f"{engine.step_count} steps ({len(engine.groups)} buckets): "
+          f"{stats['jobs_per_s']:.1f} jobs/s, {stats['fe_per_s']:.3g} "
+          f"probe-FE/s", flush=True)
+    return stats
+
+
+if __name__ == "__main__":
+    main()

@@ -5,7 +5,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:        # hypothesis is a [test] extra — property tests skip without it
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    given = settings = st = None
 
 from repro.core import ABOConfig, abo_minimize, abo_minimize_blackbox
 from repro.objectives import (GRIEWANK, RASTRIGIN, SCHWEFEL_222,
@@ -73,12 +77,24 @@ def test_blackbox_mode_rosenbrock():
     assert r.fun < 3.0       # near the banana valley from 250·FE/coord
 
 
-@settings(max_examples=10, deadline=None)
-@given(st.integers(2, 300))
-def test_fe_linear_in_n_property(n):
-    cfg = ABOConfig(n_passes=2, samples_per_pass=10)
-    r = abo_minimize(SPHERE, n, config=cfg)
-    assert r.fe == 2 * 10 * n      # paper Eq. 5: E_c = O(mN), m constant
+if st is not None:
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(2, 300))
+    def test_fe_linear_in_n_property(n):
+        cfg = ABOConfig(n_passes=2, samples_per_pass=10)
+        r = abo_minimize(SPHERE, n, config=cfg)
+        assert r.fe == 2 * 10 * n  # paper Eq. 5: E_c = O(mN), m constant
+else:
+    @pytest.mark.skip(reason="hypothesis not installed (pip install .[test])")
+    def test_fe_linear_in_n_property():
+        pass
+
+
+@pytest.mark.parametrize("kw", [dict(samples_per_pass=2),
+                                dict(n_passes=0), dict(block_size=0)])
+def test_config_validation(kw):
+    with pytest.raises(ValueError):
+        ABOConfig(**kw)
 
 
 # ---------------------------------------------------------------------------

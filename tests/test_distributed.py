@@ -32,8 +32,8 @@ def test_sharded_abo_converges_on_mesh():
         from repro.core.sharded import make_sharded_abo
         from repro.core import ABOConfig
         from repro.objectives import GRIEWANK, griewank
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import _axis_types_kw
+        mesh = jax.make_mesh((4, 2), ("data", "model"), **_axis_types_kw(2))
         cfg = ABOConfig(block_size=128)
         step, x_sh, a_sh, n_pad = make_sharded_abo(GRIEWANK, 5000, mesh,
                                                    config=cfg)
@@ -70,8 +70,10 @@ def test_train_step_dp_tp_grads_match_single_device():
         step, sh = steps_mod.make_train_step(model, mesh, zero1=True,
                                              grad_compression="bf16")
         with mesh:
-            params = jax.jit(model.init, out_shardings=sh["params"])(
-                jax.random.PRNGKey(0))
+            # reshard the VERY SAME init values (jit(init, out_shardings=...)
+            # regenerates them, and pre-0.5 jax RNG lowering can diverge
+            # between the eager and sharded-jit paths)
+            params = jax.device_put(params, sh["params"])
             opt = steps_mod.init_opt_state(model, mesh, params)
             batch = {"tokens": jax.device_put(
                 jnp.asarray(batch_np), jax.tree.leaves(sh["batch"])[0])}
@@ -98,7 +100,8 @@ def test_zero1_state_is_sharded():
             opt = steps_mod.init_opt_state(model, mesh, params, zero1=True)
         # the embedding master copy must be sharded over data (ZeRO-1):
         emb = opt["m"]["embed"]
-        nshards = len({s.index for s in emb.addressable_shards})
+        # str(): slices are unhashable before Python 3.12
+        nshards = len({str(s.index) for s in emb.addressable_shards})
         assert nshards >= 4, nshards
         print("OK", nshards)
     """)
@@ -160,9 +163,9 @@ def test_elastic_restore_across_meshes(tmp_path):
         mgr = CheckpointManager({str(tmp_path)!r})
         mgr.save(1, params)
         # "restart" on a smaller mesh
+        from repro.launch.mesh import _axis_types_kw
         mesh2 = jax.make_mesh((2, 2), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2,
-            devices=jax.devices()[:4])
+            devices=jax.devices()[:4], **_axis_types_kw(2))
         sh2 = named(param_specs(jax.eval_shape(
             lambda: model.init(jax.random.PRNGKey(0))), mesh2), mesh2)
         restored = mgr.restore(1, params, sh2)

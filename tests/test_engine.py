@@ -1,0 +1,158 @@
+"""Batched multi-tenant solve engine: batched-vs-sequential equivalence,
+continuous lane refill at depth, submit/poll/cancel lifecycle, service
+front-end, and kill/resume determinism through the checkpoint snapshot."""
+import numpy as np
+import pytest
+
+from repro.core import ABOConfig, abo_minimize
+from repro.engine import (CANCELLED, DONE, QUEUED, RUNNING, JobSpec,
+                          SolveEngine, SolveService)
+from repro.objectives import OBJECTIVES
+
+# small/fast shapes reused across tests so the module-level compile cache
+# amortizes jit time over the whole file
+CFG = ABOConfig(samples_per_pass=12, n_passes=3)
+SHAPES = [("griewank", 64), ("sphere", 96), ("rastrigin", 80)]
+
+
+def _mixed_specs(count, seed0=0):
+    return [JobSpec(*SHAPES[i % len(SHAPES)], CFG, seed=seed0 + i)
+            for i in range(count)]
+
+
+def _solo_fun(spec):
+    return abo_minimize(OBJECTIVES[spec.objective], spec.n,
+                        config=spec.config, seed=spec.seed).fun
+
+
+def test_batched_matches_sequential():
+    """K engine jobs == K independent abo_minimize calls (same init, same
+    per-pass math, same exact final re-eval)."""
+    specs = _mixed_specs(6)
+    eng = SolveEngine(lanes=3)
+    ids = eng.submit_many(specs)
+    assert eng.run() == len(specs)
+    for spec, jid in zip(specs, ids):
+        r = eng.result(jid)
+        assert abs(r.fun - _solo_fun(spec)) < 1e-5, (spec.objective, r.fun)
+        assert r.n == spec.n and r.x.shape == (spec.n,)
+        assert len(np.asarray(r.history)) == CFG.n_passes
+
+
+def test_32_jobs_through_8_lanes_continuous_refill():
+    """The acceptance workload: >=32 queued jobs, <=8 lanes, every lane
+    refilled from the queue the step its job finishes."""
+    specs = _mixed_specs(32, seed0=100)
+    eng = SolveEngine(lanes=8)
+    ids = eng.submit_many(specs)
+    assert eng.run() == 32
+    # 32 jobs x 3 passes over <= 8 lanes needs > n_passes generations:
+    # proof that lanes were reused, not widened
+    assert eng.step_count > CFG.n_passes
+    assert eng.active_lanes == 0 and not eng.pending()
+    for spec, jid in zip(specs, ids):
+        assert abs(eng.result(jid).fun - _solo_fun(spec)) < 1e-5
+
+
+def test_mixed_n_shares_bucket():
+    """Jobs with different true n but equal padded-n ride one executable
+    (per-lane n_valid), and still match their standalone runs."""
+    from repro.engine.batched import bucket_key
+    cfg = ABOConfig(samples_per_pass=12, n_passes=3, block_size=64)
+    na, nb = 130, 192            # > 128 keeps the Jacobi block: both pad to 192
+    ka = bucket_key("sphere", na, cfg, 2)
+    kb = bucket_key("sphere", nb, cfg, 2)
+    assert ka == kb
+    specs = [JobSpec("sphere", na, cfg, seed=7),
+             JobSpec("sphere", nb, cfg, seed=8)]
+    eng = SolveEngine(lanes=2)
+    ids = eng.submit_many(specs)
+    eng.run()
+    assert len(eng.groups) == 1
+    for spec, jid in zip(specs, ids):
+        assert abs(eng.result(jid).fun - _solo_fun(spec)) < 1e-5
+
+
+def test_submit_poll_cancel_lifecycle():
+    # max_fuse=1: strict pass-per-step, so a job is observably RUNNING
+    eng = SolveEngine(lanes=1, max_fuse=1)
+    ids = eng.submit_many(_mixed_specs(3))
+    assert all(eng.poll(j)["status"] == QUEUED for j in ids)
+    assert eng.cancel(ids[1])                 # cancel while queued
+    eng.step()
+    assert eng.poll(ids[0])["status"] == RUNNING
+    assert eng.poll(ids[0])["passes_done"] == 1
+    eng.run()
+    assert eng.poll(ids[0])["status"] == DONE
+    assert eng.poll(ids[1])["status"] == CANCELLED
+    assert eng.poll(ids[2])["status"] == DONE
+    with pytest.raises(RuntimeError):
+        eng.result(ids[1])
+    assert not eng.cancel(ids[0])             # can't cancel a DONE job
+
+
+def test_cancel_running_frees_lane():
+    eng = SolveEngine(lanes=1, max_fuse=1)
+    ids = eng.submit_many(_mixed_specs(2))
+    eng.step()
+    assert eng.poll(ids[0])["status"] == RUNNING
+    assert eng.cancel(ids[0])
+    assert eng.active_lanes == 0
+    eng.run()
+    assert eng.poll(ids[1])["status"] == DONE
+
+
+def test_unknown_objective_rejected():
+    eng = SolveEngine(lanes=1)
+    with pytest.raises(KeyError):
+        eng.submit(JobSpec("no_such_objective", 10, CFG))
+
+
+def test_service_dict_roundtrip():
+    svc = SolveService(lanes=2)
+    reply = svc.submit({"objective": "griewank", "n": 64,
+                        "config": {"samples_per_pass": 12, "n_passes": 3},
+                        "seed": 0, "tag": "t"})
+    jid = reply["job_id"]
+    assert svc.result(jid)["error"] == "not done"
+    svc.drain()
+    out = svc.result(jid)
+    assert out["status"] == DONE and len(out["x"]) == 64
+    assert abs(out["fun"] - _solo_fun(JobSpec("griewank", 64, CFG, seed=0))) \
+        < 1e-5
+    assert svc.poll("nope")["error"] == "unknown job"
+    assert svc.stats()["jobs"] == {DONE: 1}
+
+
+def test_kill_resume_determinism(tmp_path):
+    """Killing the engine mid-solve and resuming from the checkpoint
+    reproduces an uninterrupted run's final objectives exactly. The
+    reference engine runs with full generation fusion while the
+    interrupted one steps pass-by-pass — so this also proves fused and
+    unfused stepping are bit-identical."""
+    specs = _mixed_specs(7, seed0=40)
+
+    ref = SolveEngine(lanes=2)
+    ref_ids = ref.submit_many(specs)
+    ref.run()
+
+    eng = SolveEngine(lanes=2, checkpoint_dir=tmp_path, ckpt_every=1,
+                      max_fuse=1)
+    ids = eng.submit_many(specs)
+    for _ in range(4):                 # some jobs done, some mid-solve
+        eng.step()
+    del eng                            # "kill" — no further writes
+
+    res = SolveEngine.resume(tmp_path)
+    assert res.step_count == 4
+    assert res.max_fuse == 1           # runtime knobs survive the kill
+    assert res.active_lanes == 2       # mid-solve lanes came back
+    res.run()
+    for a, b in zip(ref_ids, ids):
+        assert ref.result(a).fun == res.result(b).fun
+        np.testing.assert_array_equal(ref.result(a).x, res.result(b).x)
+
+
+def test_resume_empty_dir_gives_fresh_engine(tmp_path):
+    eng = SolveEngine.resume(tmp_path)
+    assert eng.step_count == 0 and not eng.pending()

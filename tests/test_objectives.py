@@ -4,7 +4,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:        # hypothesis is a [test] extra — property tests skip without it
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    given = settings = st = None
 
 from repro.objectives import (GRIEWANK, OBJECTIVES, RASTRIGIN, SCHWEFEL_222,
                               SHIFTED_SPHERE, SPHERE, griewank, griewank_naive)
@@ -72,24 +76,33 @@ def test_relaxed_combine_endpoints(rng):
 # ---------------------------------------------------------------------------
 # hypothesis property tests
 # ---------------------------------------------------------------------------
-@settings(max_examples=30, deadline=None)
-@given(st.lists(st.floats(-600, 600, width=32), min_size=2, max_size=50),
-       st.integers(0, 49), st.floats(-600, 600, width=32))
-def test_probe_consistency_property(xs, i, c):
-    i = i % len(xs)
-    x = jnp.asarray(np.asarray(xs, np.float32))
-    aggs = GRIEWANK.aggregates(x)
-    probed = float(GRIEWANK.probe(aggs, jnp.asarray([i]), x[jnp.asarray([i])],
-                                  jnp.asarray([[c]], jnp.float32))[0, 0])
-    xm = np.asarray(xs, np.float32)
-    xm[i] = c
-    full = float(griewank(jnp.asarray(xm)))
-    assert abs(probed - full) <= 5e-4 * max(1.0, abs(full))
+if st is not None:
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.floats(-600, 600, width=32), min_size=2, max_size=50),
+           st.integers(0, 49), st.floats(-600, 600, width=32))
+    def test_probe_consistency_property(xs, i, c):
+        i = i % len(xs)
+        x = jnp.asarray(np.asarray(xs, np.float32))
+        aggs = GRIEWANK.aggregates(x)
+        probed = float(GRIEWANK.probe(aggs, jnp.asarray([i]),
+                                      x[jnp.asarray([i])],
+                                      jnp.asarray([[c]], jnp.float32))[0, 0])
+        xm = np.asarray(xs, np.float32)
+        xm[i] = c
+        full = float(griewank(jnp.asarray(xm)))
+        assert abs(probed - full) <= 5e-4 * max(1.0, abs(full))
 
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.floats(-600, 600, width=32), min_size=1, max_size=64))
+    def test_griewank_nonnegative_property(xs):
+        x = jnp.asarray(np.asarray(xs, np.float32))
+        # mathematical invariant: f >= 0 (allow tiny fp slack near optimum)
+        assert float(griewank(x)) >= -1e-4
+else:
+    @pytest.mark.skip(reason="hypothesis not installed (pip install .[test])")
+    def test_probe_consistency_property():
+        pass
 
-@settings(max_examples=30, deadline=None)
-@given(st.lists(st.floats(-600, 600, width=32), min_size=1, max_size=64))
-def test_griewank_nonnegative_property(xs):
-    x = jnp.asarray(np.asarray(xs, np.float32))
-    # mathematical invariant: f >= 0 (allow tiny fp slack near optimum)
-    assert float(griewank(x)) >= -1e-4
+    @pytest.mark.skip(reason="hypothesis not installed (pip install .[test])")
+    def test_griewank_nonnegative_property():
+        pass

@@ -5,7 +5,12 @@ import dataclasses
 import numpy as np
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+import pytest
+
+try:        # hypothesis is a [test] extra — property tests skip without it
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    given = settings = st = None
 
 from repro.configs import ARCHS, reduced
 from repro.data.synthetic import BigramStream, StreamConfig
@@ -33,12 +38,17 @@ def test_stream_has_learnable_structure():
             assert bb in nxt[a]
 
 
-@settings(max_examples=5, deadline=None)
-@given(st.integers(0, 10_000))
-def test_stream_cursor_property(cursor):
-    cfg = StreamConfig(vocab_size=32, seq_len=8, global_batch=2, seed=1)
-    s = BigramStream(cfg)
-    np.testing.assert_array_equal(s.batch(cursor), s.batch(cursor))
+if st is not None:
+    @settings(max_examples=5, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_stream_cursor_property(cursor):
+        cfg = StreamConfig(vocab_size=32, seq_len=8, global_batch=2, seed=1)
+        s = BigramStream(cfg)
+        np.testing.assert_array_equal(s.batch(cursor), s.batch(cursor))
+else:
+    @pytest.mark.skip(reason="hypothesis not installed (pip install .[test])")
+    def test_stream_cursor_property():
+        pass
 
 
 def test_moe_chunked_equals_full_when_no_drops(rng):
