@@ -20,7 +20,7 @@ def main() -> None:
                     help="paper-scale sizes (up to 1e9 decision variables)")
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table2,table3,kernels,abo_zo,"
-                         "engine")
+                         "engine,engine_mixed")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -48,6 +48,9 @@ def main() -> None:
     if want("engine"):
         from benchmarks.engine_bench import engine_vs_sequential
         rows += list(engine_vs_sequential())
+    if want("engine_mixed"):
+        from benchmarks.engine_bench import engine_mixed_n
+        rows += list(engine_mixed_n())
 
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

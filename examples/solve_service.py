@@ -17,8 +17,13 @@ arbitrarily deep queue. The minimal client loop is::
 
 Add ``checkpoint_dir=...`` to snapshot in-flight state every step and
 ``SolveEngine.resume(dir)`` to pick every job back up mid-solve after a
-kill. The dict-level front-end used below (``SolveService``) is the same
-one ``python -m repro.launch.solve_server --http PORT`` serves over HTTP.
+kill. Jobs of *different* n share lane groups too: padded sizes are
+quantized onto a geometric ladder of canonical rungs and admission is
+fill-ratio-aware under a ``max_pad_waste`` bound, so the mixed-n workload
+below compiles a couple of executables instead of one per distinct n —
+with bit-identical per-job results. The dict-level front-end used below
+(``SolveService``) is the same one ``python -m repro.launch.solve_server
+--http PORT`` serves over HTTP.
 """
 import time
 
@@ -26,6 +31,7 @@ from repro.engine import SolveService
 
 N_JOBS = 12
 LANES = 4
+SIZES = (1100, 1400, 1666, 1800)     # distinct exact pads, shared rungs
 
 
 def main():
@@ -36,13 +42,14 @@ def main():
     for i in range(N_JOBS):
         reply = svc.submit({
             "objective": ("griewank", "sphere", "rastrigin")[i % 3],
-            "n": 1000,
-            "config": {"samples_per_pass": 20, "n_passes": 4},
+            "n": SIZES[i % len(SIZES)],
+            "config": {"samples_per_pass": 20, "n_passes": 4,
+                       "block_size": 256},
             "seed": i,
             "tag": f"demo-{i}",
         })
         job_ids.append(reply["job_id"])
-    print(f"submitted {N_JOBS} jobs onto {LANES} lanes")
+    print(f"submitted {N_JOBS} jobs over n in {SIZES} onto {LANES} lanes")
 
     # poll-while-stepping: a real deployment would poll over HTTP while the
     # server steps; in-process we interleave the two by hand
@@ -50,12 +57,15 @@ def main():
     while svc.engine.pending():
         svc.step()
         s = svc.stats()
+        fill = s["fill_ratio"]
         print(f"  step {s['steps']:3d}: active={s['active_lanes']} "
-              f"queued={s['queued']} done={s['jobs'].get('done', 0)}")
+              f"queued={s['queued']} done={s['jobs'].get('done', 0)}"
+              + (f" fill={fill:.0%}" if fill is not None else ""))
     dt = time.time() - t0
 
     print(f"drained in {dt:.2f}s ({N_JOBS / dt:.1f} jobs/s, "
-          f"{svc.stats()['buckets']} compile buckets)")
+          f"{svc.stats()['buckets_created']} compile buckets for "
+          f"{len(set(SIZES))} problem sizes)")
     for jid in job_ids[:3]:
         r = svc.result(jid)
         print(f"  {jid}: f={r['fun']:.3e} after {len(r['history'])} passes")

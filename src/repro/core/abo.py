@@ -214,6 +214,41 @@ def abo_make_state(obj: SeparableObjective, x: jnp.ndarray, n_valid,
     )
 
 
+def seeded_start(seed, n_pad, dtype, lo, hi, chunk=1 << 20):
+    """Pad-invariant random feasible start over ``(n_pad,)``.
+
+    Coordinate ``i`` is drawn from its own counter-derived key
+    (``fold_in(PRNGKey(seed), i)``), so its value depends only on
+    ``(seed, i)`` — never on the padded length. One seeded job therefore
+    starts from bit-identical coordinates whichever canonical pad size the
+    engine's ladder buckets it into (a plain ``uniform(key, (n_pad,))``
+    draw does NOT have this property: threefry splits the counter array in
+    half, coupling every element's bits to the total length).
+
+    Large n is drawn in ``chunk``-sized segments (same per-coordinate
+    bits) so live scratch stays O(chunk) keys beyond the output vector —
+    the zero-RAM contract's init must not allocate a 2x-output key array
+    at the paper's n ~ 1e9.
+
+    Traceable: ``seed`` may be a Python int or a traced unsigned scalar
+    (the engine's batched lane placement) — both reach the same PRNG key.
+    """
+    key = jax.random.PRNGKey(seed)
+
+    def draw(idx):
+        ks = jax.vmap(lambda i: jax.random.fold_in(key, i))(idx)
+        return jax.vmap(
+            lambda k: jax.random.uniform(k, (), dtype, lo, hi))(ks)
+
+    if n_pad <= chunk:
+        return draw(jnp.arange(n_pad, dtype=jnp.uint32))
+    n_chunks = -(-n_pad // chunk)
+    out = jax.lax.map(
+        lambda c: draw(c * chunk + jnp.arange(chunk, dtype=jnp.uint32)),
+        jnp.arange(n_chunks, dtype=jnp.uint32))
+    return out.reshape(n_chunks * chunk)[:n_pad]
+
+
 def _init_x(obj, n, n_pad, x0, dtype, seed, bounds):
     """The start vector + padded bounds (host-side, a handful of ops)."""
     bnds = None
@@ -227,9 +262,9 @@ def _init_x(obj, n, n_pad, x0, dtype, seed, bounds):
     if x0 is not None:
         x = jnp.zeros((n_pad,), dtype).at[:n].set(jnp.asarray(x0, dtype))
     elif seed is not None:
-        key = jax.random.PRNGKey(seed)
-        x = jax.random.uniform(key, (n_pad,), dtype=dtype,
-                               minval=obj.lower, maxval=obj.upper)
+        # pad-invariant per-coordinate draw — bit-identical start whichever
+        # canonical pad size serves this n (engine ladder bucketing)
+        x = seeded_start(seed, n_pad, dtype, obj.lower, obj.upper)
         if bnds is not None:
             x = bnds[0] + (bnds[1] - bnds[0]) * (x - obj.lower) \
                 / (obj.upper - obj.lower)

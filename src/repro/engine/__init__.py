@@ -1,6 +1,9 @@
 """Batched multi-tenant solve engine: many concurrent ABO jobs through one
 jitted, vmapped sweep (see scheduler.SolveEngine for the step loop and
-batched.bucket_key for the compile-sharing contract)."""
+batched.bucket_key for the compile-sharing contract). Jobs of different n
+share executables through batched.pad_ladder's canonical pad sizes with
+fill-aware admission under SolveEngine(max_pad_waste=...) — per-job
+results are bit-identical at every admissible pad."""
 from repro.engine.jobs import CANCELLED, DONE, QUEUED, RUNNING, JobSpec, JobState
 from repro.engine.scheduler import LaneGroup, SolveEngine
 from repro.engine.service import SolveService

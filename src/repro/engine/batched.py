@@ -16,6 +16,19 @@ for the life of the process (jax.jit would also cache, but only if closure
 identities stayed stable; the dict makes the sharing contract explicit and
 inspectable).
 
+Heterogeneous n: instead of exact ``ceil(n/block)*block`` padding,
+:func:`pad_ladder` quantizes n_pad onto a few canonical geometric sizes
+({1, 1.5} x powers of two, in block multiples — worst-case padding waste
+1/3), so a wide n distribution collapses onto a handful of shared
+executables. A job only rides a rung when its padding waste stays under
+``max_pad_waste``; otherwise it falls back to its exact pad. Correctness
+under mixed-n lanes rests on two invariants: per-lane ``n_valid`` freezes
+padding coordinates (their probe deltas are exactly zero), and seeded
+starts are pad-invariant (core.abo.seeded_start draws per-coordinate), so
+the same job produces bit-identical results at ANY admissible rung.
+:func:`get_graft` moves in-flight lanes between same-family buckets (the
+scheduler's near-empty group fusion) by re-padding the solution leaf.
+
 Everything per-job-hot is jitted: placing a job into a lane (start vector +
 aggregates + scatter, one dispatch), stepping all K lanes (one dispatch per
 pass), and finalizing a finished lane (exact re-eval + gather, one
@@ -32,18 +45,58 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.abo import (ABOConfig, ABOState, _default_probe_tile,
-                            abo_make_state, abo_pass_step, effective_config)
+                            abo_make_state, abo_pass_step, effective_config,
+                            seeded_start)
 from repro.objectives.base import SeparableObjective, _default_agg_dtype
 
 # bucket key -> LaneOps (jitted step/place/finalize for that shape)
 _COMPILE_CACHE: dict[tuple, "LaneOps"] = {}
+# (src bucket key, dst bucket key) -> jitted cross-bucket lane migration
+_GRAFT_CACHE: dict[tuple, Callable] = {}
+
+# Padding-waste ceiling for ladder admission: the {1, 1.5} x pow2 ladder's
+# intrinsic worst case is 1/3 (n just past a rung, bumped to 1.5x), so at
+# the default every n rides a canonical rung; tightening it makes outliers
+# fall back to their exact pad, and 0 restores exact-pad bucketing.
+DEFAULT_MAX_PAD_WASTE = 0.35
+
+
+def pad_ladder(n: int, block: int,
+               max_pad_waste: float = DEFAULT_MAX_PAD_WASTE) -> int:
+    """Canonical padded size for an n-dimensional job.
+
+    Rungs are {1, 1.5} x powers of two in units of ``block``
+    (block x {1, 2, 3, 4, 6, 8, 12, ...}) — a geometric ladder, so the
+    whole [1, 1e9] n range needs only ~2 log2(range) compiled shapes and
+    padding waste ``(n_pad - n) / n_pad`` never exceeds 1/3. If the
+    smallest rung >= n still wastes more than ``max_pad_waste`` (possible
+    only for bounds tighter than the ladder's 1/3), the job keeps its
+    exact ``ceil(n/block)*block`` pad.
+    """
+    exact = -(-n // block) * block
+    if max_pad_waste <= 0.0:
+        return exact
+    mult = exact // block
+    rung = 1
+    while rung < mult:
+        if rung & (rung - 1) == 0 and rung >= 2:   # 2^j -> 3*2^(j-1)
+            rung = rung * 3 // 2
+        elif rung == 1:
+            rung = 2
+        else:                                      # 3*2^(j-1) -> 2^(j+1)
+            rung = rung // 3 * 4
+    n_pad = rung * block
+    if (n_pad - n) / n_pad <= max_pad_waste:
+        return n_pad
+    return exact
 
 
 def bucket_key(obj_name: str, n: int, cfg: ABOConfig, k: int,
-               dtype=jnp.float32) -> tuple:
+               dtype=jnp.float32,
+               max_pad_waste: float = DEFAULT_MAX_PAD_WASTE) -> tuple:
     """Compile-sharing key for an n-dimensional job on a K-lane group."""
     eff = effective_config(cfg, n)
-    n_pad = -(-n // eff.block_size) * eff.block_size
+    n_pad = pad_ladder(n, eff.block_size, max_pad_waste)
     return (obj_name, n_pad, eff, k, jnp.dtype(dtype).name)
 
 
@@ -53,6 +106,14 @@ def padded_n(key: tuple) -> int:
 
 def key_config(key: tuple) -> ABOConfig:
     return key[2]
+
+
+def family_key(key: tuple) -> tuple:
+    """Everything but n_pad — buckets sharing a family differ only in pad
+    size, so their lanes are mutually migratable (see :func:`get_graft`)
+    and a queued job may be admitted into any of them whose padding waste
+    stays under the engine's bound."""
+    return (key[0],) + key[2:]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -121,13 +182,14 @@ def get_lane_ops(obj: SeparableObjective, key: tuple) -> LaneOps:
         def place_many(bs: ABOState, mask, seeded, seeds,
                        n_valid) -> ABOState:
             """Re-initialize every lane where ``mask``; seeded lanes start
-            from their PRNG stream (identical bits to abo_minimize's seeded
-            start — the PRNG is counter-based, so tracing doesn't change
-            it), the rest from the deterministic golden-section point."""
+            from their PRNG stream (``seeds`` is an unsigned array — the
+            scheduler folds Python seeds to the width PRNGKey itself
+            traces in the active precision mode, so bits match
+            abo_minimize's seeded start; the draw is per-coordinate
+            counter-based, so they also match at every ladder pad size),
+            the rest from the deterministic golden-section point."""
             def init_lane(seed, is_seeded, nv):
-                xs = jax.random.uniform(jax.random.PRNGKey(seed), (n_pad,),
-                                        dtype=dt, minval=obj.lower,
-                                        maxval=obj.upper)
+                xs = seeded_start(seed, n_pad, dt, obj.lower, obj.upper)
                 xg = jnp.full((n_pad,), obj.lower + 0.6180339887
                               * (obj.upper - obj.lower), dt)
                 return abo_make_state(obj, jnp.where(is_seeded, xs, xg),
@@ -154,6 +216,36 @@ def get_lane_ops(obj: SeparableObjective, key: tuple) -> LaneOps:
                       finalize_many=jax.jit(finalize_many))
         _COMPILE_CACHE[key] = ops
     return ops
+
+
+def get_graft(src_key: tuple, dst_key: tuple) -> Callable:
+    """Jitted cross-bucket lane migration for the scheduler's group fusion.
+
+    ``graft(dst_bs, src_bs, src_lanes, dst_lanes)`` gathers ``src_lanes``
+    from the src stacked state, right-pads the solution leaf with frozen
+    zeros up to the dst bucket's n_pad, and scatters into ``dst_lanes`` —
+    one dispatch, no host sync. Padding coordinates are inert (n_valid
+    freezes them and their probe deltas are exactly zero), so a migrated
+    lane's remaining passes are bit-identical to the run it left.
+    """
+    assert family_key(src_key) == family_key(dst_key), (src_key, dst_key)
+    assert padded_n(src_key) <= padded_n(dst_key), (src_key, dst_key)
+    ck = (src_key, dst_key)
+    fn = _GRAFT_CACHE.get(ck)
+    if fn is None:
+        def graft(dst_bs: ABOState, src_bs: ABOState,
+                  src_lanes, dst_lanes) -> ABOState:
+            def move(d, s):
+                sub = s[src_lanes]
+                if sub.shape[1:] != d.shape[1:]:       # the x leaf: re-pad
+                    widths = [(0, 0)] + [(0, dw - sw) for dw, sw
+                                         in zip(d.shape[1:], sub.shape[1:])]
+                    sub = jnp.pad(sub, widths)
+                return d.at[dst_lanes].set(sub.astype(d.dtype))
+            return jax.tree_util.tree_map(move, dst_bs, src_bs)
+        fn = jax.jit(graft)
+        _GRAFT_CACHE[ck] = fn
+    return fn
 
 
 def compile_cache_size() -> int:

@@ -46,6 +46,17 @@ class JobSpec:
                 f"got {type(self.config).__name__}")
         if self.n < 1:
             raise ValueError(f"n must be >= 1, got {self.n}")
+        if self.seed is not None:
+            # reject early what PRNGKey would reject at refill time, deep
+            # inside the engine's step loop (seeds >= 2**31 are fine: the
+            # scheduler folds them to uint32 exactly as PRNGKey does)
+            if not isinstance(self.seed, (int, np.integer)) \
+                    or isinstance(self.seed, bool):
+                raise ValueError(
+                    f"seed must be an int, got {type(self.seed).__name__}")
+            if not -(2 ** 63) <= self.seed < 2 ** 63:
+                raise ValueError(
+                    f"seed must fit in 64 signed bits, got {self.seed}")
         if self.x0 is not None and len(self.x0) != self.n:
             raise ValueError(
                 f"x0 has {len(self.x0)} entries for an n={self.n} job")
@@ -54,7 +65,7 @@ class JobSpec:
         d = {"objective": self.objective, "n": self.n,
              "config": dataclasses.asdict(self.config), "tag": self.tag}
         if self.seed is not None:
-            d["seed"] = self.seed
+            d["seed"] = int(self.seed)   # np.integer seeds aren't JSON
         if self.x0 is not None:
             d["x0"] = list(self.x0)
         return d
@@ -90,6 +101,8 @@ class JobState:
     history: list[float] = dataclasses.field(default_factory=list)
     fun: float | None = None
     x: np.ndarray | None = None      # final solution (DONE only)
+    fetched: bool = False            # result() delivered at least once —
+    #                                  snapshots stop carrying x (GC)
 
     @property
     def n_passes(self) -> int:
@@ -109,6 +122,7 @@ class JobState:
         if self.status != DONE:
             raise RuntimeError(
                 f"job {self.job_id} is {self.status}, not {DONE}")
+        self.fetched = True              # later snapshots drop x (see to_dict)
         cfg = self.spec.config
         return ABOResult(x=self.x, fun=self.fun,
                          fe=cfg.n_passes * cfg.samples_per_pass * self.spec.n,
@@ -116,10 +130,14 @@ class JobState:
                          config=cfg)
 
     # ---- checkpoint (de)serialization -----------------------------------
-    # Bound on DONE-job solution vectors carried in the aux JSON sidecar:
-    # bigger results are dropped from snapshots (fun/history survive; the
-    # solution itself is only lost if the process dies AFTER the job
-    # finished and BEFORE the client fetched it).
+    # Bounds on DONE-job solution vectors carried in the aux JSON sidecar:
+    # vectors bigger than AUX_X_MAX_N — or already delivered to a client
+    # (``fetched``) — are dropped from snapshots. fun/history always
+    # survive; the solution itself is only lost across a kill if the job
+    # finished and was never fetched while oversized, or was fetched (in
+    # which case the client has it). Without fetch-time eviction every
+    # snapshot re-serializes every DONE result forever — unbounded aux
+    # growth for a long-lived service.
     AUX_X_MAX_N = 65536
 
     def to_dict(self) -> dict:
@@ -128,7 +146,9 @@ class JobState:
              "history": [float(v) for v in self.history]}
         if self.fun is not None:
             d["fun"] = self.fun
-        if self.x is not None and self.x.size <= self.AUX_X_MAX_N:
+        if self.fetched:
+            d["fetched"] = True
+        elif self.x is not None and self.x.size <= self.AUX_X_MAX_N:
             d["x"] = np.asarray(self.x, np.float64).tolist()
             d["x_dtype"] = str(np.asarray(self.x).dtype)
         return d
@@ -141,7 +161,7 @@ class JobState:
         return cls(job_id=d["job_id"], spec=JobSpec.from_dict(d["spec"]),
                    status=d["status"], passes_done=d.get("passes_done", 0),
                    history=list(d.get("history", [])), fun=d.get("fun"),
-                   x=x)
+                   x=x, fetched=d.get("fetched", False))
 
 
 def next_job_id(counter: int) -> str:

@@ -7,6 +7,16 @@ whose job has run all its passes are finalized and immediately refilled from
 the queue — the swap-finished-jobs-between-steps pattern of
 ``launch/serve.py``, at pass granularity instead of token granularity.
 
+Heterogeneous n: padded sizes are quantized onto batched.pad_ladder's
+canonical rungs, and admission is fill-ratio-aware — a queued job lands in
+the open same-family group with the most active lanes whose padding waste
+for it stays under ``max_pad_waste``, so a wide n distribution shares a
+handful of executables instead of fragmenting into per-n groups. When the
+queue runs dry, near-empty sibling groups are fused into the widest member
+(one jitted graft dispatch per source group) so the tail of a workload
+steps one executable, not one per rung. ``max_pad_waste=0`` restores PR 1's
+exact-pad bucketing bit-for-bit.
+
 Every lane advances exactly one pass per step, so job progress is tracked
 host-side (``JobState.passes_done``) and the step loop never reads device
 memory: pass steps pipeline through JAX's async dispatch, and the engine
@@ -27,6 +37,7 @@ import dataclasses
 from collections import deque
 from typing import Any, Iterable
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -73,10 +84,19 @@ class SolveEngine:
     def __init__(self, *, lanes: int = 8, dtype: Any = jnp.float32,
                  objectives: dict[str, SeparableObjective] | None = None,
                  checkpoint_dir: str | None = None, ckpt_every: int = 1,
-                 keep: int = 3, max_fuse: int | None = None):
+                 keep: int = 3, max_fuse: int | None = None,
+                 max_pad_waste: float = batched.DEFAULT_MAX_PAD_WASTE):
         if lanes < 1:
             raise ValueError(f"lanes must be >= 1, got {lanes}")
+        if not 0.0 <= max_pad_waste < 1.0:
+            raise ValueError(
+                f"max_pad_waste must be in [0, 1), got {max_pad_waste}")
         self.lanes = lanes
+        # ceiling on the padding-waste fraction (n_pad - n) / n_pad a lane
+        # may carry: gates both ladder admission and group fusion; 0 means
+        # exact-pad bucketing (every distinct padded n compiles its own
+        # executables — PR 1 behavior)
+        self.max_pad_waste = max_pad_waste
         # cap on passes fused into one jitted call per step (None = fuse
         # whole generations); 1 restores strict pass-per-step stepping,
         # which is also the finest checkpoint/refill granularity
@@ -86,6 +106,9 @@ class SolveEngine:
         self.jobs: dict[str, JobState] = {}
         self.queue: deque[str] = deque()
         self.groups: dict[tuple, LaneGroup] = {}
+        # every bucket key this engine ever opened a group for — the number
+        # of distinct executable shapes compiled on its behalf
+        self.bucket_keys_seen: set[tuple] = set()
         self.step_count = 0
         self._next = 0
         self.ckpt = (CheckpointManager(checkpoint_dir, keep=keep)
@@ -114,6 +137,10 @@ class SolveEngine:
         rec = self.jobs[job_id]
         if rec.status == QUEUED:
             rec.status = CANCELLED
+            try:                         # purge now, not at the next refill:
+                self.queue.remove(job_id)   # stale ids would otherwise show
+            except ValueError:              # up as phantom queued work in
+                pass                        # stats until a refill drains them
             return True
         if rec.status == RUNNING:
             group, lane = self._locate(job_id)
@@ -144,6 +171,7 @@ class SolveEngine:
         job's pass budget, so per-job math is untouched.
         """
         self._refill()
+        self._fuse_siblings()
         finished = 0
         for group in self.groups.values():
             if group.active == 0:
@@ -195,6 +223,35 @@ class SolveEngine:
                 return group, group.job_ids.index(job_id)
         return None, -1
 
+    def _admit_key(self, spec: JobSpec) -> tuple:
+        """Fill-ratio-aware bucket choice for a queued job.
+
+        Candidates are the job's own ladder rung plus every open
+        same-family group whose pad fits the job under ``max_pad_waste``;
+        the fullest admissible group wins (ties to the smallest pad), so
+        traffic consolidates onto already-hot executables instead of
+        opening a fresh rung per distinct n.
+        """
+        rung = batched.bucket_key(spec.objective, spec.n, spec.config,
+                                  self.lanes, self.dtype, self.max_pad_waste)
+        fam = batched.family_key(rung)
+        exact = batched.padded_n(batched.bucket_key(
+            spec.objective, spec.n, spec.config, self.lanes, self.dtype,
+            0.0))
+        best = None                      # (active, -n_pad) maximized
+        for key, group in self.groups.items():
+            if batched.family_key(key) != fam or group.active >= self.lanes:
+                continue
+            n_pad = batched.padded_n(key)
+            if n_pad < exact:
+                continue
+            if key != rung and (n_pad - spec.n) / n_pad > self.max_pad_waste:
+                continue                 # own rung always admits itself
+            score = (group.active, -n_pad)
+            if best is None or score > best[0]:
+                best = (score, key)
+        return best[1] if best is not None else rung
+
     def _refill(self):
         # Stage lane bindings first, then write every group's new lanes in
         # ONE jitted place_many dispatch — refilling 8 lanes costs the same
@@ -207,14 +264,14 @@ class SolveEngine:
                 continue
             spec = rec.spec
             obj = self.objectives[spec.objective]
-            key = batched.bucket_key(spec.objective, spec.n, spec.config,
-                                     self.lanes, self.dtype)
+            key = self._admit_key(spec)
             group = self.groups.get(key)
             if group is None:
                 group = LaneGroup(key=key, obj=obj,
                                   state=batched.zeros_batch_state(obj, key),
                                   job_ids=[None] * self.lanes)
                 self.groups[key] = group
+                self.bucket_keys_seen.add(key)
             lane = group.free_lane()
             assert lane is not None      # K == lane budget, so never full
             group.job_ids[lane] = rec.job_id
@@ -227,7 +284,15 @@ class SolveEngine:
             k = self.lanes
             mask = np.zeros((k,), bool)
             seeded = np.zeros((k,), bool)
-            seeds = np.zeros((k,), np.int32)
+            # PRNGKey folds a Python int to the widest uint the precision
+            # mode traces: 32 bits by default, 64 under jax_enable_x64.
+            # Mirror that exactly so engine starts stay bit-identical to
+            # abo_minimize's for every accepted seed (negative and >= 2**32
+            # included), in either mode.
+            x64 = bool(jax.config.jax_enable_x64)
+            seed_dt = np.uint64 if x64 else np.uint32
+            seed_mask = 0xFFFFFFFFFFFFFFFF if x64 else 0xFFFFFFFF
+            seeds = np.zeros((k,), seed_dt)
             n_valid = np.full((k,), batched.padded_n(key), np.int32)
             x0_jobs = []
             for lane, rec in placed:
@@ -239,7 +304,7 @@ class SolveEngine:
                 n_valid[lane] = spec.n
                 if spec.seed is not None:
                     seeded[lane] = True
-                    seeds[lane] = spec.seed
+                    seeds[lane] = seed_dt(spec.seed & seed_mask)
             if mask.any():
                 group.state = ops.place_many(group.state, mask, seeded,
                                              seeds, n_valid)
@@ -269,6 +334,69 @@ class SolveEngine:
             group.job_ids[lane] = None   # lane free; refilled next step
         return len(fins)
 
+    def _fuse_siblings(self):
+        """Fuse near-empty same-family lane groups into the widest member.
+
+        A drained workload's tail leaves a few active lanes scattered over
+        several ladder rungs; stepping each rung separately costs one
+        dispatch + harvest sync apiece. When a family's active lanes all
+        fit one group (and the queue is empty or the family is < half
+        full), its smaller-pad groups are grafted into the widest one —
+        one jitted dispatch per source group, no host sync — and the
+        emptied groups are dropped. Migration respects ``max_pad_waste``,
+        so a lane never lands in a bucket admission would have refused,
+        and grafted passes stay bit-identical (pad coords are inert).
+        """
+        if self.max_pad_waste <= 0.0 or len(self.groups) < 2:
+            return
+        fams: dict[tuple, list[LaneGroup]] = {}
+        for g in self.groups.values():
+            if g.active:
+                fams.setdefault(batched.family_key(g.key), []).append(g)
+        queued = any(self.jobs[j].status == QUEUED for j in self.queue)
+        for members in fams.values():
+            if len(members) < 2:
+                continue
+            total = sum(g.active for g in members)
+            if total > self.lanes or (queued and total > self.lanes // 2):
+                continue                 # refill will repack these anyway
+            members.sort(key=lambda g: batched.padded_n(g.key))
+            dst = members[-1]
+            n_dst = batched.padded_n(dst.key)
+            for src in members[:-1]:
+                moved = [(lane, jid) for lane, jid in enumerate(src.job_ids)
+                         if jid is not None]
+                if any((n_dst - self.jobs[jid].spec.n) / n_dst
+                       > self.max_pad_waste for _, jid in moved):
+                    continue
+                free = [i for i, j in enumerate(dst.job_ids) if j is None]
+                if len(free) < len(moved):
+                    continue
+                src_lanes = [lane for lane, _ in moved]
+                dst_lanes = free[:len(moved)]
+                graft = batched.get_graft(src.key, dst.key)
+                dst.state = graft(dst.state, src.state,
+                                  jnp.asarray(src_lanes, jnp.int32),
+                                  jnp.asarray(dst_lanes, jnp.int32))
+                for dl, (_, jid) in zip(dst_lanes, moved):
+                    dst.job_ids[dl] = jid
+                del self.groups[src.key]
+
+    def pad_stats(self) -> dict:
+        """Packing economics of the current lane allocation: valid vs
+        padded coordinates over active lanes (fill_ratio + pad_waste are
+        None while nothing runs)."""
+        valid = padded = 0
+        for g in self.groups.values():
+            n_pad = batched.padded_n(g.key)
+            for jid in g.job_ids:
+                if jid is not None:
+                    valid += self.jobs[jid].spec.n
+                    padded += n_pad
+        return {"active_valid_n": valid, "active_padded_n": padded,
+                "fill_ratio": valid / padded if padded else None,
+                "pad_waste": 1.0 - valid / padded if padded else None}
+
     # ------------------------------------------------------------ checkpoint
     def snapshot(self):
         """Cut a checkpoint now (e.g. right after enqueueing a batch, so a
@@ -284,6 +412,7 @@ class SolveEngine:
             "version": 1,
             "lanes": self.lanes,
             "max_fuse": self.max_fuse,
+            "max_pad_waste": self.max_pad_waste,
             "dtype": jnp.dtype(self.dtype).name,
             "step_count": self.step_count,
             "next": self._next,
@@ -294,21 +423,35 @@ class SolveEngine:
                         "k": g.key[3], "dtype": g.key[4],
                         "job_ids": g.job_ids}
                        for g in self.groups.values()],
+            # groups can drain or fuse away before a snapshot; persist the
+            # full compiled-shape history so buckets_created survives resume
+            "bucket_keys_seen": [
+                {"objective": k[0], "n_pad": k[1],
+                 "config": dataclasses.asdict(k[2]), "k": k[3],
+                 "dtype": k[4]}
+                for k in sorted(self.bucket_keys_seen,
+                                key=lambda k: (k[0], k[1]))],
         }
         self.ckpt.save(self.step_count, tree, aux=aux)
 
     @classmethod
     def resume(cls, checkpoint_dir: str, *,
                objectives: dict[str, SeparableObjective] | None = None,
-               keep: int = 3, ckpt_every: int = 1) -> "SolveEngine":
+               keep: int = 3, ckpt_every: int = 1,
+               **fresh_kw) -> "SolveEngine":
         """Rebuild an engine (jobs, queue, and mid-solve lane states) from
         the newest committed checkpoint in ``checkpoint_dir``. With no
-        checkpoint present, returns a fresh empty engine."""
+        checkpoint present, returns a fresh empty engine built with
+        ``fresh_kw`` (lanes, max_pad_waste, ...); when a checkpoint IS
+        found its recorded values win and ``fresh_kw`` is ignored —
+        runtime knobs must round-trip the kill, or the resumed run would
+        diverge from the uninterrupted one."""
         probe = CheckpointManager(checkpoint_dir, keep=keep)
         step = probe.latest_step()
         if step is None:
             return cls(checkpoint_dir=checkpoint_dir, keep=keep,
-                       ckpt_every=ckpt_every, objectives=objectives)
+                       ckpt_every=ckpt_every, objectives=objectives,
+                       **fresh_kw)
         aux = probe.aux(step)
         if aux is None:
             raise RuntimeError(
@@ -317,7 +460,9 @@ class SolveEngine:
         eng = cls(lanes=aux["lanes"], dtype=jnp.dtype(aux["dtype"]),
                   objectives=objectives, checkpoint_dir=checkpoint_dir,
                   ckpt_every=ckpt_every, keep=keep,
-                  max_fuse=aux.get("max_fuse"))
+                  max_fuse=aux.get("max_fuse"),
+                  max_pad_waste=aux.get(
+                      "max_pad_waste", batched.DEFAULT_MAX_PAD_WASTE))
         eng.step_count = aux["step_count"]
         eng._next = aux["next"]
         eng.jobs = {jid: JobState.from_dict(d)
@@ -336,4 +481,9 @@ class SolveEngine:
             eng.groups[key] = LaneGroup(key=key, obj=obj,
                                         state=tree[f"g{i:03d}"],
                                         job_ids=list(job_ids))
+            eng.bucket_keys_seen.add(key)
+        for d in aux.get("bucket_keys_seen", []):   # absent in old snapshots
+            eng.bucket_keys_seen.add(
+                (d["objective"], d["n_pad"], ABOConfig(**d["config"]),
+                 d["k"], d["dtype"]))
         return eng

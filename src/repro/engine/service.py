@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.engine.jobs import DONE, JobSpec
+from repro.engine.jobs import DONE, QUEUED, JobSpec
 from repro.engine.scheduler import SolveEngine
 
 
@@ -29,16 +29,32 @@ class SolveService:
             return {"job_id": job_id, "error": "unknown job"}
         return self.engine.poll(job_id)
 
-    def result(self, job_id: str) -> dict:
+    def result(self, job_id: str, mark_fetched: bool = True) -> dict:
+        """``mark_fetched=True`` (the in-process default, where returning
+        the dict IS delivery) lets later snapshots drop the solution
+        vector; a wire front-end should pass False and call
+        :meth:`self.mark_fetched` only after its reply actually went out,
+        so a failed write can't strand the client without x."""
         if job_id not in self.engine.jobs:
             return {"job_id": job_id, "error": "unknown job"}
         rec = self.engine.jobs[job_id]
         if rec.status != DONE:
             return {"job_id": job_id, "status": rec.status,
                     "error": "not done"}
-        return {"job_id": job_id, "status": DONE, "fun": rec.fun,
-                "history": list(rec.history),
-                "x": np.asarray(rec.x, np.float64).tolist()}
+        out = {"job_id": job_id, "status": DONE, "fun": rec.fun,
+               "history": list(rec.history)}
+        # x can be gone after a fetch -> kill -> resume cycle (snapshots
+        # evict delivered solution vectors); fun/history still stand
+        if rec.x is not None:
+            out["x"] = np.asarray(rec.x, np.float64).tolist()
+        if mark_fetched:
+            rec.fetched = True           # snapshots stop carrying this x
+        return out
+
+    def mark_fetched(self, job_id: str) -> None:
+        rec = self.engine.jobs.get(job_id)
+        if rec is not None and rec.status == DONE:
+            rec.fetched = True
 
     def cancel(self, job_id: str) -> dict:
         if job_id not in self.engine.jobs:
@@ -52,10 +68,17 @@ class SolveService:
         by_status: dict[str, int] = {}
         for rec in eng.jobs.values():
             by_status[rec.status] = by_status.get(rec.status, 0) + 1
+        # count only truly-QUEUED ids: a job cancelled while queued may
+        # linger in eng.queue until a refill drains it (and resumed queues
+        # can carry such ids too) — len(eng.queue) overcounts
+        queued = sum(eng.jobs[j].status == QUEUED for j in eng.queue)
         return {"steps": eng.step_count, "lanes": eng.lanes,
                 "active_lanes": eng.active_lanes,
-                "queued": len(eng.queue), "jobs": by_status,
-                "buckets": len(eng.groups)}
+                "queued": queued, "jobs": by_status,
+                "buckets": len(eng.groups),
+                "buckets_created": len(eng.bucket_keys_seen),
+                "max_pad_waste": eng.max_pad_waste,
+                **eng.pad_stats()}
 
     # ------------------------------------------------------------- execution
     def step(self) -> int:

@@ -2,13 +2,28 @@
 
     PYTHONPATH=src python -m repro.launch.solve_server --jobs 32 --lanes 8
     PYTHONPATH=src python -m repro.launch.solve_server --jobs 32 \
+        --n 500,1300,2600,6000            # heterogeneous-n workload
+    PYTHONPATH=src python -m repro.launch.solve_server --jobs 32 \
         --ckpt-dir results/solve_ckpt --resume
 
 Drives repro.engine end to end: submits a synthetic mix of jobs across
-``--objectives``, drains the queue with continuous lane refill, and prints
-jobs/sec + probe-FE/sec. With ``--ckpt-dir`` the engine snapshots every
+``--objectives`` (and, with a comma list in ``--n``, across problem
+sizes), drains the queue with continuous lane refill, and prints jobs/sec
++ probe-FE/sec. With ``--ckpt-dir`` the engine snapshots every
 ``--ckpt-every`` steps and ``--resume`` picks up in-flight jobs from the
-newest committed checkpoint.
+newest committed checkpoint (``--resume`` without ``--ckpt-dir`` is an
+error — it would silently start a fresh engine with no checkpointing).
+
+Heterogeneous-n packing: padded sizes are quantized onto a geometric
+ladder of canonical rungs ({1, 1.5} x powers of two, in block multiples)
+and admission is fill-ratio-aware, so a wide n distribution shares a few
+compiled executables instead of one per distinct padded n.
+``--max-pad-waste`` bounds the padding-waste fraction (n_pad - n) / n_pad
+a lane may carry (default 0.35, the ladder's intrinsic worst case; 0
+restores exact-pad bucketing). Per-job results are bit-identical at every
+admissible rung — seeded starts are drawn per-coordinate and padding
+coordinates are inert — so the knob trades executables/dispatches against
+padded compute, never accuracy.
 
 ``--http PORT`` additionally exposes submit/poll/result/cancel as
 JSON-over-HTTP on localhost (stdlib only, demo-grade — single engine lock,
@@ -19,6 +34,9 @@ no auth; hardening is a ROADMAP item). Endpoints:
     GET  /result?job_id=job-000000
     POST /cancel   {"job_id": "job-000000"}
     GET  /stats
+
+Unknown job ids answer 404, malformed requests 400, and handler failures
+a JSON 500 — never a raw traceback.
 """
 from __future__ import annotations
 
@@ -28,20 +46,23 @@ import threading
 import time
 
 from repro.core.abo import ABOConfig
+from repro.engine.batched import DEFAULT_MAX_PAD_WASTE
 from repro.engine.jobs import JobSpec
 from repro.engine.scheduler import SolveEngine
 from repro.engine.service import SolveService
 
 
-def _mixed_specs(n_jobs, objectives, n, cfg, seed0=0):
-    return [JobSpec(objectives[i % len(objectives)], n, cfg, seed=seed0 + i)
+def _mixed_specs(n_jobs, objectives, ns, cfg, seed0=0):
+    return [JobSpec(objectives[i % len(objectives)], ns[i % len(ns)], cfg,
+                    seed=seed0 + i)
             for i in range(n_jobs)]
 
 
-def _serve_http(service: SolveService, port: int, poll_s: float = 0.01):
-    """Demo JSON-over-HTTP front-end; blocks forever. A background thread
-    steps the engine whenever work is pending; the lock serializes engine
-    access between the stepper and request handlers."""
+def _build_server(service: SolveService, port: int, poll_s: float = 0.01):
+    """HTTP server + engine-stepper thread (not yet serving — callers run
+    ``serve_forever``; tests drive it from their own thread and
+    ``shutdown()`` it). The lock serializes engine access between the
+    stepper and request handlers."""
     from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
     from urllib.parse import parse_qs, urlparse
 
@@ -54,10 +75,12 @@ def _serve_http(service: SolveService, port: int, poll_s: float = 0.01):
                     service.step()
             time.sleep(poll_s)
 
-    threading.Thread(target=stepper, daemon=True).start()
-
     class Handler(BaseHTTPRequestHandler):
         def _reply(self, payload, code=200):
+            # unknown-id lookups are misses, not field-level soft errors
+            if code == 200 and isinstance(payload, dict) \
+                    and payload.get("error") == "unknown job":
+                code = 404
             body = json.dumps(payload).encode()
             self.send_response(code)
             self.send_header("Content-Type", "application/json")
@@ -68,19 +91,40 @@ def _serve_http(service: SolveService, port: int, poll_s: float = 0.01):
         def log_message(self, *a):      # quiet
             pass
 
+        def _guarded(self, fn):
+            """Run a handler body; malformed input answers 400 and any
+            other failure a JSON 500 — a raw traceback page leaks
+            internals and breaks JSON-speaking clients."""
+            try:
+                fn()
+            except (KeyError, TypeError, ValueError) as e:
+                self._reply({"error": str(e)}, 400)
+            except Exception as e:      # noqa: BLE001 — wire boundary
+                self._reply({"error": f"internal error: {e}"}, 500)
+
         def do_GET(self):
             url = urlparse(self.path)
             q = parse_qs(url.query)
             job_id = q.get("job_id", [""])[0]
-            with lock:
-                if url.path == "/poll":
-                    self._reply(service.poll(job_id))
-                elif url.path == "/result":
-                    self._reply(service.result(job_id))
-                elif url.path == "/stats":
-                    self._reply(service.stats())
-                else:
-                    self._reply({"error": "unknown endpoint"}, 404)
+
+            def run():
+                with lock:
+                    if url.path == "/poll":
+                        self._reply(service.poll(job_id))
+                    elif url.path == "/result":
+                        # only a reply that actually went out counts as a
+                        # fetch — a broken pipe here must not let snapshots
+                        # evict a solution the client never received
+                        out = service.result(job_id, mark_fetched=False)
+                        self._reply(out)
+                        if out.get("status") == "done":
+                            service.mark_fetched(job_id)
+                    elif url.path == "/stats":
+                        self._reply(service.stats())
+                    else:
+                        self._reply({"error": "unknown endpoint"}, 404)
+
+            self._guarded(run)
 
         def do_POST(self):
             length = int(self.headers.get("Content-Length", 0))
@@ -88,30 +132,48 @@ def _serve_http(service: SolveService, port: int, poll_s: float = 0.01):
                 req = json.loads(self.rfile.read(length) or b"{}")
             except json.JSONDecodeError:
                 return self._reply({"error": "bad json"}, 400)
-            with lock:
-                try:
+
+            def run():
+                with lock:
                     if self.path == "/submit":
                         self._reply(service.submit(req))
                     elif self.path == "/cancel":
                         self._reply(service.cancel(req.get("job_id", "")))
                     else:
                         self._reply({"error": "unknown endpoint"}, 404)
-                except (KeyError, TypeError, ValueError) as e:
-                    self._reply({"error": str(e)}, 400)
 
-    print(f"[solve_server] listening on http://127.0.0.1:{port}", flush=True)
-    ThreadingHTTPServer(("127.0.0.1", port), Handler).serve_forever()
+            self._guarded(run)
+
+    httpd = ThreadingHTTPServer(("127.0.0.1", port), Handler)
+    stepper_thread = threading.Thread(target=stepper, daemon=True)
+    return httpd, stepper_thread
+
+
+def _serve_http(service: SolveService, port: int, poll_s: float = 0.01):
+    """Demo JSON-over-HTTP front-end; blocks forever."""
+    httpd, stepper_thread = _build_server(service, port, poll_s)
+    stepper_thread.start()
+    print(f"[solve_server] listening on "
+          f"http://127.0.0.1:{httpd.server_address[1]}", flush=True)
+    httpd.serve_forever()
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--jobs", type=int, default=32)
     ap.add_argument("--lanes", type=int, default=8)
-    ap.add_argument("--n", type=int, default=1000)
+    ap.add_argument("--n", default="1000",
+                    help="problem size, or a comma list for a "
+                         "heterogeneous-n workload (e.g. 500,1300,6000)")
     ap.add_argument("--objectives", default="griewank,sphere,rastrigin")
     ap.add_argument("--samples", type=int, default=50)
     ap.add_argument("--passes", type=int, default=5)
     ap.add_argument("--block", type=int, default=4096)
+    ap.add_argument("--max-pad-waste", type=float,
+                    default=DEFAULT_MAX_PAD_WASTE,
+                    help="padding-waste ceiling per lane for ladder "
+                         "bucketing (0 = exact-pad bucketing, one "
+                         "executable per distinct padded n)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=1)
     ap.add_argument("--resume", action="store_true",
@@ -121,11 +183,20 @@ def main(argv=None):
                          "running a synthetic batch")
     args = ap.parse_args(argv)
 
-    if args.resume and args.ckpt_dir:
-        engine = SolveEngine.resume(args.ckpt_dir, ckpt_every=args.ckpt_every)
+    if args.resume:
+        if not args.ckpt_dir:
+            ap.error("--resume requires --ckpt-dir (without it there is no "
+                     "checkpoint to resume from and nothing would be saved)")
+        # flags only shape a FRESH engine (empty ckpt dir); a found
+        # checkpoint's recorded lanes/max_pad_waste win so the resumed run
+        # can't diverge from the uninterrupted one
+        engine = SolveEngine.resume(args.ckpt_dir, ckpt_every=args.ckpt_every,
+                                    lanes=args.lanes,
+                                    max_pad_waste=args.max_pad_waste)
     else:
         engine = SolveEngine(lanes=args.lanes, checkpoint_dir=args.ckpt_dir,
-                             ckpt_every=args.ckpt_every)
+                             ckpt_every=args.ckpt_every,
+                             max_pad_waste=args.max_pad_waste)
     service = SolveService(engine)
 
     if args.http is not None:
@@ -135,8 +206,14 @@ def main(argv=None):
     cfg = ABOConfig(samples_per_pass=args.samples, n_passes=args.passes,
                     block_size=args.block)
     objectives = [o for o in args.objectives.split(",") if o]
+    try:
+        ns = [int(v) for v in str(args.n).split(",") if v.strip()]
+    except ValueError:
+        ns = []
+    if not ns:
+        ap.error(f"--n must be an int or comma list of ints, got {args.n!r}")
     if not args.resume:
-        engine.submit_many(_mixed_specs(args.jobs, objectives, args.n, cfg))
+        engine.submit_many(_mixed_specs(args.jobs, objectives, ns, cfg))
         if args.ckpt_dir:
             engine.snapshot()    # a kill during warmup can't lose the queue
     done_before = {j for j, r in engine.jobs.items() if r.status == "done"}
@@ -150,9 +227,11 @@ def main(argv=None):
              if r.status == "done" and j not in done_before)
     stats = {"done": done, "steps": engine.step_count, "dt_s": dt,
              "jobs_per_s": done / dt, "fe_per_s": fe / dt,
-             "buckets": len(engine.groups)}
+             "buckets": len(engine.groups),
+             "buckets_created": len(engine.bucket_keys_seen)}
     print(f"[solve_server] {done} jobs in {dt:.2f}s over "
-          f"{engine.step_count} steps ({len(engine.groups)} buckets): "
+          f"{engine.step_count} steps "
+          f"({stats['buckets_created']} buckets compiled): "
           f"{stats['jobs_per_s']:.1f} jobs/s, {stats['fe_per_s']:.3g} "
           f"probe-FE/s", flush=True)
     return stats

@@ -156,3 +156,163 @@ def test_kill_resume_determinism(tmp_path):
 def test_resume_empty_dir_gives_fresh_engine(tmp_path):
     eng = SolveEngine.resume(tmp_path)
     assert eng.step_count == 0 and not eng.pending()
+    # engine knobs must reach the fresh-engine fallback, not be dropped
+    eng = SolveEngine.resume(tmp_path, lanes=2, max_pad_waste=0.0)
+    assert eng.lanes == 2 and eng.max_pad_waste == 0.0
+
+
+# ---- PR 2 regression sweep -------------------------------------------------
+def test_stats_queued_ignores_stale_cancelled_ids():
+    """Cancelled-while-queued jobs must not surface as phantom queued work
+    — neither live (cancel purges the deque) nor after a resume restores a
+    stale queue that still carries them."""
+    eng = SolveEngine(lanes=1, max_fuse=1)
+    svc = SolveService(eng)
+    ids = eng.submit_many(_mixed_specs(3))
+    eng.step()                           # ids[0] running
+    assert eng.cancel(ids[1])
+    assert ids[1] not in eng.queue       # purged immediately
+    assert svc.stats()["queued"] == 1
+    # a queue restored from an old checkpoint can still hold stale ids:
+    # counting must skip them even without the purge
+    eng.queue.append(ids[1])
+    assert svc.stats()["queued"] == 1
+    eng.run()
+    assert svc.stats()["queued"] == 0
+    assert eng.poll(ids[2])["status"] == DONE
+
+
+def test_seeds_beyond_int32_run_and_match_solo():
+    """Seeds >= 2**31 used to raise OverflowError in _refill's int32 lane
+    array; abo_minimize accepts them (PRNGKey folds to 32 bits), so the
+    engine must too — with identical bits."""
+    spec = JobSpec("rastrigin", 64, CFG, seed=2 ** 31 + 5)
+    eng = SolveEngine(lanes=1)
+    jid = eng.submit(spec)
+    eng.run()
+    r = eng.result(jid)
+    solo = _solo_fun(spec)
+    assert r.fun == solo or abs(r.fun - solo) < 1e-6
+
+
+def test_negative_seed_matches_solo():
+    # PRNGKey folds negative seeds; the engine's fold must mirror it
+    spec = JobSpec("rastrigin", 64, CFG, seed=-3)
+    eng = SolveEngine(lanes=1)
+    jid = eng.submit(spec)
+    eng.run()
+    assert eng.result(jid).fun == _solo_fun(spec)
+
+
+def test_result_mark_fetched_flag():
+    """A wire front-end defers the fetched mark until its reply actually
+    went out; only then do snapshots drop the solution vector."""
+    svc = SolveService(lanes=1)
+    jid = svc.submit({"objective": "sphere", "n": 8,
+                      "config": {"samples_per_pass": 12, "n_passes": 2}}
+                     )["job_id"]
+    svc.drain()
+    rec = svc.engine.jobs[jid]
+    assert "x" in svc.result(jid, mark_fetched=False)
+    assert not rec.fetched               # reply not confirmed yet
+    svc.mark_fetched(jid)
+    assert rec.fetched
+    assert "x" in svc.result(jid)        # still in memory, only snapshots
+    #                                      stop carrying it
+
+
+def test_solve_server_rejects_malformed_n():
+    from repro.launch import solve_server
+    for bad in (",", "400x", ""):
+        with pytest.raises(SystemExit):
+            solve_server.main(["--n", bad])
+
+
+def test_bad_seeds_rejected_at_submit():
+    with pytest.raises(ValueError):
+        JobSpec("sphere", 8, CFG, seed=2 ** 63)      # PRNGKey would raise
+    with pytest.raises(ValueError):
+        JobSpec("sphere", 8, CFG, seed="not-an-int")
+    with pytest.raises(ValueError):
+        JobSpec("sphere", 8, CFG, seed=True)
+
+
+def test_snapshot_evicts_fetched_solution(tmp_path):
+    """Once a result has been delivered, later snapshots stop carrying its
+    solution vector (bounded aux growth); unfetched results keep theirs."""
+    eng = SolveEngine(lanes=2, checkpoint_dir=tmp_path)
+    ids = eng.submit_many(_mixed_specs(2))
+    eng.run()
+    eng.result(ids[0])                   # fetch -> evict from snapshots
+    eng.snapshot()
+    aux = eng.ckpt.aux(eng.ckpt.latest_step())
+    assert "x" not in aux["jobs"][ids[0]] and aux["jobs"][ids[0]]["fetched"]
+    assert "x" in aux["jobs"][ids[1]]
+
+    res = SolveEngine.resume(tmp_path)
+    assert res.jobs[ids[0]].x is None and res.jobs[ids[0]].fetched
+    assert res.jobs[ids[1]].x is not None
+    # fun/history survive eviction; only the vector is gone
+    assert res.result(ids[0]).fun == eng.jobs[ids[0]].fun
+    assert res.result(ids[0]).x is None
+    np.testing.assert_array_equal(res.result(ids[1]).x, eng.jobs[ids[1]].x)
+    svc = SolveService(res)
+    out = svc.result(ids[0])
+    assert out["status"] == DONE and "x" not in out
+
+
+def test_solve_server_resume_requires_ckpt_dir():
+    from repro.launch import solve_server
+    with pytest.raises(SystemExit):
+        solve_server.main(["--resume"])
+
+
+def test_http_front_end_hardening():
+    """GET handlers answer JSON for every outcome: 404 for unknown job
+    ids and endpoints (not 200-with-error-field), 400 for malformed
+    payloads — and never a raw traceback page."""
+    import http.client
+    import json
+    import threading
+
+    from repro.launch.solve_server import _build_server
+
+    svc = SolveService(lanes=1)
+    httpd, _stepper = _build_server(svc, 0)   # ephemeral port, no stepper:
+    port = httpd.server_address[1]            # the test drains explicitly
+    t = threading.Thread(target=httpd.serve_forever, daemon=True)
+    t.start()
+    try:
+        def req(method, path, body=None):
+            conn = http.client.HTTPConnection("127.0.0.1", port, timeout=30)
+            conn.request(method, path, body=body)
+            resp = conn.getresponse()
+            payload = json.loads(resp.read().decode())
+            conn.close()
+            return resp.status, payload
+
+        status, out = req("POST", "/submit", json.dumps(
+            {"objective": "sphere", "n": 64, "seed": 0,
+             "config": {"samples_per_pass": 12, "n_passes": 3}}))
+        assert status == 200
+        jid = out["job_id"]
+        assert req("GET", f"/result?job_id={jid}")[0] == 200  # not done yet
+        svc.drain()
+        status, out = req("GET", f"/result?job_id={jid}")
+        assert status == 200 and len(out["x"]) == 64
+
+        assert req("GET", "/poll?job_id=nope") == \
+            (404, {"job_id": "nope", "error": "unknown job"})
+        assert req("GET", "/result?job_id=nope")[0] == 404
+        assert req("GET", "/poll")[0] == 404                  # missing id
+        assert req("GET", "/nosuch")[0] == 404
+        assert req("GET", "/stats")[0] == 200
+        assert req("POST", "/cancel", json.dumps({"job_id": "nope"}))[0] \
+            == 404
+        assert req("POST", "/submit", "{not json")[0] == 400
+        status, out = req("POST", "/submit", json.dumps(
+            {"objective": "sphere", "n": 64, "seed": 2 ** 63}))
+        assert status == 400 and "seed" in out["error"]
+    finally:
+        httpd.shutdown()
+        httpd.server_close()

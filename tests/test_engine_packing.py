@@ -1,0 +1,179 @@
+"""Heterogeneous-n lane packing: the pad-size ladder, fill-aware
+admission under the max_pad_waste bound, near-empty sibling-group fusion,
+and kill/resume of ladder-bucketed groups.
+
+The load-bearing property throughout is *pad invariance*: a job's
+per-pass math and seeded start depend only on (spec, n), never on which
+canonical n_pad its lane rides, so every placement policy — dedicated
+equal-n buckets, exact-pad bucketing, ladder rungs, mid-flight grafts —
+produces bit-identical fun/x.
+"""
+import numpy as np
+import pytest
+
+from repro.core import ABOConfig, abo_minimize
+from repro.engine import DONE, JobSpec, SolveEngine, SolveService
+from repro.engine.batched import (DEFAULT_MAX_PAD_WASTE, bucket_key,
+                                  family_key, pad_ladder, padded_n)
+from repro.objectives import OBJECTIVES
+
+CFG = ABOConfig(samples_per_pass=12, n_passes=3, block_size=64)
+# 4 distinct exact pads (320, 384, 448, 512) on 2 ladder rungs (384, 512)
+MIXED_NS = (300, 350, 440, 460)
+OBJ = "rastrigin"
+
+
+def _specs(seed0=0):
+    return [JobSpec(OBJ, n, CFG, seed=seed0 + i)
+            for i, n in enumerate(MIXED_NS)]
+
+
+def _dedicated(spec, **kw):
+    """The spec solved alone — its own single-job engine/bucket."""
+    eng = SolveEngine(lanes=1, **kw)
+    jid = eng.submit(spec)
+    eng.run()
+    return eng.result(jid)
+
+
+def test_pad_ladder_rungs():
+    # canonical {1, 1.5} x pow2 multiples, in units of block
+    assert [pad_ladder(m, 1) for m in (1, 2, 3, 4, 5, 7, 9, 13)] == \
+        [1, 2, 3, 4, 6, 8, 12, 16]
+    for n, block in [(300, 64), (350, 64), (1100, 128), (5, 1), (8192, 4096)]:
+        exact = -(-n // block) * block
+        rung = pad_ladder(n, block)
+        assert rung >= n and rung % block == 0
+        assert rung == exact or (rung - n) / rung <= DEFAULT_MAX_PAD_WASTE
+        # 0 waste budget = exact padding, the PR 1 contract
+        assert pad_ladder(n, block, 0.0) == exact
+    # a bound tighter than the rung's waste falls back to the exact pad
+    assert pad_ladder(300, 64, 0.05) == 320
+
+
+def test_ladder_collapses_buckets():
+    exact = {bucket_key(OBJ, n, CFG, 4, max_pad_waste=0.0)
+             for n in MIXED_NS}
+    ladder = {bucket_key(OBJ, n, CFG, 4) for n in MIXED_NS}
+    assert len(exact) == 4
+    assert sorted(padded_n(k) for k in ladder) == [384, 512]
+    assert len({family_key(k) for k in exact | ladder}) == 1
+
+
+def test_mixed_n_bit_identical_across_policies():
+    """Ladder-bucketed mixed-n lanes reproduce dedicated equal-n buckets
+    AND exact-pad bucketing bit-for-bit, and stay within tolerance of the
+    standalone solver."""
+    specs = _specs()
+    eng = SolveEngine(lanes=4)
+    ids = eng.submit_many(specs)
+    eng.run()
+    assert sorted(padded_n(k) for k in eng.bucket_keys_seen) == [384, 512]
+    for spec, jid in zip(specs, ids):
+        got = eng.result(jid)
+        for ref in (_dedicated(spec),                      # own ladder bucket
+                    _dedicated(spec, max_pad_waste=0.0)):  # exact pad
+            assert got.fun == ref.fun
+            np.testing.assert_array_equal(got.x, ref.x)
+        solo = abo_minimize(OBJECTIVES[spec.objective], spec.n,
+                            config=spec.config, seed=spec.seed)
+        assert abs(got.fun - solo.fun) < 1e-5
+        assert got.fun == solo.fun
+        np.testing.assert_array_equal(got.x, solo.x)
+
+
+def test_admission_respects_waste_bound():
+    # n=200 in the open 512 group would waste 61% > bound -> own rung
+    eng = SolveEngine(lanes=2, max_fuse=1)
+    eng.submit(JobSpec(OBJ, 460, CFG, seed=0))
+    eng.submit(JobSpec(OBJ, 200, CFG, seed=1))
+    eng.step()
+    assert sorted(padded_n(g.key) for g in eng.groups.values()) == [256, 512]
+
+
+def test_admission_prefers_open_group():
+    # 300's own rung is 384; riding 350's open 384 group shares the lane
+    # group instead of opening a second one
+    eng = SolveEngine(lanes=2, max_fuse=1)
+    eng.submit(JobSpec(OBJ, 350, CFG, seed=0))
+    eng.submit(JobSpec(OBJ, 300, CFG, seed=1))
+    eng.step()
+    assert len(eng.groups) == 1
+    (group,) = eng.groups.values()
+    assert padded_n(group.key) == 384 and group.active == 2
+
+
+def test_sibling_groups_fuse_mid_flight():
+    """A lane grafted into a wider sibling group mid-solve finishes with
+    bit-identical results; the emptied rung group is dropped."""
+    sa = JobSpec(OBJ, 350, CFG, seed=3)     # rung 384; 31.6% waste at 512
+    sb = JobSpec(OBJ, 460, CFG, seed=4)     # rung 512
+    eng = SolveEngine(lanes=4, max_fuse=1)
+    ja = eng.submit(sa)
+    eng.step()                              # A mid-flight in its 384 group
+    jb = eng.submit(sb)
+    eng.step()                              # B placed; A grafted into 512
+    assert [padded_n(g.key) for g in eng.groups.values()] == [512]
+    assert eng.groups[bucket_key(OBJ, 460, CFG, 4)].active == 2
+    eng.run()
+    for spec, jid in ((sa, ja), (sb, jb)):
+        ref = _dedicated(spec)
+        assert eng.result(jid).fun == ref.fun
+        np.testing.assert_array_equal(eng.result(jid).x, ref.x)
+
+
+def test_fusion_respects_waste_bound():
+    # 200 at 512 wastes 61% -> its group must NOT fuse away
+    eng = SolveEngine(lanes=4, max_fuse=1)
+    eng.submit(JobSpec(OBJ, 200, CFG, seed=0))
+    eng.step()
+    eng.submit(JobSpec(OBJ, 460, CFG, seed=1))
+    eng.step()
+    assert sorted(padded_n(g.key) for g in eng.groups.values()) == [256, 512]
+
+
+def test_kill_resume_ladder_groups(tmp_path):
+    """Kill/resume round-trips ladder-bucketed mixed-n groups and their
+    admission policy, reproducing the uninterrupted run bit-for-bit."""
+    specs = _specs(seed0=40) + _specs(seed0=80)
+
+    ref = SolveEngine(lanes=3)
+    ref_ids = ref.submit_many(specs)
+    ref.run()
+
+    eng = SolveEngine(lanes=3, checkpoint_dir=tmp_path, ckpt_every=1,
+                      max_fuse=1)
+    ids = eng.submit_many(specs)
+    for _ in range(4):
+        eng.step()
+    seen = set(eng.bucket_keys_seen)
+    del eng                                 # "kill" mid-solve
+
+    res = SolveEngine.resume(tmp_path)
+    assert res.max_pad_waste == DEFAULT_MAX_PAD_WASTE
+    assert all(padded_n(k) in (384, 512) for k in res.groups)
+    assert res.bucket_keys_seen == seen     # compiled-shape history survives
+    res.run()
+    for a, b in zip(ref_ids, ids):
+        assert ref.result(a).fun == res.result(b).fun
+        np.testing.assert_array_equal(ref.result(a).x, res.result(b).x)
+
+
+def test_stats_report_fill_and_waste():
+    svc = SolveService(lanes=2, max_fuse=1)
+    svc.submit({"objective": OBJ, "n": 350, "seed": 0,
+                "config": {"samples_per_pass": 12, "n_passes": 3,
+                           "block_size": 64}})
+    svc.submit({"objective": OBJ, "n": 300, "seed": 1,
+                "config": {"samples_per_pass": 12, "n_passes": 3,
+                           "block_size": 64}})
+    svc.step()
+    s = svc.stats()
+    assert s["buckets"] == 1 and s["buckets_created"] == 1
+    assert s["max_pad_waste"] == DEFAULT_MAX_PAD_WASTE
+    assert s["fill_ratio"] == pytest.approx(650 / 768)
+    assert s["pad_waste"] == pytest.approx(1 - 650 / 768)
+    svc.drain()
+    s = svc.stats()
+    assert s["jobs"] == {DONE: 2}
+    assert s["fill_ratio"] is None and s["pad_waste"] is None
