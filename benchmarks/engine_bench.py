@@ -1,36 +1,45 @@
 """Engine throughput: batched multi-tenant engine vs a sequential
-``abo_minimize`` loop at K ∈ {1, 8, 32}, plus the heterogeneous-n packing
-scenario (ladder vs exact-pad bucketing).
+``abo_minimize`` loop at K ∈ {1, 8, 32}, plus the heterogeneous-n paged
+scenario at paper sampling rates.
 
     PYTHONPATH=src python -m benchmarks.engine_bench
 
 Emits the same ``name,us_per_call,derived`` CSV rows as benchmarks/run.py
-(also mounted there as ``--only engine`` / ``--only engine_mixed``).
+(also mounted there as ``--only engine`` / ``--only engine_mixed``), and
+writes/extends ``BENCH_engine.json`` — a machine-readable perf trajectory
+(jobs/s, speedup over the in-bench sequential lap, compiled-executable
+count, padded-compute waste from ``pad_stats``) so regressions show up as
+data, not vibes. Speedups are always against a sequential lap measured in
+the same process on the same inputs: container wall-clock drifts up to
+2x, so absolute seconds are noise but the ratio is signal.
+
 "us_per_call" is per *job*; "derived" reports jobs/sec, probe-FE/sec, and
 the batched/sequential speedup. Both paths are warmed first so the
 comparison is steady-state compute + dispatch, not compile time.
 
-The mixed-n scenario is the realistic-traffic case the pad ladder exists
-for: 32 jobs over 8 distinct n in [500, 8000]. Exact-pad bucketing
-compiles 8 executables and runs 8 single-lane groups (no batching at
-all); ladder bucketing collapses them onto 3 rungs, so lanes actually
-share executables again. Padded compute goes up by the waste bound
-(≤ 35%), dispatches and harvest syncs go down ~3x — a clear win for the
-dispatch-bound small/medium-n regime the engine targets.
+The mixed-n scenario is the realistic-traffic case the paged pool exists
+for: 32 jobs over 8 distinct n in [670, 3050] at the paper's sampling
+rate (m=50 per pass, 250 probes/coordinate) — the regime where the old
+rung-padded layout's padded compute nearly cancelled its batching win
+(~1.1x). The paged layout sweeps only occupied block rows, so every lane
+pays for its true ``ceil(n/block)`` blocks while all 8 lanes share one
+executable family; padded compute shrinks to the row-width ladder's
+residue (a few percent, reported as ``swept_waste``).
 
-Workload: paper-default sampling (m=250 probes/coordinate) at n=100 — the
-exact Gauss-Seidel regime where each job is a coordinate-scan over (1, 50)
-tiles and a sequential abo_minimize loop is dominated by per-call dispatch
-and host-sync latency. That is precisely the workload class (many
-small/medium solves) the engine exists for: it packs jobs into (K, 1, m)
-tiles, fuses whole generations into one jitted call, and never syncs the
-host mid-flight. The headline sweep uses the sphere objective; the
-K=32 per-objective rows show the spread — transcendental-heavy objectives
-(griewank) are compute-bound on CPU and gain less from batching than
-dispatch-bound ones (sphere, rastrigin).
+Workload for the K sweep: paper-default sampling (m=250 probes/coordinate)
+at n=100 — the exact Gauss-Seidel regime where each job is a
+coordinate-scan over (1, 50) tiles and a sequential abo_minimize loop is
+dominated by per-call dispatch and host-sync latency. That is precisely
+the workload class (many small/medium solves) the engine exists for. The
+headline sweep uses the sphere objective; the K=32 per-objective rows show
+the spread — transcendental-heavy objectives (griewank) are compute-bound
+on CPU and gain less from batching than dispatch-bound ones (sphere,
+rastrigin).
 """
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 from repro.core import ABOConfig, abo_minimize
@@ -45,31 +54,48 @@ KS = (1, 8, 32)
 MAX_LANES = 32
 REPEATS = 3
 
+ARTIFACT = "BENCH_engine.json"
 
-def _sequential(obj: str, k: int, seed0: int) -> float:
+# scenario -> metrics dict, filled as scenarios run (see write_artifact)
+_METRICS: dict[str, dict] = {}
+
+
+def _sequential(specs) -> float:
     t0 = time.perf_counter()
-    for i in range(k):
-        abo_minimize(OBJECTIVES[obj], N, config=CFG, seed=seed0 + i)
+    for s in specs:
+        abo_minimize(OBJECTIVES[s.objective], s.n, config=s.config,
+                     seed=s.seed)
     return time.perf_counter() - t0
 
 
-def _engine(obj: str, k: int, seed0: int) -> float:
-    eng = SolveEngine(lanes=min(k, MAX_LANES))
-    eng.submit_many(JobSpec(obj, N, CFG, seed=seed0 + i) for i in range(k))
+def _engine(specs, lanes) -> tuple[float, SolveEngine]:
+    eng = SolveEngine(lanes=lanes)
+    eng.submit_many(specs)
     t0 = time.perf_counter()
     eng.run()
-    return time.perf_counter() - t0
+    return time.perf_counter() - t0, eng
+
+
+def _k_specs(obj, k, seed0):
+    return [JobSpec(obj, N, CFG, seed=seed0 + i) for i in range(k)]
 
 
 def _pair(obj: str, k: int):
     """(sequential, batched) wall time for k jobs, best of REPEATS."""
-    dt_seq = min(_sequential(obj, k, seed0=1000 + r) for r in range(REPEATS))
-    dt_eng = min(_engine(obj, k, seed0=1000 + r) for r in range(REPEATS))
+    dt_seq = min(_sequential(_k_specs(obj, k, 1000 + r))
+                 for r in range(REPEATS))
+    dt_eng = min(_engine(_k_specs(obj, k, 1000 + r),
+                         min(k, MAX_LANES))[0] for r in range(REPEATS))
     return dt_seq, dt_eng
 
 
 def _rows(tag: str, k: int, dt_seq: float, dt_eng: float):
     fe = CFG.n_passes * CFG.samples_per_pass * N
+    _METRICS[f"{tag}_k{k}"] = {
+        "jobs": k, "jobs_per_s": k / dt_eng,
+        "jobs_per_s_sequential": k / dt_seq,
+        "speedup": dt_seq / dt_eng,
+    }
     yield (f"{tag}_seq_k{k}", dt_seq / k * 1e6,
            f"jobs_per_s={k / dt_seq:.1f} fe_per_s={k * fe / dt_seq:.3g}")
     yield (f"{tag}_batched_k{k}", dt_eng / k * 1e6,
@@ -78,71 +104,92 @@ def _rows(tag: str, k: int, dt_seq: float, dt_eng: float):
 
 
 def engine_vs_sequential(ks=KS):
-    _sequential(OBJ, 1, seed0=0)         # warm abo_minimize's jit cache
+    _sequential(_k_specs(OBJ, 1, 0))     # warm abo_minimize's jit cache
     for k in ks:                         # warm the engine's compile caches
-        _engine(OBJ, k, seed0=0)
+        _engine(_k_specs(OBJ, k, 0), min(k, MAX_LANES))
     for k in ks:
         dt_seq, dt_eng = _pair(OBJ, k)
         yield from _rows(f"engine_{OBJ}", k, dt_seq, dt_eng)
     # per-objective spread at the deepest queue
     for obj in ("rastrigin", "griewank"):
-        _sequential(obj, 1, seed0=0)
-        _engine(obj, max(ks), seed0=0)
+        _sequential(_k_specs(obj, 1, 0))
+        _engine(_k_specs(obj, max(ks), 0), min(max(ks), MAX_LANES))
         dt_seq, dt_eng = _pair(obj, max(ks))
         yield from _rows(f"engine_{obj}", max(ks), dt_seq, dt_eng)
 
 
-# ---- heterogeneous-n packing: ladder vs exact-pad bucketing ---------------
-# 8 distinct n in [500, 8000] with 8 distinct exact pads at block=64 that
-# collapse onto 3 ladder rungs (768, 1536, 3072). Sampling is kept light
-# (m=20/pass) so the run stays in the dispatch-bound regime the engine
-# targets; paper-default m=50 shifts this size range compute-bound, where
-# bucketing policy matters less (the padded-compute waste and the dispatch
-# savings then nearly cancel).
+# ---- heterogeneous-n: paged pool vs sequential at paper sampling ----------
+# 8 distinct n with 8 distinct page counts (11..48 blocks at block=64), all
+# riding ONE executable family. Paper sampling (m=50/pass, 5 passes) makes
+# this compute-bound — the regime where padded compute is fatal: the old
+# rung-padded layout measured only ~1.1x here because every lane swept its
+# canonical rung. The paged sweep's compute is Σ ceil(n_i/block), so the
+# batching win survives.
 MIXED_NS = (670, 730, 1100, 1340, 1400, 1500, 2600, 3050)
 MIXED_JOBS = 32
 MIXED_LANES = 8
 MIXED_OBJ = "sphere"
-MIXED_CFG = ABOConfig(samples_per_pass=20, block_size=64)
-MIXED_POLICIES = (("exact", 0.0), ("ladder", None))   # None -> default bound
+MIXED_CFG = ABOConfig(samples_per_pass=50, block_size=64)
 
 
-def _mixed_waste(w):
-    from repro.engine.batched import DEFAULT_MAX_PAD_WASTE
-    return DEFAULT_MAX_PAD_WASTE if w is None else w
-
-
-def _mixed_engine(max_pad_waste, seed0):
-    eng = SolveEngine(lanes=MIXED_LANES,
-                      max_pad_waste=_mixed_waste(max_pad_waste))
-    eng.submit_many(JobSpec(MIXED_OBJ, MIXED_NS[i % len(MIXED_NS)],
-                            MIXED_CFG, seed=seed0 + i)
-                    for i in range(MIXED_JOBS))
-    t0 = time.perf_counter()
-    eng.run()
-    return time.perf_counter() - t0, eng
+def _mixed_specs(seed0):
+    return [JobSpec(MIXED_OBJ, MIXED_NS[i % len(MIXED_NS)], MIXED_CFG,
+                    seed=seed0 + i) for i in range(MIXED_JOBS)]
 
 
 def engine_mixed_n():
     from repro.engine import batched
-    buckets = {tag: len({batched.bucket_key(
-        MIXED_OBJ, n, MIXED_CFG, MIXED_LANES,
-        max_pad_waste=_mixed_waste(w)) for n in MIXED_NS})
-        for tag, w in MIXED_POLICIES}
-    for tag, w in MIXED_POLICIES:        # warm both policies' compile caches
-        _mixed_engine(w, seed0=0)
-    fe = sum(MIXED_CFG.n_passes * MIXED_CFG.samples_per_pass
-             * MIXED_NS[i % len(MIXED_NS)] for i in range(MIXED_JOBS))
-    dts = {tag: min(_mixed_engine(w, seed0=1000 + r)[0]
-                    for r in range(REPEATS))
-           for tag, w in MIXED_POLICIES}
-    for tag, _ in MIXED_POLICIES:
-        dt = dts[tag]
-        extra = (f" speedup={dts['exact'] / dt:.2f}x"
-                 if tag == "ladder" else "")
-        yield (f"engine_mixedn_{tag}_k{MIXED_JOBS}", dt / MIXED_JOBS * 1e6,
-               f"jobs_per_s={MIXED_JOBS / dt:.1f} fe_per_s={fe / dt:.3g} "
-               f"buckets={buckets[tag]}{extra}")
+    _sequential(_mixed_specs(0))         # warm both paths' compile caches
+    _engine(_mixed_specs(0), MIXED_LANES)
+    dt_seq = min(_sequential(_mixed_specs(1000 + r))
+                 for r in range(REPEATS))
+    best = min((_engine(_mixed_specs(1000 + r), MIXED_LANES)
+                for r in range(REPEATS)), key=lambda t: t[0])
+    dt_eng, eng = best
+    waste = eng.pad_stats()["swept_waste"]
+    fe = sum(MIXED_CFG.n_passes * MIXED_CFG.samples_per_pass * s.n
+             for s in _mixed_specs(0))
+    speedup = dt_seq / dt_eng
+    _METRICS["engine_mixedn"] = {
+        "jobs": MIXED_JOBS, "ns": list(MIXED_NS),
+        "samples_per_pass": MIXED_CFG.samples_per_pass,
+        "jobs_per_s": MIXED_JOBS / dt_eng,
+        "jobs_per_s_sequential": MIXED_JOBS / dt_seq,
+        "speedup": speedup,
+        "swept_waste": waste,
+        "families": len(eng.family_keys_seen),
+        # executables THIS engine's families own, not the whole process
+        "executables": batched.compiled_executable_count(
+            eng.family_keys_seen),
+    }
+    yield (f"engine_mixedn_seq_k{MIXED_JOBS}", dt_seq / MIXED_JOBS * 1e6,
+           f"jobs_per_s={MIXED_JOBS / dt_seq:.1f} fe_per_s={fe / dt_seq:.3g}")
+    yield (f"engine_mixedn_paged_k{MIXED_JOBS}", dt_eng / MIXED_JOBS * 1e6,
+           f"jobs_per_s={MIXED_JOBS / dt_eng:.1f} "
+           f"fe_per_s={fe / dt_eng:.3g} speedup={speedup:.2f}x "
+           f"swept_waste={waste:.1%} "
+           f"families={len(eng.family_keys_seen)}")
+
+
+def write_artifact(path: str | pathlib.Path = ARTIFACT) -> pathlib.Path:
+    """Append this run's metrics to the JSON perf trajectory (a list of
+    run records, newest last). Partial runs append whatever scenarios
+    actually executed."""
+    path = pathlib.Path(path)
+    history = []
+    if path.exists():
+        try:
+            history = json.loads(path.read_text())
+            if not isinstance(history, list):
+                history = []
+        except (OSError, json.JSONDecodeError):
+            history = []                 # unreadable -> start a fresh file
+    history.append({
+        "unix_time": time.time(),
+        "scenarios": dict(_METRICS),
+    })
+    path.write_text(json.dumps(history, indent=1))
+    return path
 
 
 def main():
@@ -151,6 +198,7 @@ def main():
         print(f"{name},{us:.1f},{derived}")
     for name, us, derived in engine_mixed_n():
         print(f"{name},{us:.1f},{derived}")
+    print(f"# wrote {write_artifact()}")
 
 
 if __name__ == "__main__":

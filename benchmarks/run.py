@@ -51,6 +51,11 @@ def main() -> None:
     if want("engine_mixed"):
         from benchmarks.engine_bench import engine_mixed_n
         rows += list(engine_mixed_n())
+    if want("engine") or want("engine_mixed"):
+        # machine-readable perf trajectory (jobs/s, speedup vs the
+        # in-bench sequential lap, executable count, padded-compute waste)
+        from benchmarks import engine_bench
+        print(f"# wrote {engine_bench.write_artifact()}")
 
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

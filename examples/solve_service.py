@@ -17,13 +17,14 @@ arbitrarily deep queue. The minimal client loop is::
 
 Add ``checkpoint_dir=...`` to snapshot in-flight state every step and
 ``SolveEngine.resume(dir)`` to pick every job back up mid-solve after a
-kill. Jobs of *different* n share lane groups too: padded sizes are
-quantized onto a geometric ladder of canonical rungs and admission is
-fill-ratio-aware under a ``max_pad_waste`` bound, so the mixed-n workload
-below compiles a couple of executables instead of one per distinct n —
-with bit-identical per-job results. The dict-level front-end used below
-(``SolveService``) is the same one ``python -m repro.launch.solve_server
---http PORT`` serves over HTTP.
+kill. Jobs of *different* n share everything: each lane's coordinate
+blocks live in its family's shared page pool, the row-compacted sweep
+touches only occupied block rows, and the mixed-n workload below compiles
+one executable family per objective instead of one per distinct n — with
+bit-identical per-job results and no padded compute beyond each lane's
+last block. The dict-level front-end used below (``SolveService``) is the
+same one ``python -m repro.launch.solve_server --http PORT`` serves over
+HTTP.
 """
 import time
 
@@ -64,7 +65,7 @@ def main():
     dt = time.time() - t0
 
     print(f"drained in {dt:.2f}s ({N_JOBS / dt:.1f} jobs/s, "
-          f"{svc.stats()['buckets_created']} compile buckets for "
+          f"{svc.stats()['families_created']} executable families for "
           f"{len(set(SIZES))} problem sizes)")
     for jid in job_ids[:3]:
         r = svc.result(jid)

@@ -100,13 +100,56 @@ def _candidate_grid(xb, lo, hi, half_width, m, is_first_pass):
     return jnp.concatenate([grid, xb[:, None]], axis=1)       # (B, m)
 
 
+def _block_step(obj, cfg, probe_tile, xb, aggs, idx, valid, half_width,
+                is_first_pass, lam, lo, hi):
+    """Probe-and-commit one Jacobi block: the (B, m) candidate tile, the
+    argmin selection, and the guarded aggregate commit.
+
+    This is the single block-level primitive BOTH sweep layouts execute:
+    :func:`_sweep_pass` scans it over a dense padded vector (abo_minimize),
+    and the engine's row-compacted page sweep (repro.engine.batched) vmaps
+    it over gathered lane rows — sharing the code path is what makes the
+    two layouts bit-identical per lane.
+    """
+    m = cfg.samples_per_pass
+    agg_dt = aggs.dtype
+    cands = _candidate_grid(xb, lo, hi, half_width, m, is_first_pass)
+    # Padding coordinates are frozen: their only candidate is themselves.
+    cands = jnp.where(valid[:, None], cands, xb[:, None])
+
+    f_cand, delta = probe_tile(aggs, idx, xb, cands, lam)  # (B, m), (B, m, A)
+    sel = jnp.argmin(f_cand, axis=1)                       # (B,)
+    x_sel = jnp.take_along_axis(cands, sel[:, None], axis=1)[:, 0]
+    d_sel = jnp.take_along_axis(
+        delta, sel[:, None, None], axis=1)[:, 0, :]        # (B, A)
+    aggs_new = aggs + d_sel.sum(axis=0).astype(agg_dt)
+
+    if cfg.guard_commits:
+        accept = obj.combine_at(aggs_new, lam) <= obj.combine_at(aggs, lam)
+        x_sel = jnp.where(accept, x_sel, xb)
+        aggs_new = jnp.where(accept, aggs_new, aggs)
+    return x_sel, aggs_new
+
+
+def pass_schedule(cfg: ABOConfig, pass_idx, agg_dtype):
+    """(half_width, lam) for a pass index — the shrink/continuation
+    schedule of :func:`abo_pass_step`, factored out so the engine's row
+    sweep computes the identical per-lane values. ``pass_idx`` may be a
+    scalar or a traced array (per-lane schedules under vmap)."""
+    half_width = 0.5 * cfg.resolved_shrink() ** pass_idx
+    if cfg.coupling_schedule == "linear" and cfg.n_passes > 1:
+        lam = (pass_idx / (cfg.n_passes - 1)).astype(agg_dtype)
+    else:
+        lam = jnp.ones((), agg_dtype)
+    return half_width, lam
+
+
 def _sweep_pass(obj, x, aggs, n_valid, half_width, pass_idx, lam, cfg,
                 probe_tile, bounds=None):
     """One full pass: scan Jacobi block sweeps over the (padded) solution."""
     n_pad = x.shape[0]
-    bsz, m = cfg.block_size, cfg.samples_per_pass
+    bsz = cfg.block_size
     n_blocks = n_pad // bsz
-    agg_dt = aggs.dtype
 
     def block_body(carry, blk):
         x, aggs = carry
@@ -120,23 +163,8 @@ def _sweep_pass(obj, x, aggs, n_valid, half_width, pass_idx, lam, cfg,
             hi = jax.lax.dynamic_slice(bounds[1], (start,), (bsz,))
         else:
             lo, hi = obj.lower, obj.upper
-        cands = _candidate_grid(xb, lo, hi, half_width, m, pass_idx == 0)
-        # Padding coordinates are frozen: their only candidate is themselves.
-        cands = jnp.where(valid[:, None], cands, xb[:, None])
-
-        f_cand, delta = probe_tile(aggs, idx, xb, cands, lam)  # (B, m), (B, m, A)
-        sel = jnp.argmin(f_cand, axis=1)                       # (B,)
-        x_sel = jnp.take_along_axis(cands, sel[:, None], axis=1)[:, 0]
-        d_sel = jnp.take_along_axis(
-            delta, sel[:, None, None], axis=1)[:, 0, :]        # (B, A)
-        aggs_new = aggs + d_sel.sum(axis=0).astype(agg_dt)
-
-        if cfg.guard_commits:
-            accept = obj.combine_at(aggs_new, lam) <= obj.combine_at(aggs, lam)
-            x_sel = jnp.where(accept, x_sel, xb)
-            aggs = jnp.where(accept, aggs_new, aggs)
-        else:
-            aggs = aggs_new
+        x_sel, aggs = _block_step(obj, cfg, probe_tile, xb, aggs, idx, valid,
+                                  half_width, pass_idx == 0, lam, lo, hi)
         x = jax.lax.dynamic_update_slice(x, x_sel, (start,))
         return (x, aggs), None
 
@@ -320,11 +348,7 @@ def abo_pass_step(
     p = state.pass_idx
     # fractional window after pass p-1 shrinks geometrically from the
     # full range (0.5 = whole interval)
-    half_width = 0.5 * cfg.resolved_shrink() ** p
-    if cfg.coupling_schedule == "linear" and cfg.n_passes > 1:
-        lam = (p / (cfg.n_passes - 1)).astype(state.aggs.dtype)
-    else:
-        lam = jnp.ones((), state.aggs.dtype)
+    half_width, lam = pass_schedule(cfg, p, state.aggs.dtype)
     x, aggs = _sweep_pass(obj, state.x, state.aggs, state.n_valid, half_width,
                           p, lam, cfg, probe_tile, bounds)
     # re-sync aggregates exactly once per pass: kills accumulated-delta

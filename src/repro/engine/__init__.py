@@ -1,12 +1,14 @@
 """Batched multi-tenant solve engine: many concurrent ABO jobs through one
-jitted, vmapped sweep (see scheduler.SolveEngine for the step loop and
-batched.bucket_key for the compile-sharing contract). Jobs of different n
-share executables through batched.pad_ladder's canonical pad sizes with
-fill-aware admission under SolveEngine(max_pad_waste=...) — per-job
-results are bit-identical at every admissible pad."""
+jitted, row-compacted sweep over block-paged lane pools (see
+scheduler.SolveEngine for the step loop and batched.family_key for the
+compile-sharing contract). Lane coordinate blocks live in a shared page
+pool with host-side page tables, so a job pays compute for its true
+``ceil(n / block)`` blocks — never for padding rungs or idle lanes — while
+jobs of every n share one executable family, with bit-identical per-job
+results at any layout."""
 from repro.engine.jobs import CANCELLED, DONE, QUEUED, RUNNING, JobSpec, JobState
-from repro.engine.scheduler import LaneGroup, SolveEngine
+from repro.engine.scheduler import LanePool, SolveEngine
 from repro.engine.service import SolveService
 
-__all__ = ["JobSpec", "JobState", "LaneGroup", "SolveEngine", "SolveService",
+__all__ = ["JobSpec", "JobState", "LanePool", "SolveEngine", "SolveService",
            "QUEUED", "RUNNING", "DONE", "CANCELLED"]

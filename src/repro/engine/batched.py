@@ -1,40 +1,48 @@
-"""Vmapped batched ABO sweep + explicit compile cache.
+"""Block-paged lane pool + row-compacted sweep: pay-for-n batched stepping.
 
-K same-bucket jobs are packed into one stacked :class:`ABOState` (leading
-lane axis K), and one jitted ``vmap(abo_pass_step)`` advances every lane by
-one pass — a single (K, B, m) probe tile per block instead of K separate
-(B, m) dispatches. Lanes carry their own ``pass_idx`` and ``n_valid``, so a
-freshly refilled lane (pass 0) rides in the same executable as a lane on its
-final pass, and jobs whose true n differs can share a bucket as long as they
-pad to the same n_pad.
+Layout. Every solve *family* — (objective, effective config, dtype), the
+things that shape compiled code — owns one :class:`PoolState`: a shared
+``(P, block_size)`` page pool holding every lane's coordinate blocks, plus
+per-lane-slot scalar state (aggregates, history, pass index, true n). Which
+pages belong to which lane lives host-side in the scheduler's page tables;
+the device never sees a lane as a contiguous (n_pad,) vector except through
+explicit gathers. A lane with true n occupies exactly ``ceil(n / block)``
+pages, so jobs of wildly different n share one pool, one set of compiled
+executables, and — crucially — the engine's compute is proportional to
+``Σ_i ceil(n_i / block)``, not ``K × n_pad``: padding blocks and idle lanes
+simply do not exist to be swept.
 
-Bucketing: a *bucket* is (objective, n_pad, effective config, K, dtype) —
-everything that shapes the compiled executables. The explicit module-level
-cache maps bucket keys to a :class:`LaneOps` bundle of jitted functions so
-every lane group with the same shape shares one set of compiled programs
-for the life of the process (jax.jit would also cache, but only if closure
-identities stayed stable; the dict makes the sharing contract explicit and
-inspectable).
+Row-compacted sweep. A pass is an outer loop over block *rows* (row r of a
+lane covers coordinates ``[r·block, (r+1)·block)``). At each row the step
+gathers only the lanes actually occupying that row, runs the shared
+(W, block, m) probe tile — the same :func:`repro.core.abo._block_step`
+primitive ``abo_minimize`` scans, vmapped over the gathered lanes — and
+scatters the committed blocks back into the pool. Because the number of
+lanes occupying a row shrinks as r grows past the short lanes' depth, the
+gather width W is padded onto the small :func:`pad_ladder` {1, 1.5}×pow2
+rung ladder (the pad ladder of the old dense layout, shrunk to a row-width
+ladder), so the whole width range compiles a handful of row-step
+executables and row padding wastes at most 1/3 — in practice a few percent
+— of swept block rows. Rows execute in ascending-row order per lane
+(descending width), preserving the Gauss-Seidel block ordering of the
+dense sweep.
 
-Heterogeneous n: instead of exact ``ceil(n/block)*block`` padding,
-:func:`pad_ladder` quantizes n_pad onto a few canonical geometric sizes
-({1, 1.5} x powers of two, in block multiples — worst-case padding waste
-1/3), so a wide n distribution collapses onto a handful of shared
-executables. A job only rides a rung when its padding waste stays under
-``max_pad_waste``; otherwise it falls back to its exact pad. Correctness
-under mixed-n lanes rests on two invariants: per-lane ``n_valid`` freezes
-padding coordinates (their probe deltas are exactly zero), and seeded
-starts are pad-invariant (core.abo.seeded_start draws per-coordinate), so
-the same job produces bit-identical results at ANY admissible rung.
-:func:`get_graft` moves in-flight lanes between same-family buckets (the
-scheduler's near-empty group fusion) by re-padding the solution leaf.
+Bit-identity. Per-lane math is exactly ``abo_minimize``'s: the row sweep
+vmaps the identical block primitive with the identical pass schedule, and
+every whole-lane reduction (end-of-pass aggregate re-sync, placement init,
+final exact re-eval) runs over a *gathered contiguous row view* — the
+lane's pages concatenated in order, length padded onto a page-count rung —
+so the floating-point reduction tree matches the dense solver's up to
+trailing masked zeros, the same invariance the heterogeneous-pad layout
+established. Seeded starts stay pad-invariant (per-coordinate counter
+draws), so a job's fun/x are bit-identical whichever pool, slot, page
+assignment, or lane mix serves it.
 
-Everything per-job-hot is jitted: placing a job into a lane (start vector +
-aggregates + scatter, one dispatch), stepping all K lanes (one dispatch per
-pass), and finalizing a finished lane (exact re-eval + gather, one
-dispatch). The scheduler never syncs the device mid-flight — lane progress
-is tracked host-side — so successive pass steps pipeline through JAX's
-async dispatch.
+Everything per-job-hot is jitted and cached per compiled shape in
+:class:`PoolOps`: row sweeps keyed (width rung, row-count rung), lane
+syncs / placements / finalizes keyed (page-count rung, lane-batch rung).
+The scheduler tracks progress host-side and never syncs the device
+mid-flight; successive row sweeps pipeline through JAX's async dispatch.
 """
 from __future__ import annotations
 
@@ -44,34 +52,41 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.abo import (ABOConfig, ABOState, _default_probe_tile,
-                            abo_make_state, abo_pass_step, effective_config,
-                            seeded_start)
+from repro.core.abo import (ABOConfig, _block_step, _default_probe_tile,
+                            effective_config, pass_schedule, seeded_start)
 from repro.objectives.base import SeparableObjective, _default_agg_dtype
 
-# bucket key -> LaneOps (jitted step/place/finalize for that shape)
-_COMPILE_CACHE: dict[tuple, "LaneOps"] = {}
-# (src bucket key, dst bucket key) -> jitted cross-bucket lane migration
-_GRAFT_CACHE: dict[tuple, Callable] = {}
+# (family key, lanes, pages) -> PoolOps bundle of jitted functions
+_POOL_OPS_CACHE: dict[tuple, "PoolOps"] = {}
 
-# Padding-waste ceiling for ladder admission: the {1, 1.5} x pow2 ladder's
-# intrinsic worst case is 1/3 (n just past a rung, bumped to 1.5x), so at
-# the default every n rides a canonical rung; tightening it makes outliers
-# fall back to their exact pad, and 0 restores exact-pad bucketing.
+# Padding-waste ceiling for ladder quantization: the {1, 1.5} x pow2
+# ladder's intrinsic worst case is 1/3, so at the default every count rides
+# a canonical rung; 0 disables quantization (exact sizes).
 DEFAULT_MAX_PAD_WASTE = 0.35
+
+# Page id 0 and lane slot `lanes` (one past the budget) are reserved
+# scratch targets for ladder padding entries in gathers/scatters: scratch
+# page content is all-zeros by construction and the scratch lane has
+# n_valid = 0, so padded work is inert and padded reads are exact zeros.
+SCRATCH_PAGE = 0
 
 
 def pad_ladder(n: int, block: int,
                max_pad_waste: float = DEFAULT_MAX_PAD_WASTE) -> int:
-    """Canonical padded size for an n-dimensional job.
+    """Canonical padded size for a count of ``n`` in units of ``block``.
 
     Rungs are {1, 1.5} x powers of two in units of ``block``
     (block x {1, 2, 3, 4, 6, 8, 12, ...}) — a geometric ladder, so the
-    whole [1, 1e9] n range needs only ~2 log2(range) compiled shapes and
+    whole [1, 1e9] range needs only ~2 log2(range) distinct sizes and
     padding waste ``(n_pad - n) / n_pad`` never exceeds 1/3. If the
     smallest rung >= n still wastes more than ``max_pad_waste`` (possible
-    only for bounds tighter than the ladder's 1/3), the job keeps its
-    exact ``ceil(n/block)*block`` pad.
+    only for bounds tighter than the ladder's 1/3), the count keeps its
+    exact ``ceil(n/block)*block`` size.
+
+    In the paged layout this quantizes *counts*, not coordinate padding:
+    row widths (lanes gathered per block row), page-count rungs (gathered
+    row views), lane-batch widths, and pool capacities all ride it with
+    ``block=1``.
     """
     exact = -(-n // block) * block
     if max_pad_waste <= 0.0:
@@ -91,178 +106,323 @@ def pad_ladder(n: int, block: int,
     return exact
 
 
-def bucket_key(obj_name: str, n: int, cfg: ABOConfig, k: int,
-               dtype=jnp.float32,
-               max_pad_waste: float = DEFAULT_MAX_PAD_WASTE) -> tuple:
-    """Compile-sharing key for an n-dimensional job on a K-lane group."""
+def family_key(obj_name: str, n: int, cfg: ABOConfig,
+               dtype=jnp.float32) -> tuple:
+    """Compile-sharing key for an n-dimensional job: everything that shapes
+    compiled executables EXCEPT any padded size. Jobs of every n whose
+    effective config matches share one pool and one executable set (n only
+    enters through the block-size resolution of tiny problems)."""
     eff = effective_config(cfg, n)
-    n_pad = pad_ladder(n, eff.block_size, max_pad_waste)
-    return (obj_name, n_pad, eff, k, jnp.dtype(dtype).name)
-
-
-def padded_n(key: tuple) -> int:
-    return key[1]
+    return (obj_name, eff, jnp.dtype(dtype).name)
 
 
 def key_config(key: tuple) -> ABOConfig:
-    return key[2]
+    return key[1]
 
 
-def family_key(key: tuple) -> tuple:
-    """Everything but n_pad — buckets sharing a family differ only in pad
-    size, so their lanes are mutually migratable (see :func:`get_graft`)
-    and a queued job may be admitted into any of them whose padding waste
-    stays under the engine's bound."""
-    return (key[0],) + key[2:]
+def pages_for(n: int, block: int) -> int:
+    """Pages a lane with true n occupies — its real footprint."""
+    return -(-n // block)
 
 
-@dataclasses.dataclass(frozen=True)
-class LaneOps:
-    """Jitted per-bucket operations over a stacked K-lane ABOState.
+@dataclasses.dataclass
+class PoolState:
+    """One family's device state: the shared page pool + per-slot scalars.
 
-    ``place_many``/``finalize_many`` are whole-group ops — one dispatch no
-    matter how many lanes turn over in a step — so per-job host overhead is
-    O(1/K). ``step_r(r)`` returns a step that advances ``r`` passes in one
-    jitted fori_loop; the scheduler fuses a full generation when every
-    active lane has >= r passes left.
+    ``pool[0]`` is the reserved all-zero scratch page and slot ``lanes``
+    (the last row of the per-slot arrays) the scratch lane — ladder padding
+    entries in gathers/scatters target them. Page ownership is host-side
+    (the scheduler's page tables); nothing here says which lane a page
+    belongs to.
     """
 
-    step: Callable          # (batch_state) -> batch_state: one pass
-    step_r: Callable        # (r: int) -> jitted r-pass step (cached)
-    step_compact: Callable  # (r, w) -> jitted (bs, lane_idx (w,)) step that
-    #                         gathers w lanes, runs r passes, scatters back —
-    #                         partially-filled groups skip idle-lane compute
-    place_x: Callable       # (batch_state, lane, x, n_valid) -> batch_state
-    place_many: Callable    # (batch_state, mask, seeded, seeds, n_valid)
-    finalize_many: Callable  # (batch_state) -> (f (K,), x (K,n_pad), hist)
+    pool: jnp.ndarray       # (P, block) coordinate pages
+    aggs: jnp.ndarray       # (lanes+1, n_aggs) running aggregates per slot
+    hist: jnp.ndarray       # (lanes+1, n_passes) objective after each pass
+    pass_idx: jnp.ndarray   # (lanes+1,) int32, next pass per slot
+    n_valid: jnp.ndarray    # (lanes+1,) int32, true n per slot (0 = idle)
 
 
-def get_lane_ops(obj: SeparableObjective, key: tuple) -> LaneOps:
-    ops = _COMPILE_CACHE.get(key)
-    if ops is None:
-        _, n_pad, cfg, _, dtype_name = key
-        dt = jnp.dtype(dtype_name)
-        probe_tile = _default_probe_tile(obj)
+jax.tree_util.register_dataclass(
+    PoolState,
+    data_fields=["pool", "aggs", "hist", "pass_idx", "n_valid"],
+    meta_fields=[],
+)
 
-        def one_pass(bs: ABOState) -> ABOState:
-            return jax.vmap(
-                lambda s: abo_pass_step(obj, s, config=cfg,
-                                        probe_tile=probe_tile)
-            )(bs)
 
-        step_cache: dict[tuple, Callable] = {}
+def zeros_pool_state(obj: SeparableObjective, key: tuple, lanes: int,
+                     pages: int) -> PoolState:
+    """An all-idle pool (also the checkpoint-restore ``like`` tree).
+    Idle and scratch slots hold n_valid=0, so they are never swept and any
+    ladder-padding work routed at them is frozen."""
+    _, cfg, dtype = key
+    agg_dt = _default_agg_dtype()
+    return PoolState(
+        pool=jnp.zeros((pages, cfg.block_size), jnp.dtype(dtype)),
+        aggs=jnp.zeros((lanes + 1, obj.n_aggs), agg_dt),
+        hist=jnp.zeros((lanes + 1, cfg.n_passes), agg_dt),
+        pass_idx=jnp.zeros((lanes + 1,), jnp.int32),
+        n_valid=jnp.zeros((lanes + 1,), jnp.int32),
+    )
 
-        def step_r(r: int) -> Callable:
-            fn = step_cache.get((r, None))
-            if fn is None:
-                fn = jax.jit(lambda bs: jax.lax.fori_loop(
-                    0, r, lambda _, s: one_pass(s), bs))
-                step_cache[(r, None)] = fn
-            return fn
 
-        def step_compact(r: int, w: int) -> Callable:
-            fn = step_cache.get((r, w))
-            if fn is None:
-                def run(bs: ABOState, lane_idx) -> ABOState:
-                    sub = jax.tree_util.tree_map(lambda a: a[lane_idx], bs)
-                    sub = jax.lax.fori_loop(0, r, lambda _, s: one_pass(s),
-                                            sub)
-                    return jax.tree_util.tree_map(
-                        lambda a, s: a.at[lane_idx].set(s), bs, sub)
-                fn = jax.jit(run)
-                step_cache[(r, w)] = fn
-            return fn
+def grow_pool(state: PoolState, pages: int) -> PoolState:
+    """Extend the page pool to ``pages`` capacity (existing pages keep
+    their ids and content; new pages are zero). Host-rare: capacities ride
+    the ladder, so growth happens O(log traffic) times per family."""
+    if pages <= state.pool.shape[0]:
+        return state
+    pool = jnp.zeros((pages, state.pool.shape[1]), state.pool.dtype)
+    pool = pool.at[: state.pool.shape[0]].set(state.pool)
+    return dataclasses.replace(state, pool=pool)
 
-        def place_x(bs: ABOState, lane, x, n_valid) -> ABOState:
-            lane_state = abo_make_state(obj, x.astype(dt), n_valid, cfg)
-            return jax.tree_util.tree_map(
-                lambda b, s: b.at[lane].set(s.astype(b.dtype)), bs,
-                lane_state)
 
-        def place_many(bs: ABOState, mask, seeded, seeds,
-                       n_valid) -> ABOState:
-            """Re-initialize every lane where ``mask``; seeded lanes start
-            from their PRNG stream (``seeds`` is an unsigned array — the
-            scheduler folds Python seeds to the width PRNGKey itself
-            traces in the active precision mode, so bits match
-            abo_minimize's seeded start; the draw is per-coordinate
-            counter-based, so they also match at every ladder pad size),
-            the rest from the deterministic golden-section point."""
-            def init_lane(seed, is_seeded, nv):
-                xs = seeded_start(seed, n_pad, dt, obj.lower, obj.upper)
-                xg = jnp.full((n_pad,), obj.lower + 0.6180339887
+class PoolOps:
+    """Jitted per-family operations over a :class:`PoolState`.
+
+    Each method returns a cached jitted callable for one compiled shape:
+
+    * ``fused_step(bands, sync)`` — a whole sweep-plan step: every width
+      band's row loop plus the end-of-pass lane sync, wrapped in a
+      dynamic-count pass loop, in ONE executable. The compile key is the
+      plan *signature* (band and sync shape rungs only), so steady-state
+      traffic reuses one program and per-pass dispatch overhead — the
+      dominant cost of narrow mixed-n bands — is paid once per fused
+      generation instead of once per band per pass.
+    * ``place(g, v)`` / ``place_x(g)`` — initialize freshly admitted lanes
+      (seeded / golden-section / explicit x0 starts) into their pages.
+    * ``finalize(g, v)`` — exact final re-eval + row-view gather for ONLY
+      the finishing lanes (idle/running lanes cost nothing at harvest).
+
+    All state arguments are donated: the scheduler threads one PoolState
+    through, so buffers update in place.
+    """
+
+    def __init__(self, obj: SeparableObjective, key: tuple, lanes: int,
+                 pages: int):
+        self.obj = obj
+        self.key = key
+        self.lanes = lanes
+        self.pages = pages
+        self.cfg: ABOConfig = key_config(key)
+        self.dtype = jnp.dtype(key[2])
+        self.probe_tile = _default_probe_tile(obj)
+        self._cache: dict[tuple, Callable] = {}
+
+    def compiled_count(self) -> int:
+        return len(self._cache)
+
+    # ----------------------------------------------------- traced sub-steps
+    def _band_body(self, state: PoolState, lanes, pages, rows, n_rows):
+        """Sweep one width band: rows [0, n_rows) of the (r_cap, w) plan
+        arrays, in order. Each row gathers the w lanes' blocks, runs the
+        shared (w, block, m) probe tile — the identical per-lane schedule
+        + block primitive as abo_pass_step, so commits are bit-identical —
+        and scatters blocks + aggregates back. Ladder-padding entries
+        point at the scratch lane/page and are frozen no-ops; planned rows
+        past n_rows cost nothing (dynamic loop count)."""
+        obj, cfg, probe_tile = self.obj, self.cfg, self.probe_tile
+        bsz = cfg.block_size
+
+        def entry_step(xb, ag, p, nv, row):
+            half_width, lam = pass_schedule(cfg, p, ag.dtype)
+            start = row * bsz
+            idx = start + jnp.arange(bsz)
+            valid = idx < nv
+            return _block_step(obj, cfg, probe_tile, xb, ag, idx, valid,
+                               half_width, p == 0, lam,
+                               obj.lower, obj.upper)
+
+        def body(j, carry):
+            pool, aggs = carry
+            ln, pg, rw = lanes[j], pages[j], rows[j]
+            xb = pool[pg]                        # (w, block)
+            ag = aggs[ln]                        # (w, A)
+            xb2, ag2 = jax.vmap(entry_step)(
+                xb, ag, state.pass_idx[ln], state.n_valid[ln], rw)
+            return pool.at[pg].set(xb2), aggs.at[ln].set(ag2)
+
+        pool, aggs = jax.lax.fori_loop(
+            0, n_rows, body, (state.pool, state.aggs))
+        return dataclasses.replace(state, pool=pool, aggs=aggs)
+
+    def _gather_rows(self, state: PoolState, pages):
+        """(v, g) page ids -> (v, g*block) contiguous row views. Pages past
+        a lane's true count are scratch (exact zeros), so masked whole-row
+        reductions bit-match the dense solver's padded vector."""
+        v, g = pages.shape
+        return state.pool[pages].reshape(v, g * self.cfg.block_size)
+
+    def _sync_body(self, state: PoolState, lanes, pages):
+        """End-of-pass bookkeeping of abo_pass_step for the gathered
+        lanes: exact aggregate re-sync over the contiguous row view (kills
+        accumulated-delta drift), history entry, pass_idx advance."""
+        obj = self.obj
+        xrow = self._gather_rows(state, pages)
+        nv = state.n_valid[lanes]
+        p = state.pass_idx[lanes]
+        # Clamp the history column: identity for real lanes (they sync at
+        # most n_passes times before harvest), but ladder-padding entries
+        # keep incrementing the scratch slot's pass_idx across plans —
+        # without the clamp their scatter index outruns the hist width and
+        # we'd silently depend on drop-out-of-bounds scatter semantics.
+        p_hist = jnp.minimum(p, self.cfg.n_passes - 1)
+        aggs = jax.vmap(lambda xr, n: obj.aggregates(
+            xr, n, chunk_size=1 << 20))(xrow, nv)
+        f = jax.vmap(obj.combine)(aggs)
+        return dataclasses.replace(
+            state,
+            aggs=state.aggs.at[lanes].set(aggs.astype(state.aggs.dtype)),
+            hist=state.hist.at[lanes, p_hist].set(
+                f.astype(state.hist.dtype)),
+            pass_idx=state.pass_idx.at[lanes].add(1),
+        )
+
+    # ----------------------------------------------------------- fused step
+    def fused_step(self, bands: tuple, sync: tuple) -> Callable:
+        """One executable for a whole sweep-plan step.
+
+        ``bands`` is the plan signature ``((w, r_cap), ...)`` and ``sync``
+        the lane-sync shape ``(g, v)``. The returned callable takes
+        ``(state, n_fused, lanes_0, pages_0, rows_0, n_rows_0, ...,
+        sync_lanes, sync_pages)`` and runs ``n_fused`` complete passes —
+        every band in ascending-row order (preserving per-lane
+        Gauss-Seidel block ordering), then the per-lane re-sync — inside
+        one dynamic fori_loop. Both the pass count and the per-band row
+        counts are traced scalars, so one compiled program serves any
+        fuse depth and any partial band fill of the same signature.
+        """
+        ck = ("step", bands, sync)
+        fn = self._cache.get(ck)
+        if fn is None:
+            n_bands = len(bands)
+
+            def run(state: PoolState, n_fused, *arrs):
+                band_args = [arrs[4 * i: 4 * i + 4] for i in range(n_bands)]
+                sync_args = arrs[4 * n_bands: 4 * n_bands + 2]
+
+                def one_pass(_, st):
+                    for ba in band_args:
+                        st = self._band_body(st, *ba)
+                    return self._sync_body(st, *sync_args)
+
+                return jax.lax.fori_loop(0, n_fused, one_pass, state)
+
+            fn = jax.jit(run, donate_argnums=(0,))
+            self._cache[ck] = fn
+        return fn
+
+    # ------------------------------------------------------------ placement
+    def place(self, g: int, v: int) -> Callable:
+        """(state, lanes (v,), pages (v, g), seeded (v,), seeds (v,),
+        n_valid (v,)) -> state. Start vectors + exact init aggregates for
+        freshly admitted lanes, scattered into their pages — one dispatch
+        for the whole refill batch. Seeded starts are per-coordinate
+        counter draws (bit-identical to abo_minimize's at any layout);
+        coordinates past a lane's true n are zeroed so scratch-page writes
+        from ladder padding keep the scratch page exactly zero."""
+        ck = ("place", g, v)
+        fn = self._cache.get(ck)
+        if fn is None:
+            obj, cfg, dt = self.obj, self.cfg, self.dtype
+            bsz = cfg.block_size
+            width = g * bsz
+
+            def init_row(seed, is_seeded, nv):
+                xs = seeded_start(seed, width, dt, obj.lower, obj.upper)
+                xg = jnp.full((width,), obj.lower + 0.6180339887
                               * (obj.upper - obj.lower), dt)
-                return abo_make_state(obj, jnp.where(is_seeded, xs, xg),
-                                      nv, cfg)
+                xr = jnp.where(is_seeded, xs, xg)
+                xr = jnp.where(jnp.arange(width) < nv, xr,
+                               jnp.zeros((), dt))
+                ag = obj.aggregates(xr, nv, chunk_size=1 << 20)
+                return xr, ag
 
-            fresh = jax.vmap(init_lane)(seeds, seeded, n_valid)
-            return jax.tree_util.tree_map(
-                lambda f, b: jnp.where(
-                    jnp.reshape(mask, mask.shape + (1,) * (f.ndim - 1)),
-                    f.astype(b.dtype), b),
-                fresh, bs)
+            def run(state: PoolState, lanes, pages, seeded, seeds, n_valid):
+                xr, ag = jax.vmap(init_row)(seeds, seeded, n_valid)
+                return self._write_lanes(state, lanes, pages, xr, ag,
+                                         n_valid)
 
-        def finalize_many(bs: ABOState):
-            # same exact O(N) re-evaluation abo_minimize reports — the
-            # result carries no accumulated-delta rounding
-            f = jax.vmap(lambda x, nv: obj.combine(
-                obj.aggregates(x, nv, chunk_size=1 << 20)))(bs.x, bs.n_valid)
-            return f, bs.x, bs.hist
+            fn = jax.jit(run, donate_argnums=(0,))
+            self._cache[ck] = fn
+        return fn
 
-        ops = LaneOps(step=step_r(1), step_r=step_r,
-                      step_compact=step_compact,
-                      place_x=jax.jit(place_x),
-                      place_many=jax.jit(place_many),
-                      finalize_many=jax.jit(finalize_many))
-        _COMPILE_CACHE[key] = ops
+    def place_x(self, g: int) -> Callable:
+        """(state, lane (), pages (g,), xrow (g*block,), n_valid ()) ->
+        state. Explicit-x0 placement for one lane (rare; xrow is built
+        host-side with zeros past n)."""
+        ck = ("place_x", g)
+        fn = self._cache.get(ck)
+        if fn is None:
+            obj = self.obj
+
+            def run(state: PoolState, lane, pages, xrow, n_valid):
+                ag = obj.aggregates(xrow, n_valid, chunk_size=1 << 20)
+                return self._write_lanes(
+                    state, lane[None], pages[None], xrow[None], ag[None],
+                    n_valid[None])
+
+            fn = jax.jit(run, donate_argnums=(0,))
+            self._cache[ck] = fn
+        return fn
+
+    def _write_lanes(self, state, lanes, pages, xrow, aggs, n_valid):
+        v, g = pages.shape
+        bsz = self.cfg.block_size
+        return dataclasses.replace(
+            state,
+            pool=state.pool.at[pages].set(
+                xrow.reshape(v, g, bsz).astype(state.pool.dtype)),
+            aggs=state.aggs.at[lanes].set(aggs.astype(state.aggs.dtype)),
+            hist=state.hist.at[lanes].set(
+                jnp.zeros((v, self.cfg.n_passes), state.hist.dtype)),
+            pass_idx=state.pass_idx.at[lanes].set(
+                jnp.zeros((v,), jnp.int32)),
+            n_valid=state.n_valid.at[lanes].set(
+                n_valid.astype(jnp.int32)),
+        )
+
+    # ------------------------------------------------------------- finalize
+    def finalize(self, g: int, v: int) -> Callable:
+        """(state, lanes (v,), pages (v, g)) -> (f (v,), x (v, g*block),
+        hist (v, n_passes)). Exact O(n) re-eval + solution gather for ONLY
+        the finishing lanes — the dense layout re-evaluated every lane in
+        the group on every harvest; here turnover costs the finishers'
+        pages and nothing else. Same dispatch economics (one call per
+        harvest batch), a fraction of the compute."""
+        ck = ("final", g, v)
+        fn = self._cache.get(ck)
+        if fn is None:
+            obj = self.obj
+
+            def run(state: PoolState, lanes, pages):
+                xrow = self._gather_rows(state, pages)
+                nv = state.n_valid[lanes]
+                f = jax.vmap(lambda xr, n: obj.combine(obj.aggregates(
+                    xr, n, chunk_size=1 << 20)))(xrow, nv)
+                return f, xrow, state.hist[lanes]
+
+            fn = jax.jit(run)
+            self._cache[ck] = fn
+        return fn
+
+
+def get_pool_ops(obj: SeparableObjective, key: tuple, lanes: int,
+                 pages: int) -> PoolOps:
+    ck = (key, lanes, pages)
+    ops = _POOL_OPS_CACHE.get(ck)
+    if ops is None:
+        ops = PoolOps(obj, key, lanes, pages)
+        _POOL_OPS_CACHE[ck] = ops
     return ops
 
 
-def get_graft(src_key: tuple, dst_key: tuple) -> Callable:
-    """Jitted cross-bucket lane migration for the scheduler's group fusion.
-
-    ``graft(dst_bs, src_bs, src_lanes, dst_lanes)`` gathers ``src_lanes``
-    from the src stacked state, right-pads the solution leaf with frozen
-    zeros up to the dst bucket's n_pad, and scatters into ``dst_lanes`` —
-    one dispatch, no host sync. Padding coordinates are inert (n_valid
-    freezes them and their probe deltas are exactly zero), so a migrated
-    lane's remaining passes are bit-identical to the run it left.
-    """
-    assert family_key(src_key) == family_key(dst_key), (src_key, dst_key)
-    assert padded_n(src_key) <= padded_n(dst_key), (src_key, dst_key)
-    ck = (src_key, dst_key)
-    fn = _GRAFT_CACHE.get(ck)
-    if fn is None:
-        def graft(dst_bs: ABOState, src_bs: ABOState,
-                  src_lanes, dst_lanes) -> ABOState:
-            def move(d, s):
-                sub = s[src_lanes]
-                if sub.shape[1:] != d.shape[1:]:       # the x leaf: re-pad
-                    widths = [(0, 0)] + [(0, dw - sw) for dw, sw
-                                         in zip(d.shape[1:], sub.shape[1:])]
-                    sub = jnp.pad(sub, widths)
-                return d.at[dst_lanes].set(sub.astype(d.dtype))
-            return jax.tree_util.tree_map(move, dst_bs, src_bs)
-        fn = jax.jit(graft)
-        _GRAFT_CACHE[ck] = fn
-    return fn
-
-
-def compile_cache_size() -> int:
-    return len(_COMPILE_CACHE)
-
-
-def zeros_batch_state(obj: SeparableObjective, key: tuple) -> ABOState:
-    """An all-idle K-lane stacked state (also the checkpoint-restore
-    ``like`` tree). Idle lanes hold a benign dummy solve: x=0 is feasible
-    for every registered objective, and n_valid=n_pad keeps the masked
-    sweep well-defined."""
-    _, n_pad, cfg, k, dtype = key
-    agg_dt = _default_agg_dtype()
-    return ABOState(
-        x=jnp.zeros((k, n_pad), jnp.dtype(dtype)),
-        aggs=jnp.zeros((k, obj.n_aggs), agg_dt),
-        hist=jnp.zeros((k, cfg.n_passes), agg_dt),
-        pass_idx=jnp.zeros((k,), jnp.int32),
-        n_valid=jnp.full((k,), n_pad, jnp.int32),
-    )
+def compiled_executable_count(families: set | None = None) -> int:
+    """Distinct jitted executables built for pool operations (each cache
+    entry is one compiled shape). With ``families`` (a set of family
+    keys, e.g. an engine's ``family_keys_seen``), counts only executables
+    those families own — the per-engine number stats report; without it,
+    the process-wide total."""
+    return sum(ops.compiled_count() for (key, _, _), ops
+               in _POOL_OPS_CACHE.items()
+               if families is None or key in families)

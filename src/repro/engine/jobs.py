@@ -103,6 +103,9 @@ class JobState:
     x: np.ndarray | None = None      # final solution (DONE only)
     fetched: bool = False            # result() delivered at least once —
     #                                  snapshots stop carrying x (GC)
+    done_seq: int | None = None      # engine-wide finish order (DONE or
+    #                                  CANCELLED) — retention-window GC
+    #                                  evicts delivered records oldest-first
 
     @property
     def n_passes(self) -> int:
@@ -146,6 +149,8 @@ class JobState:
              "history": [float(v) for v in self.history]}
         if self.fun is not None:
             d["fun"] = self.fun
+        if self.done_seq is not None:
+            d["done_seq"] = self.done_seq
         if self.fetched:
             d["fetched"] = True
         elif self.x is not None and self.x.size <= self.AUX_X_MAX_N:
@@ -161,7 +166,8 @@ class JobState:
         return cls(job_id=d["job_id"], spec=JobSpec.from_dict(d["spec"]),
                    status=d["status"], passes_done=d.get("passes_done", 0),
                    history=list(d.get("history", [])), fun=d.get("fun"),
-                   x=x, fetched=d.get("fetched", False))
+                   x=x, fetched=d.get("fetched", False),
+                   done_seq=d.get("done_seq"))
 
 
 def next_job_id(counter: int) -> str:

@@ -1,35 +1,40 @@
-"""Slot-based continuous batching of ABO solve lanes.
+"""Slot-based continuous batching of ABO solve lanes over paged pools.
 
 The engine owns a fixed budget of ``lanes`` concurrent solves. Jobs are
-bucketed by compiled shape (see batched.bucket_key); each bucket gets a
-K-lane group driven by one jitted vmapped pass step. Between steps, lanes
-whose job has run all its passes are finalized and immediately refilled from
-the queue — the swap-finished-jobs-between-steps pattern of
+grouped by compiled *family* (objective, effective config, dtype — see
+batched.family_key); each family gets one :class:`LanePool` whose lane
+coordinate blocks live in a shared page pool with host-side page tables.
+Between steps, lanes whose job has run all its passes are finalized via a
+compact gather of just those lanes and immediately refilled from the
+queue — the swap-finished-jobs-between-steps pattern of
 ``launch/serve.py``, at pass granularity instead of token granularity.
 
-Heterogeneous n: padded sizes are quantized onto batched.pad_ladder's
-canonical rungs, and admission is fill-ratio-aware — a queued job lands in
-the open same-family group with the most active lanes whose padding waste
-for it stays under ``max_pad_waste``, so a wide n distribution shares a
-handful of executables instead of fragmenting into per-n groups. When the
-queue runs dry, near-empty sibling groups are fused into the widest member
-(one jitted graft dispatch per source group) so the tail of a workload
-steps one executable, not one per rung. ``max_pad_waste=0`` restores PR 1's
-exact-pad bucketing bit-for-bit.
+Heterogeneous n costs what it costs: a lane occupies ``ceil(n / block)``
+pages and the row-compacted sweep touches exactly the occupied rows, so
+admission needs no fill-ratio gate, no canonical pad rungs, and no
+sibling-group fusion — a queued job lands in its family's pool whenever a
+lane slot is free, and jobs of every n share that family's executables.
+The only ladder left is on *counts* (row widths, gathered-view sizes,
+pool capacity), which bounds compiled shapes while wasting at most 1/3 —
+in practice a few percent — of swept block rows (``pad_stats`` reports
+the realized fraction).
 
-Every lane advances exactly one pass per step, so job progress is tracked
+Every lane advances whole passes per step, so job progress is tracked
 host-side (``JobState.passes_done``) and the step loop never reads device
-memory: pass steps pipeline through JAX's async dispatch, and the engine
-only syncs when a job finishes (its exact final objective) or a checkpoint
-is cut.
+memory: row sweeps pipeline through JAX's async dispatch, and the engine
+only syncs when a job finishes (its exact final objective) or a
+checkpoint is cut.
 
 Fault tolerance: with a ``checkpoint_dir``, the engine snapshots every
-``ckpt_every`` steps — the stacked lane states as array leaves, and the job
-table / queue / bucket map as the manifest's aux JSON — in one atomic
+``ckpt_every`` steps — the pool states as array leaves, and the job
+table / queue / page tables as the manifest's aux JSON — in one atomic
 CheckpointManager commit. ``SolveEngine.resume(dir)`` rebuilds the whole
 engine mid-solve; because snapshots land on pass boundaries and every pass
 is deterministic, a killed-and-resumed engine reproduces an uninterrupted
-run's results exactly.
+run's results exactly. With ``retain_done=N``, whole job records of
+delivered (fetched DONE) or cancelled jobs beyond the N most recent are
+evicted from the table, so a long-lived service's snapshot aux stays
+bounded no matter how many jobs churn through.
 """
 from __future__ import annotations
 
@@ -42,7 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
-from repro.core.abo import ABOConfig, ABOState
+from repro.core.abo import ABOConfig
 from repro.engine import batched
 from repro.engine.jobs import (CANCELLED, DONE, QUEUED, RUNNING, JobSpec,
                                JobState, next_job_id)
@@ -51,23 +56,184 @@ from repro.objectives.base import SeparableObjective
 
 
 @dataclasses.dataclass
-class LaneGroup:
-    """One bucket's K solve lanes: stacked state + lane -> job binding."""
+class _SweepRun:
+    """One contiguous band of block rows sharing a width rung: the plan
+    arrays one band loop of the fused-step executable consumes."""
+
+    w: int                   # width rung (lanes gathered per row)
+    r_cap: int               # row-count rung (array length)
+    n_rows: jnp.ndarray      # () int32 — rows actually executed (<= r_cap)
+    lanes: jnp.ndarray       # (r_cap, w) lane-slot ids (scratch-padded)
+    pages: jnp.ndarray       # (r_cap, w) page ids (scratch-padded)
+    rows: jnp.ndarray        # (r_cap, w) global block-row numbers
+    live_slots: int          # true (lane, row) pairs in the band
+    swept_slots: int         # executed slots incl. width-rung padding
+
+
+@dataclasses.dataclass
+class _SyncGroup:
+    """All active lanes gathered at one page-count rung: the end-of-pass
+    lane sync inside the fused step (finalize at harvest reuses the same
+    gather shape for just the finishing lanes)."""
+
+    g: int                   # page-count rung (gathered row view, pages)
+    v: int                   # lane-batch rung
+    lanes: jnp.ndarray       # (v,) lane-slot ids (scratch-padded)
+    pages: jnp.ndarray       # (v, g) page ids (scratch-padded)
+
+
+@dataclasses.dataclass
+class _Plan:
+    runs: list[_SweepRun]
+    sync: _SyncGroup | None
+    live_slots: int          # per-pass true block rows
+    swept_slots: int         # per-pass executed block rows
+
+    def signature(self) -> tuple:
+        """The compiled shape of this plan: band + sync rungs only. Plans
+        sharing a signature share one fused-step executable."""
+        return (tuple((r.w, r.r_cap) for r in self.runs),
+                (self.sync.g, self.sync.v))
+
+    def step_args(self) -> list:
+        args = []
+        for r in self.runs:
+            args += [r.lanes, r.pages, r.rows, r.n_rows]
+        return args + [self.sync.lanes, self.sync.pages]
+
+
+def _gather_tables(entries: list[tuple[int, list[int]]], scratch_lane: int):
+    """Scratch-padded gather tables for a batch of lanes.
+
+    ``entries`` is ``[(slot, page_ids), ...]``. Returns the page-count
+    rung ``g`` (the deepest member's), the lane-batch rung ``v``, and the
+    (v,) / (v, g) lane/page index arrays — ladder padding targets the
+    scratch slot/page, so sync, placement, and finalize all share one
+    padding convention."""
+    g = batched.pad_ladder(max(len(pt) for _, pt in entries), 1)
+    v = batched.pad_ladder(len(entries), 1)
+    lanes_np = np.full((v,), scratch_lane, np.int32)
+    pages_np = np.full((v, g), batched.SCRATCH_PAGE, np.int32)
+    for i, (slot, pt) in enumerate(entries):
+        lanes_np[i] = slot
+        pages_np[i, : len(pt)] = pt
+    return g, v, lanes_np, pages_np
+
+
+@dataclasses.dataclass
+class LanePool:
+    """One family's lanes: shared page pool + host-side page tables."""
 
     key: tuple
     obj: SeparableObjective
-    state: ABOState                      # stacked, leading dim K
-    job_ids: list[str | None]            # per-lane binding (None = idle)
+    lanes: int
+    state: batched.PoolState | None = None       # materialized on first use
+    capacity: int = 1                            # pages incl. scratch page 0
+    job_ids: list[str | None] = dataclasses.field(default_factory=list)
+    page_table: list[list[int] | None] = dataclasses.field(
+        default_factory=list)
+    free_pages: list[int] = dataclasses.field(default_factory=list)
+    plan: _Plan | None = None                    # rebuilt when lanes change
+
+    def __post_init__(self):
+        if not self.job_ids:
+            self.job_ids = [None] * self.lanes
+        if not self.page_table:
+            self.page_table = [None] * self.lanes
 
     @property
     def active(self) -> int:
         return sum(j is not None for j in self.job_ids)
 
-    def free_lane(self) -> int | None:
+    def free_slot(self) -> int | None:
         for i, j in enumerate(self.job_ids):
             if j is None:
                 return i
         return None
+
+    def alloc_pages(self, count: int) -> list[int]:
+        """Take ``count`` page ids, growing the capacity plan onto the
+        next ladder rung when the free list runs short (the device array
+        is grown lazily by :meth:`materialize`)."""
+        if len(self.free_pages) < count:
+            need = count - len(self.free_pages)
+            new_cap = batched.pad_ladder(self.capacity + need, 1)
+            self.free_pages.extend(range(self.capacity, new_cap))
+            self.capacity = new_cap
+        pages, self.free_pages = (self.free_pages[:count],
+                                  self.free_pages[count:])
+        return pages
+
+    def release_pages(self, pages: list[int]):
+        self.free_pages.extend(pages)
+        self.free_pages.sort()               # deterministic reassignment
+
+    def materialize(self):
+        """Create/grow the device state to the host capacity plan."""
+        if self.state is None:
+            self.state = batched.zeros_pool_state(
+                self.obj, self.key, self.lanes, self.capacity)
+        elif self.state.pool.shape[0] < self.capacity:
+            self.state = batched.grow_pool(self.state, self.capacity)
+
+    # ------------------------------------------------------------- planning
+    def build_plan(self) -> _Plan:
+        """Row-compacted sweep plan for the current lane occupancy.
+
+        Band structure: the number of lanes occupying row r is
+        non-increasing in r, so rows sharing a width rung are contiguous;
+        the bands run in ascending-row order (descending width) inside
+        the fused-step executable, preserving the Gauss-Seidel block
+        ordering within every lane. Ladder padding (width and row-count
+        rungs) points at the scratch lane/page.
+        """
+        active = [(slot, pt) for slot, (jid, pt)
+                  in enumerate(zip(self.job_ids, self.page_table))
+                  if jid is not None]
+        if not active:
+            return _Plan([], None, 0, 0)
+        scratch = self.lanes
+        max_rows = max(len(pt) for _, pt in active)
+
+        bands: list[tuple[int, list]] = []   # (width rung, [(r, entries)])
+        for r in range(max_rows):
+            ents = [(slot, pt[r]) for slot, pt in active if len(pt) > r]
+            rung = batched.pad_ladder(len(ents), 1)
+            if bands and bands[-1][0] == rung:
+                bands[-1][1].append((r, ents))
+            else:
+                bands.append((rung, [(r, ents)]))
+
+        runs = []
+        live = swept = 0
+        for w_rung, band in bands:
+            r_cap = batched.pad_ladder(len(band), 1)
+            lanes_np = np.full((r_cap, w_rung), scratch, np.int32)
+            pages_np = np.full((r_cap, w_rung), batched.SCRATCH_PAGE,
+                               np.int32)
+            rows_np = np.zeros((r_cap, w_rung), np.int32)
+            for j, (row, ents) in enumerate(band):
+                for c, (slot, page) in enumerate(ents):
+                    lanes_np[j, c] = slot
+                    pages_np[j, c] = page
+                    rows_np[j, c] = row
+                live += len(ents)
+            swept += len(band) * w_rung
+            runs.append(_SweepRun(
+                w=w_rung, r_cap=r_cap,
+                n_rows=jnp.asarray(len(band), jnp.int32),
+                lanes=jnp.asarray(lanes_np), pages=jnp.asarray(pages_np),
+                rows=jnp.asarray(rows_np),
+                live_slots=sum(len(e) for _, e in band),
+                swept_slots=len(band) * w_rung))
+
+        # one gather shape for every active lane: the deepest lane's
+        # page-count rung (short lanes read scratch zeros past their
+        # pages — masked out, and a 1/m-cost side dish vs the sweep)
+        g, v, lanes_np, pages_np = _gather_tables(active, scratch)
+        sync = _SyncGroup(g=g, v=v, lanes=jnp.asarray(lanes_np),
+                          pages=jnp.asarray(pages_np))
+        return _Plan(runs, sync, live, swept)
 
 
 class SolveEngine:
@@ -85,32 +251,34 @@ class SolveEngine:
                  objectives: dict[str, SeparableObjective] | None = None,
                  checkpoint_dir: str | None = None, ckpt_every: int = 1,
                  keep: int = 3, max_fuse: int | None = None,
-                 max_pad_waste: float = batched.DEFAULT_MAX_PAD_WASTE):
+                 retain_done: int | None = None):
         if lanes < 1:
             raise ValueError(f"lanes must be >= 1, got {lanes}")
-        if not 0.0 <= max_pad_waste < 1.0:
+        if retain_done is not None and retain_done < 0:
             raise ValueError(
-                f"max_pad_waste must be in [0, 1), got {max_pad_waste}")
+                f"retain_done must be >= 0 or None, got {retain_done}")
         self.lanes = lanes
-        # ceiling on the padding-waste fraction (n_pad - n) / n_pad a lane
-        # may carry: gates both ladder admission and group fusion; 0 means
-        # exact-pad bucketing (every distinct padded n compiles its own
-        # executables — PR 1 behavior)
-        self.max_pad_waste = max_pad_waste
-        # cap on passes fused into one jitted call per step (None = fuse
-        # whole generations); 1 restores strict pass-per-step stepping,
-        # which is also the finest checkpoint/refill granularity
+        # cap on passes fused into one stretch of dispatches per step (None
+        # = fuse whole generations); 1 restores strict pass-per-step
+        # stepping, which is also the finest checkpoint/refill granularity
         self.max_fuse = max_fuse
+        # keep at most this many delivered/cancelled job records; None
+        # keeps everything (see _gc_jobs)
+        self.retain_done = retain_done
         self.dtype = dtype
         self.objectives = dict(objectives or OBJECTIVES)
         self.jobs: dict[str, JobState] = {}
         self.queue: deque[str] = deque()
-        self.groups: dict[tuple, LaneGroup] = {}
-        # every bucket key this engine ever opened a group for — the number
-        # of distinct executable shapes compiled on its behalf
-        self.bucket_keys_seen: set[tuple] = set()
+        self.pools: dict[tuple, LanePool] = {}
+        # every family this engine ever opened a pool for — the number of
+        # distinct executable families compiled on its behalf
+        self.family_keys_seen: set[tuple] = set()
         self.step_count = 0
+        # cumulative row-sweep slot accounting (see pad_stats)
+        self.swept_slots = 0
+        self.swept_slots_live = 0
         self._next = 0
+        self._done_seq = 0
         self.ckpt = (CheckpointManager(checkpoint_dir, keep=keep)
                      if checkpoint_dir else None)
         self.ckpt_every = max(ckpt_every, 1)
@@ -137,69 +305,71 @@ class SolveEngine:
         rec = self.jobs[job_id]
         if rec.status == QUEUED:
             rec.status = CANCELLED
+            rec.done_seq = self._next_done_seq()
             try:                         # purge now, not at the next refill:
                 self.queue.remove(job_id)   # stale ids would otherwise show
             except ValueError:              # up as phantom queued work in
                 pass                        # stats until a refill drains them
             return True
         if rec.status == RUNNING:
-            group, lane = self._locate(job_id)
-            if group is not None:
-                group.job_ids[lane] = None   # lane is refilled next step;
-            rec.status = CANCELLED           # stale device state is benign
+            pool, slot = self._locate(job_id)
+            if pool is not None:
+                self._release_lane(pool, slot)
+            rec.status = CANCELLED       # stale device state is benign: the
+            rec.done_seq = self._next_done_seq()   # slot leaves every plan
             return True
         return False                     # already DONE/CANCELLED
 
     # --------------------------------------------------------------- stepping
     @property
     def active_lanes(self) -> int:
-        return sum(g.active for g in self.groups.values())
+        return sum(p.active for p in self.pools.values())
 
     def pending(self) -> bool:
         return self.active_lanes > 0 or any(
-            self.jobs[j].status == QUEUED for j in self.queue)
+            j in self.jobs and self.jobs[j].status == QUEUED
+            for j in self.queue)
 
     def step(self) -> int:
-        """Refill idle lanes, advance every active bucket by one fused
-        chunk of passes, harvest finished lanes. Returns the number of jobs
+        """Refill idle lanes, advance every active pool by one fused chunk
+        of passes, harvest finished lanes. Returns the number of jobs
         completed.
 
-        Per active bucket the chunk is ``r = min`` remaining passes over
-        its lanes — a full generation when lanes are phase-aligned (the
-        steady state after a group refill), one pass when a fresh job rides
+        Per active pool the chunk is ``r = min`` remaining passes over its
+        lanes — a full generation when lanes are phase-aligned (the steady
+        state after a pool refill), one pass when a fresh job rides
         alongside nearly-finished ones. Either way no lane overshoots its
-        job's pass budget, so per-job math is untouched.
+        job's pass budget, so per-job math is untouched. The whole fused
+        chunk — every width band of the sweep plan plus the end-of-pass
+        lane sync, times r passes — is ONE async dispatch of the plan
+        signature's fused-step executable.
         """
         self._refill()
-        self._fuse_siblings()
         finished = 0
-        for group in self.groups.values():
-            if group.active == 0:
+        for pool in self.pools.values():
+            if pool.active == 0:
                 continue
-            ops = batched.get_lane_ops(group.obj, group.key)
-            cfg = batched.key_config(group.key)
+            ops = batched.get_pool_ops(pool.obj, pool.key, self.lanes,
+                                       pool.capacity)
+            cfg = batched.key_config(pool.key)
             remaining = [cfg.n_passes - self.jobs[j].passes_done
-                         for j in group.job_ids if j is not None]
+                         for j in pool.job_ids if j is not None]
             r = max(min(remaining), 1)
             if self.max_fuse is not None:
                 r = min(r, self.max_fuse)
-            active = [i for i, j in enumerate(group.job_ids)
-                      if j is not None]
-            w = 1 << (len(active) - 1).bit_length()   # pow2-bucketed width
-            if w < self.lanes:
-                # partially filled group: gather the active lanes (padded
-                # to w with idle ones) so idle lanes cost no compute
-                idx = active + [i for i, j in enumerate(group.job_ids)
-                                if j is None][:w - len(active)]
-                group.state = ops.step_compact(r, w)(
-                    group.state, jnp.asarray(idx, jnp.int32))
-            else:
-                group.state = ops.step_r(r)(group.state)
-            for job_id in group.job_ids:
+            if pool.plan is None:
+                pool.plan = pool.build_plan()
+            plan = pool.plan
+            pool.state = ops.fused_step(*plan.signature())(
+                pool.state, jnp.asarray(r, jnp.int32), *plan.step_args())
+            self.swept_slots += r * plan.swept_slots
+            self.swept_slots_live += r * plan.live_slots
+            for job_id in pool.job_ids:
                 if job_id is not None:
                     self.jobs[job_id].passes_done += r
-            finished += self._harvest(group, ops)
+            finished += self._harvest(pool, ops)
         self.step_count += 1
+        self._gc_jobs()
         if self.ckpt is not None and self.step_count % self.ckpt_every == 0:
             self._snapshot()
         return finished
@@ -217,185 +387,181 @@ class SolveEngine:
         return [self.submit(s) for s in specs]
 
     # -------------------------------------------------------------- internals
-    def _locate(self, job_id: str) -> tuple[LaneGroup | None, int]:
-        for group in self.groups.values():
-            if job_id in group.job_ids:
-                return group, group.job_ids.index(job_id)
+    def _locate(self, job_id: str) -> tuple[LanePool | None, int]:
+        for pool in self.pools.values():
+            if job_id in pool.job_ids:
+                return pool, pool.job_ids.index(job_id)
         return None, -1
 
-    def _admit_key(self, spec: JobSpec) -> tuple:
-        """Fill-ratio-aware bucket choice for a queued job.
+    def _release_lane(self, pool: LanePool, slot: int):
+        pool.job_ids[slot] = None
+        if pool.page_table[slot]:
+            pool.release_pages(pool.page_table[slot])
+        pool.page_table[slot] = None
+        pool.plan = None
 
-        Candidates are the job's own ladder rung plus every open
-        same-family group whose pad fits the job under ``max_pad_waste``;
-        the fullest admissible group wins (ties to the smallest pad), so
-        traffic consolidates onto already-hot executables instead of
-        opening a fresh rung per distinct n.
-        """
-        rung = batched.bucket_key(spec.objective, spec.n, spec.config,
-                                  self.lanes, self.dtype, self.max_pad_waste)
-        fam = batched.family_key(rung)
-        exact = batched.padded_n(batched.bucket_key(
-            spec.objective, spec.n, spec.config, self.lanes, self.dtype,
-            0.0))
-        best = None                      # (active, -n_pad) maximized
-        for key, group in self.groups.items():
-            if batched.family_key(key) != fam or group.active >= self.lanes:
-                continue
-            n_pad = batched.padded_n(key)
-            if n_pad < exact:
-                continue
-            if key != rung and (n_pad - spec.n) / n_pad > self.max_pad_waste:
-                continue                 # own rung always admits itself
-            score = (group.active, -n_pad)
-            if best is None or score > best[0]:
-                best = (score, key)
-        return best[1] if best is not None else rung
+    def _next_done_seq(self) -> int:
+        seq = self._done_seq
+        self._done_seq += 1
+        return seq
 
     def _refill(self):
-        # Stage lane bindings first, then write every group's new lanes in
-        # ONE jitted place_many dispatch — refilling 8 lanes costs the same
-        # host overhead as refilling one.
+        # Stage lane bindings + page allocations first (growing each pool's
+        # capacity plan at most once), then write every pool's new lanes in
+        # batched place dispatches — refilling 8 lanes costs the same host
+        # overhead as refilling one.
         staged: dict[tuple, list[tuple[int, JobState]]] = {}
         while self.queue and self.active_lanes < self.lanes:
             job_id = self.queue.popleft()
-            rec = self.jobs[job_id]
-            if rec.status != QUEUED:     # cancelled while queued
+            rec = self.jobs.get(job_id)
+            if rec is None or rec.status != QUEUED:  # cancelled / GC'd
                 continue
             spec = rec.spec
-            obj = self.objectives[spec.objective]
-            key = self._admit_key(spec)
-            group = self.groups.get(key)
-            if group is None:
-                group = LaneGroup(key=key, obj=obj,
-                                  state=batched.zeros_batch_state(obj, key),
-                                  job_ids=[None] * self.lanes)
-                self.groups[key] = group
-                self.bucket_keys_seen.add(key)
-            lane = group.free_lane()
-            assert lane is not None      # K == lane budget, so never full
-            group.job_ids[lane] = rec.job_id
+            key = batched.family_key(spec.objective, spec.n, spec.config,
+                                     self.dtype)
+            pool = self.pools.get(key)
+            if pool is None:
+                pool = LanePool(key=key, obj=self.objectives[spec.objective],
+                                lanes=self.lanes)
+                self.pools[key] = pool
+                self.family_keys_seen.add(key)
+            slot = pool.free_slot()
+            assert slot is not None      # pool slots == lane budget
+            cfg = batched.key_config(key)
+            pool.job_ids[slot] = rec.job_id
+            pool.page_table[slot] = pool.alloc_pages(
+                batched.pages_for(spec.n, cfg.block_size))
+            pool.plan = None
             rec.passes_done = 0
             rec.status = RUNNING
-            staged.setdefault(key, []).append((lane, rec))
+            staged.setdefault(key, []).append((slot, rec))
         for key, placed in staged.items():
-            group = self.groups[key]
-            ops = batched.get_lane_ops(group.obj, key)
-            k = self.lanes
-            mask = np.zeros((k,), bool)
-            seeded = np.zeros((k,), bool)
-            # PRNGKey folds a Python int to the widest uint the precision
-            # mode traces: 32 bits by default, 64 under jax_enable_x64.
-            # Mirror that exactly so engine starts stay bit-identical to
-            # abo_minimize's for every accepted seed (negative and >= 2**32
-            # included), in either mode.
-            x64 = bool(jax.config.jax_enable_x64)
-            seed_dt = np.uint64 if x64 else np.uint32
-            seed_mask = 0xFFFFFFFFFFFFFFFF if x64 else 0xFFFFFFFF
-            seeds = np.zeros((k,), seed_dt)
-            n_valid = np.full((k,), batched.padded_n(key), np.int32)
-            x0_jobs = []
-            for lane, rec in placed:
-                spec = rec.spec
-                if spec.x0 is not None:
-                    x0_jobs.append((lane, spec))
-                    continue
-                mask[lane] = True
-                n_valid[lane] = spec.n
-                if spec.seed is not None:
-                    seeded[lane] = True
-                    seeds[lane] = seed_dt(spec.seed & seed_mask)
-            if mask.any():
-                group.state = ops.place_many(group.state, mask, seeded,
-                                             seeds, n_valid)
-            for lane, spec in x0_jobs:   # explicit-x0 jobs: rare, per-lane
-                x = jnp.zeros((batched.padded_n(key),), self.dtype) \
-                    .at[:spec.n].set(jnp.asarray(spec.x0, self.dtype))
-                group.state = ops.place_x(group.state, lane, x, spec.n)
+            pool = self.pools[key]
+            pool.materialize()
+            ops = batched.get_pool_ops(pool.obj, key, self.lanes,
+                                       pool.capacity)
+            self._place(pool, ops, placed)
 
-    def _harvest(self, group: LaneGroup, ops: batched.LaneOps) -> int:
-        cfg = batched.key_config(group.key)
-        fins = [(lane, self.jobs[jid])
-                for lane, jid in enumerate(group.job_ids)
+    def _place(self, pool: LanePool, ops: batched.PoolOps,
+               placed: list[tuple[int, JobState]]):
+        cfg = batched.key_config(pool.key)
+        bsz = cfg.block_size
+        # PRNGKey folds a Python int to the widest uint the precision mode
+        # traces: 32 bits by default, 64 under jax_enable_x64. Mirror that
+        # exactly so engine starts stay bit-identical to abo_minimize's for
+        # every accepted seed (negative and >= 2**32 included).
+        x64 = bool(jax.config.jax_enable_x64)
+        seed_dt = np.uint64 if x64 else np.uint32
+        seed_mask = 0xFFFFFFFFFFFFFFFF if x64 else 0xFFFFFFFF
+        members: list[tuple[int, JobState]] = []
+        x0_jobs: list[tuple[int, JobState]] = []
+        for slot, rec in placed:
+            (x0_jobs if rec.spec.x0 is not None else members).append(
+                (slot, rec))
+        if members:
+            # one dispatch for the whole refill batch, gathered at the
+            # deepest placed lane's page-count rung (short lanes' extra
+            # columns are zeroed and land on the scratch page)
+            g, v, lanes_np, pages_np = _gather_tables(
+                [(s, pool.page_table[s]) for s, _ in members], self.lanes)
+            seeded = np.zeros((v,), bool)
+            seeds = np.zeros((v,), seed_dt)
+            n_valid = np.zeros((v,), np.int32)
+            for i, (_, rec) in enumerate(members):
+                n_valid[i] = rec.spec.n
+                if rec.spec.seed is not None:
+                    seeded[i] = True
+                    seeds[i] = seed_dt(rec.spec.seed & seed_mask)
+            pool.state = ops.place(g, v)(
+                pool.state, jnp.asarray(lanes_np), jnp.asarray(pages_np),
+                jnp.asarray(seeded), jnp.asarray(seeds),
+                jnp.asarray(n_valid))
+        for slot, rec in x0_jobs:        # explicit-x0 jobs: rare, per-lane
+            spec = rec.spec
+            pages = pool.page_table[slot]
+            g = batched.pad_ladder(len(pages), 1)
+            pages_np = np.full((g,), batched.SCRATCH_PAGE, np.int32)
+            pages_np[: len(pages)] = pages
+            xrow = np.zeros((g * bsz,), jnp.dtype(self.dtype).name)
+            xrow[: spec.n] = np.asarray(spec.x0, xrow.dtype)
+            pool.state = ops.place_x(g)(
+                pool.state, jnp.asarray(slot, jnp.int32),
+                jnp.asarray(pages_np), jnp.asarray(xrow),
+                jnp.asarray(spec.n, jnp.int32))
+
+    def _harvest(self, pool: LanePool, ops: batched.PoolOps) -> int:
+        cfg = batched.key_config(pool.key)
+        fins = [(slot, self.jobs[jid])
+                for slot, jid in enumerate(pool.job_ids)
                 if jid is not None
                 and self.jobs[jid].passes_done >= cfg.n_passes]
         if not fins:
             return 0
-        # one dispatch + one device sync for every finished lane at once
-        f_all, x_all, hist_all = ops.finalize_many(group.state)
+        # compact gather: ONE dispatch + one device sync for the FINISHING
+        # lanes only — running and idle lanes aren't touched, so turnover
+        # costs the finishers' pages instead of O(K * n_pad)
+        g, v, lanes_np, pages_np = _gather_tables(
+            [(s, pool.page_table[s]) for s, _ in fins], self.lanes)
+        f_all, x_all, hist_all = ops.finalize(g, v)(
+            pool.state, jnp.asarray(lanes_np), jnp.asarray(pages_np))
         f_np = np.asarray(f_all)
         x_np = np.asarray(x_all)
         h_np = np.asarray(hist_all)
-        for lane, rec in fins:
-            rec.fun = float(f_np[lane])
-            rec.x = x_np[lane, :rec.spec.n].copy()
-            rec.history = [float(v) for v in h_np[lane]]
+        for i, (slot, rec) in enumerate(fins):
+            rec.fun = float(f_np[i])
+            rec.x = x_np[i, : rec.spec.n].copy()
+            rec.history = [float(vv) for vv in h_np[i]]
             rec.status = DONE
-            group.job_ids[lane] = None   # lane free; refilled next step
+            rec.done_seq = self._next_done_seq()
+            self._release_lane(pool, slot)       # refilled next step
         return len(fins)
 
-    def _fuse_siblings(self):
-        """Fuse near-empty same-family lane groups into the widest member.
-
-        A drained workload's tail leaves a few active lanes scattered over
-        several ladder rungs; stepping each rung separately costs one
-        dispatch + harvest sync apiece. When a family's active lanes all
-        fit one group (and the queue is empty or the family is < half
-        full), its smaller-pad groups are grafted into the widest one —
-        one jitted dispatch per source group, no host sync — and the
-        emptied groups are dropped. Migration respects ``max_pad_waste``,
-        so a lane never lands in a bucket admission would have refused,
-        and grafted passes stay bit-identical (pad coords are inert).
-        """
-        if self.max_pad_waste <= 0.0 or len(self.groups) < 2:
+    def _gc_jobs(self):
+        """Whole-record job-table GC: keep only the ``retain_done`` most
+        recently finished records among those the client is done with
+        (fetched DONE results, cancellations). Live work — queued,
+        running, and undelivered DONE jobs — is never evicted, so results
+        can't be lost; evicted ids simply answer "unknown job"."""
+        if self.retain_done is None:
             return
-        fams: dict[tuple, list[LaneGroup]] = {}
-        for g in self.groups.values():
-            if g.active:
-                fams.setdefault(batched.family_key(g.key), []).append(g)
-        queued = any(self.jobs[j].status == QUEUED for j in self.queue)
-        for members in fams.values():
-            if len(members) < 2:
-                continue
-            total = sum(g.active for g in members)
-            if total > self.lanes or (queued and total > self.lanes // 2):
-                continue                 # refill will repack these anyway
-            members.sort(key=lambda g: batched.padded_n(g.key))
-            dst = members[-1]
-            n_dst = batched.padded_n(dst.key)
-            for src in members[:-1]:
-                moved = [(lane, jid) for lane, jid in enumerate(src.job_ids)
-                         if jid is not None]
-                if any((n_dst - self.jobs[jid].spec.n) / n_dst
-                       > self.max_pad_waste for _, jid in moved):
-                    continue
-                free = [i for i, j in enumerate(dst.job_ids) if j is None]
-                if len(free) < len(moved):
-                    continue
-                src_lanes = [lane for lane, _ in moved]
-                dst_lanes = free[:len(moved)]
-                graft = batched.get_graft(src.key, dst.key)
-                dst.state = graft(dst.state, src.state,
-                                  jnp.asarray(src_lanes, jnp.int32),
-                                  jnp.asarray(dst_lanes, jnp.int32))
-                for dl, (_, jid) in zip(dst_lanes, moved):
-                    dst.job_ids[dl] = jid
-                del self.groups[src.key]
+        evictable = [rec for rec in self.jobs.values()
+                     if rec.status == CANCELLED
+                     or (rec.status == DONE and rec.fetched)]
+        excess = len(evictable) - self.retain_done
+        if excess <= 0:
+            return
+        evictable.sort(key=lambda r: (r.done_seq is None, r.done_seq))
+        for rec in evictable[:excess]:
+            del self.jobs[rec.job_id]
 
     def pad_stats(self) -> dict:
-        """Packing economics of the current lane allocation: valid vs
-        padded coordinates over active lanes (fill_ratio + pad_waste are
-        None while nothing runs)."""
-        valid = padded = 0
-        for g in self.groups.values():
-            n_pad = batched.padded_n(g.key)
-            for jid in g.job_ids:
+        """Packing economics of the paged layout.
+
+        Coordinate-level (current active lanes): ``fill_ratio`` /
+        ``pad_waste`` compare true n against occupied pages — the only
+        coordinate padding left is the tail of each lane's last block,
+        which the dense reference solver pays identically.
+
+        Row-slot level (cumulative): ``swept_rows`` counts executed
+        (lane, block-row) sweep slots including width-rung padding,
+        ``swept_rows_live`` the slots that advanced real lanes;
+        ``swept_waste`` is the padded-compute fraction — the number the
+        old rung-padded layout pushed past 30% on mixed-n traffic and the
+        ladder bounds at 1/3 worst-case, a few percent typical.
+        """
+        valid = paged = 0
+        for pool in self.pools.values():
+            bsz = batched.key_config(pool.key).block_size
+            for jid, pt in zip(pool.job_ids, pool.page_table):
                 if jid is not None:
                     valid += self.jobs[jid].spec.n
-                    padded += n_pad
-        return {"active_valid_n": valid, "active_padded_n": padded,
-                "fill_ratio": valid / padded if padded else None,
-                "pad_waste": 1.0 - valid / padded if padded else None}
+                    paged += len(pt) * bsz
+        swept, live = self.swept_slots, self.swept_slots_live
+        return {"active_valid_n": valid, "active_paged_n": paged,
+                "fill_ratio": valid / paged if paged else None,
+                "pad_waste": 1.0 - valid / paged if paged else None,
+                "swept_rows": swept, "swept_rows_live": live,
+                "swept_waste": 1.0 - live / swept if swept else None}
 
     # ------------------------------------------------------------ checkpoint
     def snapshot(self):
@@ -406,31 +572,40 @@ class SolveEngine:
         self._snapshot()
 
     def _snapshot(self):
-        tree = {f"g{i:03d}": g.state
-                for i, g in enumerate(self.groups.values())}
+        tree = {}
+        pool_meta = []
+        for i, pool in enumerate(self.pools.values()):
+            pool.materialize()
+            tree[f"p{i:03d}"] = pool.state
+            pool_meta.append({
+                "objective": pool.key[0],
+                "config": dataclasses.asdict(pool.key[1]),
+                "dtype": pool.key[2],
+                "capacity": pool.capacity,
+                "job_ids": pool.job_ids,
+                "page_table": pool.page_table,
+            })
         aux = {
-            "version": 1,
+            "version": 2,
             "lanes": self.lanes,
             "max_fuse": self.max_fuse,
-            "max_pad_waste": self.max_pad_waste,
+            "retain_done": self.retain_done,
             "dtype": jnp.dtype(self.dtype).name,
             "step_count": self.step_count,
+            "swept_slots": self.swept_slots,
+            "swept_slots_live": self.swept_slots_live,
             "next": self._next,
+            "done_seq": self._done_seq,
             "queue": list(self.queue),
             "jobs": {jid: rec.to_dict() for jid, rec in self.jobs.items()},
-            "groups": [{"objective": g.key[0], "n_pad": g.key[1],
-                        "config": dataclasses.asdict(g.key[2]),
-                        "k": g.key[3], "dtype": g.key[4],
-                        "job_ids": g.job_ids}
-                       for g in self.groups.values()],
-            # groups can drain or fuse away before a snapshot; persist the
-            # full compiled-shape history so buckets_created survives resume
-            "bucket_keys_seen": [
-                {"objective": k[0], "n_pad": k[1],
-                 "config": dataclasses.asdict(k[2]), "k": k[3],
-                 "dtype": k[4]}
-                for k in sorted(self.bucket_keys_seen,
-                                key=lambda k: (k[0], k[1]))],
+            "pools": pool_meta,
+            # pools can drain away before a snapshot; persist the full
+            # compiled-family history so families_created survives resume
+            "family_keys_seen": [
+                {"objective": k[0], "config": dataclasses.asdict(k[1]),
+                 "dtype": k[2]}
+                for k in sorted(self.family_keys_seen,
+                                key=lambda k: (k[0], k[2]))],
         }
         self.ckpt.save(self.step_count, tree, aux=aux)
 
@@ -439,13 +614,13 @@ class SolveEngine:
                objectives: dict[str, SeparableObjective] | None = None,
                keep: int = 3, ckpt_every: int = 1,
                **fresh_kw) -> "SolveEngine":
-        """Rebuild an engine (jobs, queue, and mid-solve lane states) from
-        the newest committed checkpoint in ``checkpoint_dir``. With no
-        checkpoint present, returns a fresh empty engine built with
-        ``fresh_kw`` (lanes, max_pad_waste, ...); when a checkpoint IS
-        found its recorded values win and ``fresh_kw`` is ignored —
-        runtime knobs must round-trip the kill, or the resumed run would
-        diverge from the uninterrupted one."""
+        """Rebuild an engine (jobs, queue, and mid-solve pools with their
+        page tables) from the newest committed checkpoint in
+        ``checkpoint_dir``. With no checkpoint present, returns a fresh
+        empty engine built with ``fresh_kw`` (lanes, retain_done, ...);
+        when a checkpoint IS found its recorded values win and
+        ``fresh_kw`` is ignored — runtime knobs must round-trip the kill,
+        or the resumed run would diverge from the uninterrupted one."""
         probe = CheckpointManager(checkpoint_dir, keep=keep)
         step = probe.latest_step()
         if step is None:
@@ -457,33 +632,47 @@ class SolveEngine:
             raise RuntimeError(
                 f"checkpoint step {step} in {checkpoint_dir} has no engine "
                 "aux metadata — not a SolveEngine checkpoint")
+        if aux.get("version") != 2:
+            raise RuntimeError(
+                f"checkpoint step {step} in {checkpoint_dir} has engine aux "
+                f"version {aux.get('version')}; this engine reads version 2 "
+                "(the block-paged lane layout) — re-run the jobs or resume "
+                "with the engine version that wrote it")
         eng = cls(lanes=aux["lanes"], dtype=jnp.dtype(aux["dtype"]),
                   objectives=objectives, checkpoint_dir=checkpoint_dir,
                   ckpt_every=ckpt_every, keep=keep,
                   max_fuse=aux.get("max_fuse"),
-                  max_pad_waste=aux.get(
-                      "max_pad_waste", batched.DEFAULT_MAX_PAD_WASTE))
+                  retain_done=aux.get("retain_done"))
         eng.step_count = aux["step_count"]
+        eng.swept_slots = aux.get("swept_slots", 0)
+        eng.swept_slots_live = aux.get("swept_slots_live", 0)
         eng._next = aux["next"]
+        eng._done_seq = aux.get("done_seq", 0)
         eng.jobs = {jid: JobState.from_dict(d)
                     for jid, d in aux["jobs"].items()}
         eng.queue = deque(aux["queue"])
         like = {}
         metas = []
-        for i, g in enumerate(aux["groups"]):
-            obj = eng.objectives[g["objective"]]
-            key = (g["objective"], g["n_pad"], ABOConfig(**g["config"]),
-                   g["k"], g["dtype"])
-            like[f"g{i:03d}"] = batched.zeros_batch_state(obj, key)
-            metas.append((key, obj, g["job_ids"]))
+        for i, p in enumerate(aux["pools"]):
+            obj = eng.objectives[p["objective"]]
+            key = (p["objective"], ABOConfig(**p["config"]), p["dtype"])
+            like[f"p{i:03d}"] = batched.zeros_pool_state(
+                obj, key, eng.lanes, p["capacity"])
+            metas.append((key, obj, p))
         tree = probe.restore(step, like) if like else {}
-        for i, (key, obj, job_ids) in enumerate(metas):
-            eng.groups[key] = LaneGroup(key=key, obj=obj,
-                                        state=tree[f"g{i:03d}"],
-                                        job_ids=list(job_ids))
-            eng.bucket_keys_seen.add(key)
-        for d in aux.get("bucket_keys_seen", []):   # absent in old snapshots
-            eng.bucket_keys_seen.add(
-                (d["objective"], d["n_pad"], ABOConfig(**d["config"]),
-                 d["k"], d["dtype"]))
+        for i, (key, obj, p) in enumerate(metas):
+            page_table = [list(pt) if pt is not None else None
+                          for pt in p["page_table"]]
+            used = {pg for pt in page_table if pt for pg in pt}
+            used.add(batched.SCRATCH_PAGE)
+            pool = LanePool(
+                key=key, obj=obj, lanes=eng.lanes, state=tree[f"p{i:03d}"],
+                capacity=p["capacity"], job_ids=list(p["job_ids"]),
+                page_table=page_table,
+                free_pages=sorted(set(range(p["capacity"])) - used))
+            eng.pools[key] = pool
+            eng.family_keys_seen.add(key)
+        for d in aux.get("family_keys_seen", []):
+            eng.family_keys_seen.add(
+                (d["objective"], ABOConfig(**d["config"]), d["dtype"]))
         return eng

@@ -70,14 +70,19 @@ class SolveService:
             by_status[rec.status] = by_status.get(rec.status, 0) + 1
         # count only truly-QUEUED ids: a job cancelled while queued may
         # linger in eng.queue until a refill drains it (and resumed queues
-        # can carry such ids too) — len(eng.queue) overcounts
-        queued = sum(eng.jobs[j].status == QUEUED for j in eng.queue)
+        # can carry such ids, or ids the retention GC already evicted) —
+        # len(eng.queue) overcounts
+        queued = sum(j in eng.jobs and eng.jobs[j].status == QUEUED
+                     for j in eng.queue)
+        from repro.engine import batched
         return {"steps": eng.step_count, "lanes": eng.lanes,
                 "active_lanes": eng.active_lanes,
                 "queued": queued, "jobs": by_status,
-                "buckets": len(eng.groups),
-                "buckets_created": len(eng.bucket_keys_seen),
-                "max_pad_waste": eng.max_pad_waste,
+                "families": len(eng.pools),
+                "families_created": len(eng.family_keys_seen),
+                "executables": batched.compiled_executable_count(
+                    eng.family_keys_seen),
+                "retain_done": eng.retain_done,
                 **eng.pad_stats()}
 
     # ------------------------------------------------------------- execution

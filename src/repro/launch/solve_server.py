@@ -14,16 +14,15 @@ sizes), drains the queue with continuous lane refill, and prints jobs/sec
 newest committed checkpoint (``--resume`` without ``--ckpt-dir`` is an
 error — it would silently start a fresh engine with no checkpointing).
 
-Heterogeneous-n packing: padded sizes are quantized onto a geometric
-ladder of canonical rungs ({1, 1.5} x powers of two, in block multiples)
-and admission is fill-ratio-aware, so a wide n distribution shares a few
-compiled executables instead of one per distinct padded n.
-``--max-pad-waste`` bounds the padding-waste fraction (n_pad - n) / n_pad
-a lane may carry (default 0.35, the ladder's intrinsic worst case; 0
-restores exact-pad bucketing). Per-job results are bit-identical at every
-admissible rung — seeded starts are drawn per-coordinate and padding
-coordinates are inert — so the knob trades executables/dispatches against
-padded compute, never accuracy.
+Heterogeneous n rides the block-paged lane pool: a job occupies exactly
+``ceil(n / block)`` pages of its family's shared page pool, the
+row-compacted sweep touches only occupied block rows, and every n shares
+one compiled executable family — no pad rungs, no admission gating, no
+padded compute beyond the last block's tail. Per-job results are
+bit-identical to standalone ``abo_minimize`` at any lane/page layout.
+``--retain-done N`` bounds the job table: once a result has been
+delivered (or a job cancelled), only the N most recent such records are
+kept, so long-lived services don't grow snapshots without bound.
 
 ``--http PORT`` additionally exposes submit/poll/result/cancel as
 JSON-over-HTTP on localhost (stdlib only, demo-grade — single engine lock,
@@ -46,7 +45,6 @@ import threading
 import time
 
 from repro.core.abo import ABOConfig
-from repro.engine.batched import DEFAULT_MAX_PAD_WASTE
 from repro.engine.jobs import JobSpec
 from repro.engine.scheduler import SolveEngine
 from repro.engine.service import SolveService
@@ -169,11 +167,11 @@ def main(argv=None):
     ap.add_argument("--samples", type=int, default=50)
     ap.add_argument("--passes", type=int, default=5)
     ap.add_argument("--block", type=int, default=4096)
-    ap.add_argument("--max-pad-waste", type=float,
-                    default=DEFAULT_MAX_PAD_WASTE,
-                    help="padding-waste ceiling per lane for ladder "
-                         "bucketing (0 = exact-pad bucketing, one "
-                         "executable per distinct padded n)")
+    ap.add_argument("--retain-done", type=int, default=None, metavar="N",
+                    help="evict whole job records of delivered/cancelled "
+                         "jobs beyond the N most recent (default: keep "
+                         "all) — bounds snapshot aux growth on a churny "
+                         "service")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=1)
     ap.add_argument("--resume", action="store_true",
@@ -188,15 +186,15 @@ def main(argv=None):
             ap.error("--resume requires --ckpt-dir (without it there is no "
                      "checkpoint to resume from and nothing would be saved)")
         # flags only shape a FRESH engine (empty ckpt dir); a found
-        # checkpoint's recorded lanes/max_pad_waste win so the resumed run
+        # checkpoint's recorded lanes/retain_done win so the resumed run
         # can't diverge from the uninterrupted one
         engine = SolveEngine.resume(args.ckpt_dir, ckpt_every=args.ckpt_every,
                                     lanes=args.lanes,
-                                    max_pad_waste=args.max_pad_waste)
+                                    retain_done=args.retain_done)
     else:
         engine = SolveEngine(lanes=args.lanes, checkpoint_dir=args.ckpt_dir,
                              ckpt_every=args.ckpt_every,
-                             max_pad_waste=args.max_pad_waste)
+                             retain_done=args.retain_done)
     service = SolveService(engine)
 
     if args.http is not None:
@@ -225,13 +223,16 @@ def main(argv=None):
     fe = sum(r.spec.config.n_passes * r.spec.config.samples_per_pass
              * r.spec.n for j, r in engine.jobs.items()
              if r.status == "done" and j not in done_before)
+    waste = engine.pad_stats()["swept_waste"]
     stats = {"done": done, "steps": engine.step_count, "dt_s": dt,
              "jobs_per_s": done / dt, "fe_per_s": fe / dt,
-             "buckets": len(engine.groups),
-             "buckets_created": len(engine.bucket_keys_seen)}
+             "families": len(engine.pools),
+             "families_created": len(engine.family_keys_seen),
+             "swept_waste": waste}
     print(f"[solve_server] {done} jobs in {dt:.2f}s over "
           f"{engine.step_count} steps "
-          f"({stats['buckets_created']} buckets compiled): "
+          f"({stats['families_created']} executable families, "
+          f"{0.0 if waste is None else waste:.1%} swept-row waste): "
           f"{stats['jobs_per_s']:.1f} jobs/s, {stats['fe_per_s']:.3g} "
           f"probe-FE/s", flush=True)
     return stats

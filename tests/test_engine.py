@@ -54,21 +54,20 @@ def test_32_jobs_through_8_lanes_continuous_refill():
         assert abs(eng.result(jid).fun - _solo_fun(spec)) < 1e-5
 
 
-def test_mixed_n_shares_bucket():
-    """Jobs with different true n but equal padded-n ride one executable
-    (per-lane n_valid), and still match their standalone runs."""
-    from repro.engine.batched import bucket_key
+def test_mixed_n_shares_family_pool():
+    """Jobs with ANY mix of true n ride one family pool and one executable
+    set (host page tables + per-lane n_valid), and still match their
+    standalone runs."""
+    from repro.engine.batched import family_key
     cfg = ABOConfig(samples_per_pass=12, n_passes=3, block_size=64)
-    na, nb = 130, 192            # > 128 keeps the Jacobi block: both pad to 192
-    ka = bucket_key("sphere", na, cfg, 2)
-    kb = bucket_key("sphere", nb, cfg, 2)
-    assert ka == kb
+    na, nb = 130, 430            # > 128 keeps the Jacobi block: 3 vs 7 pages
+    assert family_key("sphere", na, cfg) == family_key("sphere", nb, cfg)
     specs = [JobSpec("sphere", na, cfg, seed=7),
              JobSpec("sphere", nb, cfg, seed=8)]
     eng = SolveEngine(lanes=2)
     ids = eng.submit_many(specs)
     eng.run()
-    assert len(eng.groups) == 1
+    assert len(eng.pools) == 1
     for spec, jid in zip(specs, ids):
         assert abs(eng.result(jid).fun - _solo_fun(spec)) < 1e-5
 
@@ -157,8 +156,8 @@ def test_resume_empty_dir_gives_fresh_engine(tmp_path):
     eng = SolveEngine.resume(tmp_path)
     assert eng.step_count == 0 and not eng.pending()
     # engine knobs must reach the fresh-engine fallback, not be dropped
-    eng = SolveEngine.resume(tmp_path, lanes=2, max_pad_waste=0.0)
-    assert eng.lanes == 2 and eng.max_pad_waste == 0.0
+    eng = SolveEngine.resume(tmp_path, lanes=2, retain_done=5)
+    assert eng.lanes == 2 and eng.retain_done == 5
 
 
 # ---- PR 2 regression sweep -------------------------------------------------
@@ -259,6 +258,47 @@ def test_snapshot_evicts_fetched_solution(tmp_path):
     svc = SolveService(res)
     out = svc.result(ids[0])
     assert out["status"] == DONE and "x" not in out
+
+
+def test_retain_done_evicts_whole_records():
+    """With a retention window, delivered (fetched DONE) and cancelled
+    records past the N most recent are evicted outright; queued, running,
+    and undelivered DONE jobs are never touched."""
+    eng = SolveEngine(lanes=2, retain_done=2)
+    ids = eng.submit_many(_mixed_specs(6, seed0=300))
+    eng.run()
+    for jid in ids[:4]:                  # deliver 4 of 6 results
+        eng.result(jid)
+    eng.step()                           # GC runs at step boundaries
+    assert ids[0] not in eng.jobs and ids[1] not in eng.jobs
+    assert ids[2] in eng.jobs and ids[3] in eng.jobs   # newest 2 delivered
+    assert ids[4] in eng.jobs and ids[5] in eng.jobs   # undelivered: kept
+    svc = SolveService(eng)
+    assert svc.poll(ids[0])["error"] == "unknown job"
+    assert svc.result(ids[4])["status"] == DONE        # still fetchable
+
+
+def test_retain_done_bounds_snapshot_aux(tmp_path):
+    """A churny fetch-everything workload must not grow the snapshot job
+    table: with retain_done, aux size plateaus instead of accumulating
+    every record ever finished."""
+    import json
+
+    eng = SolveEngine(lanes=2, retain_done=3, checkpoint_dir=tmp_path)
+    sizes = []
+    for round_ in range(4):
+        ids = eng.submit_many(_mixed_specs(4, seed0=500 + 10 * round_))
+        eng.run()
+        for jid in ids:
+            eng.result(jid)
+        eng.step()                       # fold GC into a snapshot
+        aux = eng.ckpt.aux(eng.ckpt.latest_step())
+        sizes.append(len(json.dumps(aux)))
+        assert len(aux["jobs"]) <= 3 + eng.lanes
+    assert len(eng.jobs) <= 3
+    # plateau: later rounds add jobs but not snapshot bytes (id strings
+    # grow by a char at most — allow 1% drift, not another round's worth)
+    assert sizes[-1] <= sizes[1] * 1.01
 
 
 def test_solve_server_resume_requires_ckpt_dir():

@@ -1,24 +1,24 @@
-"""Heterogeneous-n lane packing: the pad-size ladder, fill-aware
-admission under the max_pad_waste bound, near-empty sibling-group fusion,
-and kill/resume of ladder-bucketed groups.
+"""Heterogeneous-n lane packing over the block-paged pool: the count
+ladder (row widths / gathered views / pool capacity), page allocation and
+reuse, row-compacted sweep plans, and kill/resume of paged pools.
 
-The load-bearing property throughout is *pad invariance*: a job's
+The load-bearing property throughout is *layout invariance*: a job's
 per-pass math and seeded start depend only on (spec, n), never on which
-canonical n_pad its lane rides, so every placement policy — dedicated
-equal-n buckets, exact-pad bucketing, ladder rungs, mid-flight grafts —
-produces bit-identical fun/x.
+lane slot, page assignment, or lane mix serves it, so every placement —
+dedicated single-lane pools, packed mixed-n pools, resumed-from-checkpoint
+pools — produces bit-identical fun/x.
 """
 import numpy as np
 import pytest
 
 from repro.core import ABOConfig, abo_minimize
 from repro.engine import DONE, JobSpec, SolveEngine, SolveService
-from repro.engine.batched import (DEFAULT_MAX_PAD_WASTE, bucket_key,
-                                  family_key, pad_ladder, padded_n)
+from repro.engine.batched import (DEFAULT_MAX_PAD_WASTE, SCRATCH_PAGE,
+                                  family_key, pad_ladder, pages_for)
 from repro.objectives import OBJECTIVES
 
 CFG = ABOConfig(samples_per_pass=12, n_passes=3, block_size=64)
-# 4 distinct exact pads (320, 384, 448, 512) on 2 ladder rungs (384, 512)
+# 4 distinct page counts (5, 6, 7, 8 pages at block=64) in one family
 MIXED_NS = (300, 350, 440, 460)
 OBJ = "rastrigin"
 
@@ -29,7 +29,7 @@ def _specs(seed0=0):
 
 
 def _dedicated(spec, **kw):
-    """The spec solved alone — its own single-job engine/bucket."""
+    """The spec solved alone — its own single-lane engine/pool."""
     eng = SolveEngine(lanes=1, **kw)
     jid = eng.submit(spec)
     eng.run()
@@ -45,34 +45,58 @@ def test_pad_ladder_rungs():
         rung = pad_ladder(n, block)
         assert rung >= n and rung % block == 0
         assert rung == exact or (rung - n) / rung <= DEFAULT_MAX_PAD_WASTE
-        # 0 waste budget = exact padding, the PR 1 contract
+        # 0 waste budget = exact sizes
         assert pad_ladder(n, block, 0.0) == exact
-    # a bound tighter than the rung's waste falls back to the exact pad
+    # a bound tighter than the rung's waste falls back to the exact size
     assert pad_ladder(300, 64, 0.05) == 320
 
 
-def test_ladder_collapses_buckets():
-    exact = {bucket_key(OBJ, n, CFG, 4, max_pad_waste=0.0)
-             for n in MIXED_NS}
-    ladder = {bucket_key(OBJ, n, CFG, 4) for n in MIXED_NS}
-    assert len(exact) == 4
-    assert sorted(padded_n(k) for k in ladder) == [384, 512]
-    assert len({family_key(k) for k in exact | ladder}) == 1
+def test_pad_ladder_edge_cases():
+    # n below one block: the single-block rung, whatever the bound
+    assert pad_ladder(5, 64) == 64
+    assert pad_ladder(1, 4096) == 4096
+    assert pad_ladder(1, 1) == 1
+    # exact rung boundaries map to themselves; one past jumps a rung
+    assert pad_ladder(384, 64) == 384            # 6 blocks, on-ladder
+    assert pad_ladder(385, 64) == 512            # 7 blocks -> rung 8
+    assert pad_ladder(512, 64) == 512
+    assert pad_ladder(6, 1) == 6 and pad_ladder(7, 1) == 8
+    # max_pad_waste=0 is exact for every size
+    for n in (1, 63, 64, 65, 384, 385):
+        assert pad_ladder(n, 64, 0.0) == -(-n // 64) * 64
+    # paper-scale n: the ladder stays a block multiple within its bound
+    n = 10 ** 9
+    rung = pad_ladder(n, 4096)
+    assert rung >= n and rung % 4096 == 0
+    assert (rung - n) / rung <= 1 / 3
+    assert pad_ladder(n, 1) == 2 ** 30           # nearest {1,1.5}x2^k count
 
 
-def test_mixed_n_bit_identical_across_policies():
-    """Ladder-bucketed mixed-n lanes reproduce dedicated equal-n buckets
-    AND exact-pad bucketing bit-for-bit, and stay within tolerance of the
-    standalone solver."""
+def test_every_n_shares_one_family():
+    """The compile-sharing key is n-free: every n above the tiny-problem
+    cutoff rides ONE executable family per (objective, config, dtype)."""
+    keys = {family_key(OBJ, n, CFG) for n in MIXED_NS + (64 * 200, 10 ** 6)}
+    assert len(keys) == 1
+    # page footprint is the true block count — no canonical pad rungs
+    assert [pages_for(n, 64) for n in MIXED_NS] == [5, 6, 7, 8]
+
+
+def test_mixed_n_bit_identical_across_layouts():
+    """Mixed-n lanes packed into one paged pool reproduce dedicated
+    single-lane pools AND a differently-packed (2-lane) engine
+    bit-for-bit, and exactly match the standalone solver."""
     specs = _specs()
     eng = SolveEngine(lanes=4)
     ids = eng.submit_many(specs)
     eng.run()
-    assert sorted(padded_n(k) for k in eng.bucket_keys_seen) == [384, 512]
-    for spec, jid in zip(specs, ids):
+    assert len(eng.pools) == 1           # one family pool for all four n
+    two = SolveEngine(lanes=2)           # different widths, pages, refills
+    two_ids = two.submit_many(specs)
+    two.run()
+    for spec, jid, jid2 in zip(specs, ids, two_ids):
         got = eng.result(jid)
-        for ref in (_dedicated(spec),                      # own ladder bucket
-                    _dedicated(spec, max_pad_waste=0.0)):  # exact pad
+        for ref in (_dedicated(spec),                      # own pool
+                    two.result(jid2)):                     # 2-lane packing
             assert got.fun == ref.fun
             np.testing.assert_array_equal(got.x, ref.x)
         solo = abo_minimize(OBJECTIVES[spec.objective], spec.n,
@@ -82,59 +106,63 @@ def test_mixed_n_bit_identical_across_policies():
         np.testing.assert_array_equal(got.x, solo.x)
 
 
-def test_admission_respects_waste_bound():
-    # n=200 in the open 512 group would waste 61% > bound -> own rung
-    eng = SolveEngine(lanes=2, max_fuse=1)
-    eng.submit(JobSpec(OBJ, 460, CFG, seed=0))
-    eng.submit(JobSpec(OBJ, 200, CFG, seed=1))
-    eng.step()
-    assert sorted(padded_n(g.key) for g in eng.groups.values()) == [256, 512]
-
-
-def test_admission_prefers_open_group():
-    # 300's own rung is 384; riding 350's open 384 group shares the lane
-    # group instead of opening a second one
-    eng = SolveEngine(lanes=2, max_fuse=1)
-    eng.submit(JobSpec(OBJ, 350, CFG, seed=0))
-    eng.submit(JobSpec(OBJ, 300, CFG, seed=1))
-    eng.step()
-    assert len(eng.groups) == 1
-    (group,) = eng.groups.values()
-    assert padded_n(group.key) == 384 and group.active == 2
-
-
-def test_sibling_groups_fuse_mid_flight():
-    """A lane grafted into a wider sibling group mid-solve finishes with
-    bit-identical results; the emptied rung group is dropped."""
-    sa = JobSpec(OBJ, 350, CFG, seed=3)     # rung 384; 31.6% waste at 512
-    sb = JobSpec(OBJ, 460, CFG, seed=4)     # rung 512
+def test_row_width_ladder_and_plan_bands():
+    """The sweep plan gathers rows at ladder widths in ascending-row
+    bands: 4 mixed-depth lanes produce on-rung bands (no width padding);
+    a 5-lane pool pads its full-width rows onto the 6 rung."""
     eng = SolveEngine(lanes=4, max_fuse=1)
-    ja = eng.submit(sa)
-    eng.step()                              # A mid-flight in its 384 group
-    jb = eng.submit(sb)
-    eng.step()                              # B placed; A grafted into 512
-    assert [padded_n(g.key) for g in eng.groups.values()] == [512]
-    assert eng.groups[bucket_key(OBJ, 460, CFG, 4)].active == 2
+    eng.submit_many(_specs())
+    eng.step()
+    (pool,) = eng.pools.values()
+    plan = pool.plan
+    assert [(run.w, int(run.n_rows)) for run in plan.runs] == \
+        [(4, 5), (3, 1), (2, 1), (1, 1)]    # depths 5,6,7,8 blocks
+    assert plan.live_slots == plan.swept_slots == 26
+    assert eng.pad_stats()["swept_waste"] == 0.0
+
+    five = SolveEngine(lanes=5, max_fuse=1)
+    five.submit_many(JobSpec(OBJ, 300, CFG, seed=i) for i in range(5))
+    five.step()
+    (pool,) = five.pools.values()
+    (run,) = pool.plan.runs
+    assert run.w == 6 and int(run.n_rows) == 5   # width 5 -> rung 6
+    assert pool.plan.live_slots == 25 and pool.plan.swept_slots == 30
+    assert five.pad_stats()["swept_waste"] == pytest.approx(5 / 30)
+
+
+def test_pool_capacity_grows_on_ladder_and_pages_recycle():
+    eng = SolveEngine(lanes=2, max_fuse=1)
+    ja = eng.submit(JobSpec(OBJ, 300, CFG, seed=0))    # 5 pages
+    eng.step()
+    (pool,) = eng.pools.values()
+    assert pool.capacity == 6                          # ladder(1 + 5)
+    jb = eng.submit(JobSpec(OBJ, 460, CFG, seed=1))    # 8 pages -> grow
+    eng.step()
+    assert pool.capacity == 16 and pool.state.pool.shape[0] == 16
+    tables = [pt for pt in pool.page_table if pt is not None]
+    used = [pg for pt in tables for pg in pt]
+    assert len(used) == len(set(used)) == 13           # disjoint, exact
+    assert SCRATCH_PAGE not in used                    # page 0 is reserved
     eng.run()
-    for spec, jid in ((sa, ja), (sb, jb)):
-        ref = _dedicated(spec)
-        assert eng.result(jid).fun == ref.fun
-        np.testing.assert_array_equal(eng.result(jid).x, ref.x)
+    assert eng.result(ja).fun == _dedicated(JobSpec(OBJ, 300, CFG,
+                                                    seed=0)).fun
+    assert eng.result(jb).fun == _dedicated(JobSpec(OBJ, 460, CFG,
+                                                    seed=1)).fun
+    # every page returns to the free list; capacity is retained
+    assert pool.free_pages == list(range(1, 16))
+    # the scratch page stayed exactly zero through placement and sweeps
+    assert not np.asarray(pool.state.pool[SCRATCH_PAGE]).any()
+    # recycled pages serve the next job with identical results
+    jc = eng.submit(JobSpec(OBJ, 440, CFG, seed=2))
+    eng.run()
+    assert pool.capacity == 16                         # no regrowth
+    assert eng.result(jc).fun == _dedicated(JobSpec(OBJ, 440, CFG,
+                                                    seed=2)).fun
 
 
-def test_fusion_respects_waste_bound():
-    # 200 at 512 wastes 61% -> its group must NOT fuse away
-    eng = SolveEngine(lanes=4, max_fuse=1)
-    eng.submit(JobSpec(OBJ, 200, CFG, seed=0))
-    eng.step()
-    eng.submit(JobSpec(OBJ, 460, CFG, seed=1))
-    eng.step()
-    assert sorted(padded_n(g.key) for g in eng.groups.values()) == [256, 512]
-
-
-def test_kill_resume_ladder_groups(tmp_path):
-    """Kill/resume round-trips ladder-bucketed mixed-n groups and their
-    admission policy, reproducing the uninterrupted run bit-for-bit."""
+def test_kill_resume_paged_pools(tmp_path):
+    """Kill/resume round-trips the page tables and pool state of mixed-n
+    paged pools, reproducing the uninterrupted run bit-for-bit."""
     specs = _specs(seed0=40) + _specs(seed0=80)
 
     ref = SolveEngine(lanes=3)
@@ -146,13 +174,15 @@ def test_kill_resume_ladder_groups(tmp_path):
     ids = eng.submit_many(specs)
     for _ in range(4):
         eng.step()
-    seen = set(eng.bucket_keys_seen)
+    tables = {k: [list(pt) if pt else None for pt in p.page_table]
+              for k, p in eng.pools.items()}
+    seen = set(eng.family_keys_seen)
     del eng                                 # "kill" mid-solve
 
     res = SolveEngine.resume(tmp_path)
-    assert res.max_pad_waste == DEFAULT_MAX_PAD_WASTE
-    assert all(padded_n(k) in (384, 512) for k in res.groups)
-    assert res.bucket_keys_seen == seen     # compiled-shape history survives
+    assert res.family_keys_seen == seen     # compiled-family history survives
+    assert {k: [list(pt) if pt else None for pt in p.page_table]
+            for k, p in res.pools.items()} == tables
     res.run()
     for a, b in zip(ref_ids, ids):
         assert ref.result(a).fun == res.result(b).fun
@@ -169,10 +199,13 @@ def test_stats_report_fill_and_waste():
                            "block_size": 64}})
     svc.step()
     s = svc.stats()
-    assert s["buckets"] == 1 and s["buckets_created"] == 1
-    assert s["max_pad_waste"] == DEFAULT_MAX_PAD_WASTE
-    assert s["fill_ratio"] == pytest.approx(650 / 768)
-    assert s["pad_waste"] == pytest.approx(1 - 650 / 768)
+    assert s["families"] == 1 and s["families_created"] == 1
+    # coordinate-level fill: true n over occupied pages (11 x 64 coords)
+    assert s["fill_ratio"] == pytest.approx(650 / 704)
+    assert s["pad_waste"] == pytest.approx(1 - 650 / 704)
+    # row-slot level: widths 2,2,2,2,2,1 are all on-rung -> zero waste
+    assert s["swept_rows"] == 11 and s["swept_rows_live"] == 11
+    assert s["swept_waste"] == 0.0
     svc.drain()
     s = svc.stats()
     assert s["jobs"] == {DONE: 2}
