@@ -8,8 +8,10 @@ Emits the same ``name,us_per_call,derived`` CSV rows as benchmarks/run.py
 (also mounted there as ``--only engine`` / ``--only engine_mixed``), and
 writes/extends ``BENCH_engine.json`` — a machine-readable perf trajectory
 (jobs/s, speedup over the in-bench sequential lap, compiled-executable
-count, padded-compute waste from ``pad_stats``) so regressions show up as
-data, not vibes. Speedups are always against a sequential lap measured in
+count, padded-compute waste from ``pad_stats``, and the elastic-pool /
+checkpoint-journal economics of ``engine_elastic``: peak vs settled
+device bytes, journal records/segments after compaction) so regressions
+show up as data, not vibes. Speedups are always against a sequential lap measured in
 the same process on the same inputs: container wall-clock drifts up to
 2x, so absolute seconds are noise but the ratio is signal.
 
@@ -171,6 +173,56 @@ def engine_mixed_n():
            f"families={len(eng.family_keys_seen)}")
 
 
+# ---- elastic pools + journal under churn ----------------------------------
+# The zero-RAM claim applied to the engine itself: run the mixed-n burst
+# through a journaled, retention-bounded engine and measure (a) device
+# footprint at the traffic peak vs after the drain (elastic pools release
+# free tails past the high-water hysteresis) and (b) the checkpoint
+# journal's residue after compaction (client-input records, not
+# whole-state snapshots, carry the steps between bases).
+def engine_elastic():
+    import shutil
+    import tempfile
+
+    tmp = tempfile.mkdtemp(prefix="bench_engine_elastic_")
+    try:
+        # journal_every=2: the 32-job burst drains in ~4 fused generations,
+        # so this exercises base cuts + segment compaction, not just appends
+        eng = SolveEngine(lanes=MIXED_LANES, checkpoint_dir=tmp,
+                          journal_every=2, retain_done=8)
+        ids = eng.submit_many(_mixed_specs(0))
+        t0 = time.perf_counter()
+        peak = 0
+        while eng.pending():
+            eng.step()
+            peak = max(peak, eng.memory_stats()["pool_device_bytes"])
+        dt = time.perf_counter() - t0
+        for jid in ids:
+            eng.result(jid)              # deliver -> retention GC kicks in
+        settled = eng.memory_stats()["pool_device_bytes"]
+        jst = eng.ckpt.journal_stats()
+        bases = len([p for p in pathlib.Path(tmp).glob("step_*")
+                     if not p.name.endswith(".tmp")])
+        _METRICS["engine_elastic"] = {
+            "jobs": MIXED_JOBS, "dt_s": dt,
+            "peak_pool_bytes": peak,
+            "settled_pool_bytes": settled,
+            "shrink_ratio": settled / peak if peak else None,
+            "journal_records": jst["records"],
+            "journal_segments": jst["segments"],
+            "journal_bytes": jst["bytes"],
+            "journal_last_seq": jst["last_seq"],
+            "base_snapshots": bases,
+            "retained_jobs": len(eng.jobs),
+        }
+        yield (f"engine_elastic_k{MIXED_JOBS}", dt / MIXED_JOBS * 1e6,
+               f"peak_pool_bytes={peak} settled_pool_bytes={settled} "
+               f"journal_records={jst['records']} "
+               f"journal_segments={jst['segments']} bases={bases}")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
 def write_artifact(path: str | pathlib.Path = ARTIFACT) -> pathlib.Path:
     """Append this run's metrics to the JSON perf trajectory (a list of
     run records, newest last). Partial runs append whatever scenarios
@@ -195,6 +247,8 @@ def write_artifact(path: str | pathlib.Path = ARTIFACT) -> pathlib.Path:
 def main():
     print("name,us_per_call,derived")
     for name, us, derived in engine_vs_sequential():
+        print(f"{name},{us:.1f},{derived}")
+    for name, us, derived in engine_elastic():
         print(f"{name},{us:.1f},{derived}")
     for name, us, derived in engine_mixed_n():
         print(f"{name},{us:.1f},{derived}")

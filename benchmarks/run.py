@@ -46,8 +46,11 @@ def main() -> None:
         from benchmarks.abo_zo_train import abo_zo_vs_adamw
         rows += list(abo_zo_vs_adamw())
     if want("engine"):
-        from benchmarks.engine_bench import engine_vs_sequential
+        from benchmarks.engine_bench import engine_elastic, engine_vs_sequential
         rows += list(engine_vs_sequential())
+        # elastic-pool + checkpoint-journal economics (peak vs settled
+        # device bytes, journal/compaction residue) -> BENCH_engine.json
+        rows += list(engine_elastic())
     if want("engine_mixed"):
         from benchmarks.engine_bench import engine_mixed_n
         rows += list(engine_mixed_n())

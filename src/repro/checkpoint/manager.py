@@ -14,6 +14,16 @@ Design (scales to multi-host; single-host implementation here):
     wait() joins before the next save — at most one in flight.
   * corruption: a checkpoint without COMMITTED marker inside manifest is
     skipped by latest_step() — restart falls back to the previous one.
+  * journal: an append-only record log beside the snapshots
+    (<dir>/journal/seg_<firstseq>.jsonl) for callers whose state is
+    mostly derivable — the solve engine journals client *inputs*
+    (submit/cancel/fetched) between rare base snapshots instead of
+    re-serializing its whole job table every step. Records carry a
+    monotone ``seq``; segments roll at a fixed record count and are
+    dropped by ``journal_truncate`` once a base snapshot covers them
+    (compaction). A torn tail line (kill mid-append) is tolerated on
+    replay; a ``SEQ`` floor file keeps seq monotone across
+    truncate-then-restart.
 """
 from __future__ import annotations
 
@@ -33,11 +43,16 @@ def _flatten(tree) -> tuple[list, Any]:
 
 
 class CheckpointManager:
-    def __init__(self, directory: str | pathlib.Path, *, keep: int = 3):
+    def __init__(self, directory: str | pathlib.Path, *, keep: int = 3,
+                 journal_segment_records: int = 1024):
         self.dir = pathlib.Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
+        self.journal_segment_records = max(journal_segment_records, 1)
         self._thread: threading.Thread | None = None
+        # (last seq, open-segment path, open-segment record count) — lazily
+        # initialized from a directory scan on first journal use
+        self._journal: tuple[int, pathlib.Path | None, int] | None = None
 
     # ------------------------------------------------------------------ save
     def save(self, step: int, tree: Any, *, blocking: bool = True,
@@ -135,3 +150,141 @@ class CheckpointManager:
             leaves = [jax.numpy.asarray(l.astype(w.dtype))
                       for l, w in zip(leaves, like_leaves)]
         return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    # --------------------------------------------------------------- journal
+    @property
+    def journal_dir(self) -> pathlib.Path:
+        return self.dir / "journal"
+
+    def _journal_segments(self) -> list[pathlib.Path]:
+        if not self.journal_dir.is_dir():
+            return []
+        return sorted(self.journal_dir.glob("seg_*.jsonl"))
+
+    def _read_segment(self, path: pathlib.Path, last: bool) -> list[dict]:
+        """Parse one segment. A torn tail line — a kill mid-append — is
+        dropped, but only in the newest segment; anywhere else it is real
+        corruption and must not be silently skipped."""
+        out = []
+        lines = path.read_text().splitlines()
+        for i, line in enumerate(lines):
+            if not line.strip():
+                continue
+            try:
+                out.append(json.loads(line))
+            except json.JSONDecodeError:
+                if last and i == len(lines) - 1:
+                    break                       # torn tail -> ignore
+                raise RuntimeError(
+                    f"corrupt journal record in {path} line {i + 1}")
+        return out
+
+    def _journal_state(self) -> tuple[int, pathlib.Path | None, int]:
+        if self._journal is None:
+            last_seq, open_seg, count = 0, None, 0
+            floor = self.journal_dir / "SEQ"
+            if floor.exists():                  # truncation high-water mark
+                last_seq = int(floor.read_text())
+            segs = self._journal_segments()
+            if segs:
+                # repair a torn tail (kill mid-append leaves a partial
+                # final line) BEFORE ever appending again — a new record
+                # written after it would weld onto the fragment and
+                # corrupt an otherwise-valid line. Truncate IN PLACE at
+                # the last newline: a rewrite (write_text) would zero the
+                # file first, and a crash inside that window destroys the
+                # whole segment's durable records instead of one fragment
+                txt = segs[-1].read_bytes()
+                if txt and not txt.endswith(b"\n"):
+                    with segs[-1].open("rb+") as fh:
+                        fh.truncate(txt.rfind(b"\n") + 1)
+            for i, seg in enumerate(segs):
+                recs = self._read_segment(seg, last=i == len(segs) - 1)
+                if recs:
+                    last_seq = max(last_seq, recs[-1]["seq"])
+                if i == len(segs) - 1:
+                    open_seg, count = seg, len(recs)
+            self._journal = (last_seq, open_seg, count)
+        return self._journal
+
+    def journal_last_seq(self) -> int:
+        return self._journal_state()[0]
+
+    def journal_append(self, records: list[dict]) -> int:
+        """Append records (assigning each a monotone ``seq``) to the open
+        segment, rolling to a new segment file every
+        ``journal_segment_records``. Returns the last assigned seq. Writes
+        are flushed per call, so anything appended survives a process
+        kill; records after the last flush can at worst be torn, which
+        replay tolerates."""
+        seq, open_seg, count = self._journal_state()
+        self.journal_dir.mkdir(parents=True, exist_ok=True)
+        fh = None
+        try:
+            for rec in records:
+                seq += 1
+                if open_seg is None or count >= self.journal_segment_records:
+                    if fh is not None:
+                        fh.close()
+                        fh = None
+                    open_seg = self.journal_dir / f"seg_{seq:012d}.jsonl"
+                    count = 0
+                if fh is None:       # one open per segment, not per record
+                    fh = open_seg.open("a")
+                fh.write(json.dumps({"seq": seq, **rec}) + "\n")
+                count += 1
+        finally:
+            if fh is not None:
+                fh.close()
+        self._journal = (seq, open_seg, count)
+        return seq
+
+    def journal_entries(self, after_seq: int = 0) -> list[dict]:
+        """All journal records with seq > ``after_seq``, in seq order."""
+        out = []
+        segs = self._journal_segments()
+        for i, seg in enumerate(segs):
+            for rec in self._read_segment(seg, last=i == len(segs) - 1):
+                if rec["seq"] > after_seq:
+                    out.append(rec)
+        return out
+
+    def journal_truncate(self, upto_seq: int):
+        """Compaction: drop segments whose every record is <= ``upto_seq``
+        (i.e. already covered by a committed base snapshot), and persist
+        the seq floor so a restart with an empty journal keeps seq
+        monotone past the truncated range."""
+        seq, open_seg, count = self._journal_state()
+        if upto_seq <= 0:
+            return
+        self.journal_dir.mkdir(parents=True, exist_ok=True)
+        floor = self.journal_dir / "SEQ"
+        tmp = floor.with_suffix(".tmp")
+        tmp.write_text(str(max(upto_seq, seq)))
+        tmp.rename(floor)
+        segs = self._journal_segments()
+        for i, seg in enumerate(segs):
+            recs = self._read_segment(seg, last=i == len(segs) - 1)
+            if recs and recs[-1]["seq"] > upto_seq:
+                break
+            seg.unlink()
+            if seg == open_seg:
+                open_seg, count = None, 0
+        self._journal = (max(seq, upto_seq), open_seg, count)
+
+    def journal_stats(self) -> dict:
+        """Size/position of the live journal (post-compaction residue).
+
+        O(#segments), not O(journal bytes): this runs on every service
+        stats poll, so it must not re-parse the records. Segments roll
+        exactly at ``journal_segment_records``, so every non-open segment
+        is full and only the open segment's count (tracked incrementally
+        by ``_journal_state``) varies."""
+        last_seq, open_seg, count = self._journal_state()
+        segs = self._journal_segments()
+        full = len(segs) - 1 if segs else 0
+        records = full * self.journal_segment_records + \
+            (count if segs else 0)
+        nbytes = sum(seg.stat().st_size for seg in segs)
+        return {"segments": len(segs), "records": records, "bytes": nbytes,
+                "last_seq": last_seq}

@@ -24,6 +24,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.objectives.base import SeparableObjective
 
@@ -100,6 +101,26 @@ def _candidate_grid(xb, lo, hi, half_width, m, is_first_pass):
     return jnp.concatenate([grid, xb[:, None]], axis=1)       # (B, m)
 
 
+def tree_sum(x: jnp.ndarray) -> jnp.ndarray:
+    """Sum over axis 0 with an EXPLICIT balanced association tree.
+
+    ``x.sum(axis=0)`` leaves the accumulation order to the backend, and
+    XLA:CPU picks per-compilation strategies — the same logical sum can
+    round differently between the dense solver's scan program and the
+    engine's vmapped row-sweep program, or between physical lengths. Here
+    the tree is spelled out as elementwise adds (halve, add, repeat; an
+    odd leftover rides along unmodified), which the compiler cannot
+    reassociate, so any two programs summing the same values get the same
+    bits. Cost is the same ~len(x) adds a native reduce performs.
+    """
+    while x.shape[0] > 1:
+        k = x.shape[0] // 2
+        head = x[:k] + x[k: 2 * k]
+        x = head if x.shape[0] == 2 * k else \
+            jnp.concatenate([head, x[2 * k:]], axis=0)
+    return x[0]
+
+
 def _block_step(obj, cfg, probe_tile, xb, aggs, idx, valid, half_width,
                 is_first_pass, lam, lo, hi):
     """Probe-and-commit one Jacobi block: the (B, m) candidate tile, the
@@ -122,7 +143,9 @@ def _block_step(obj, cfg, probe_tile, xb, aggs, idx, valid, half_width,
     x_sel = jnp.take_along_axis(cands, sel[:, None], axis=1)[:, 0]
     d_sel = jnp.take_along_axis(
         delta, sel[:, None, None], axis=1)[:, 0, :]        # (B, A)
-    aggs_new = aggs + d_sel.sum(axis=0).astype(agg_dt)
+    # tree_sum, not d_sel.sum(0): the commit reduction must round the
+    # same way in the dense scan and the engine's vmapped sweep
+    aggs_new = aggs + tree_sum(d_sel).astype(agg_dt)
 
     if cfg.guard_commits:
         accept = obj.combine_at(aggs_new, lam) <= obj.combine_at(aggs, lam)
@@ -135,21 +158,53 @@ def pass_schedule(cfg: ABOConfig, pass_idx, agg_dtype):
     """(half_width, lam) for a pass index — the shrink/continuation
     schedule of :func:`abo_pass_step`, factored out so the engine's row
     sweep computes the identical per-lane values. ``pass_idx`` may be a
-    scalar or a traced array (per-lane schedules under vmap)."""
-    half_width = 0.5 * cfg.resolved_shrink() ** pass_idx
+    scalar or a traced array (per-lane schedules under vmap).
+
+    Both values are host-precomputed tables indexed by ``pass_idx``, NOT
+    on-device ``shrink ** p`` arithmetic: a traced-exponent pow lowers
+    through exp/log whose bits can differ between compilation contexts
+    (the dense solver's scan vs the engine's vmapped row sweep), and a
+    one-ulp half_width difference shifts every candidate grid — the
+    avalanche that breaks engine-vs-abo_minimize bit-identity the moment
+    aggregates are large enough for probe ties. A table lookup is the
+    same bits everywhere (and exact, being evaluated in float64). OOB
+    indices clip: the engine's scratch lane keeps incrementing its
+    pass_idx past n_passes and must stay inert, not out-of-range."""
+    ps = np.arange(cfg.n_passes, dtype=np.float64)
+    hw_tab = jnp.asarray(0.5 * cfg.resolved_shrink() ** ps, agg_dtype)
+    half_width = jnp.take(hw_tab, pass_idx, mode="clip")
     if cfg.coupling_schedule == "linear" and cfg.n_passes > 1:
-        lam = (pass_idx / (cfg.n_passes - 1)).astype(agg_dtype)
+        lam_tab = jnp.asarray(ps / (cfg.n_passes - 1), agg_dtype)
+        lam = jnp.take(lam_tab, pass_idx, mode="clip")
     else:
-        lam = jnp.ones((), agg_dtype)
+        # match pass_idx's shape (not a bare scalar): the engine computes
+        # the schedule for a whole gathered row at once and vmaps the
+        # block step over it, so lam must be mappable alongside half_width
+        lam = jnp.broadcast_to(jnp.ones((), agg_dtype),
+                               jnp.shape(pass_idx))
     return half_width, lam
 
 
 def _sweep_pass(obj, x, aggs, n_valid, half_width, pass_idx, lam, cfg,
                 probe_tile, bounds=None):
-    """One full pass: scan Jacobi block sweeps over the (padded) solution."""
+    """One full pass: scan Jacobi block sweeps over the (padded) solution.
+
+    The :func:`_block_step` call is fenced with ``optimization_barrier``
+    (inputs and outputs), and the engine's row sweep fences its vmapped
+    call the same way. The fences pin the probe/commit math into a
+    self-contained fusion region with identical content in both programs,
+    so XLA cannot specialize its instruction selection (FMA contraction,
+    loop-context vectorization) differently per surrounding program —
+    which it otherwise does: the same block step compiled inside the
+    engine's dynamic row loop rounds differently from this scan, flipping
+    argmin picks wherever two candidates probe within an ulp. That broke
+    engine-vs-abo_minimize bit-identity in any regime where trajectories
+    don't collapse onto exact grid points.
+    """
     n_pad = x.shape[0]
     bsz = cfg.block_size
     n_blocks = n_pad // bsz
+    first = pass_idx == 0
 
     def block_body(carry, blk):
         x, aggs = carry
@@ -161,10 +216,16 @@ def _sweep_pass(obj, x, aggs, n_valid, half_width, pass_idx, lam, cfg,
         if bounds is not None:       # per-coordinate spaces (paper's s=3)
             lo = jax.lax.dynamic_slice(bounds[0], (start,), (bsz,))
             hi = jax.lax.dynamic_slice(bounds[1], (start,), (bsz,))
+            xb, ag, idx, valid, hw, fst, lm, lo, hi = \
+                jax.lax.optimization_barrier(
+                    (xb, aggs, idx, valid, half_width, first, lam, lo, hi))
         else:
             lo, hi = obj.lower, obj.upper
-        x_sel, aggs = _block_step(obj, cfg, probe_tile, xb, aggs, idx, valid,
-                                  half_width, pass_idx == 0, lam, lo, hi)
+            xb, ag, idx, valid, hw, fst, lm = \
+                jax.lax.optimization_barrier(
+                    (xb, aggs, idx, valid, half_width, first, lam))
+        x_sel, aggs = jax.lax.optimization_barrier(_block_step(
+            obj, cfg, probe_tile, xb, ag, idx, valid, hw, fst, lm, lo, hi))
         x = jax.lax.dynamic_update_slice(x, x_sel, (start,))
         return (x, aggs), None
 
@@ -232,7 +293,7 @@ def abo_make_state(obj: SeparableObjective, x: jnp.ndarray, n_valid,
                    cfg: ABOConfig) -> ABOState:
     """Pass-0 state from a (padded) start vector. Traceable — the engine
     builds lane states inside its jitted place op with this."""
-    aggs = obj.aggregates(x, n_valid, chunk_size=1 << 20)
+    aggs = obj.aggregates(x, n_valid)
     return ABOState(
         x=x,
         aggs=aggs,
@@ -353,7 +414,7 @@ def abo_pass_step(
                           p, lam, cfg, probe_tile, bounds)
     # re-sync aggregates exactly once per pass: kills accumulated-delta
     # drift (one O(N) streaming scan per pass — amortized over m·N probes)
-    aggs = obj.aggregates(x, state.n_valid, chunk_size=1 << 20)
+    aggs = obj.aggregates(x, state.n_valid)
     hist = state.hist.at[p].set(obj.combine(aggs))
     return ABOState(x=x, aggs=aggs, hist=hist, pass_idx=p + 1,
                     n_valid=state.n_valid)
@@ -375,7 +436,7 @@ def _abo_jit(x, obj, n, cfg, probe_tile, bounds=None):
     # One exact O(N) re-evaluation so the reported optimum carries no
     # accumulated-delta rounding (drift itself is asserted small in tests).
     f_exact = obj.combine(
-        obj.aggregates(state.x, state.n_valid, chunk_size=1 << 20))
+        obj.aggregates(state.x, state.n_valid))
     return state, f_exact
 
 

@@ -5,7 +5,10 @@ compile-sharing contract). Lane coordinate blocks live in a shared page
 pool with host-side page tables, so a job pays compute for its true
 ``ceil(n / block)`` blocks — never for padding rungs or idle lanes — while
 jobs of every n share one executable family, with bit-identical per-job
-results at any layout."""
+results at any layout. Pool memory is elastic (slot budgets size to
+observed traffic; drained pools shrink past a high-water hysteresis) and
+checkpointing can run incrementally (``journal_every``: an append-only
+client-input journal between rare base snapshots, replayed on resume)."""
 from repro.engine.jobs import CANCELLED, DONE, QUEUED, RUNNING, JobSpec, JobState
 from repro.engine.scheduler import LanePool, SolveEngine
 from repro.engine.service import SolveService

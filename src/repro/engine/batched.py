@@ -31,12 +31,14 @@ Bit-identity. Per-lane math is exactly ``abo_minimize``'s: the row sweep
 vmaps the identical block primitive with the identical pass schedule, and
 every whole-lane reduction (end-of-pass aggregate re-sync, placement init,
 final exact re-eval) runs over a *gathered contiguous row view* — the
-lane's pages concatenated in order, length padded onto a page-count rung —
-so the floating-point reduction tree matches the dense solver's up to
-trailing masked zeros, the same invariance the heterogeneous-pad layout
-established. Seeded starts stay pad-invariant (per-coordinate counter
-draws), so a job's fun/x are bit-identical whichever pool, slot, page
-assignment, or lane mix serves it.
+lane's pages concatenated in order, length padded onto a page-count rung.
+``SeparableObjective.aggregates`` reduces in fixed REDUCE_TILE tiles
+accumulated in index order, so its bits depend only on the masked content,
+never on the physical length of the view — gathered rungs, the dense
+solver's exact pad, and any n (including past the old 1 MiB chunk
+boundary) all reduce identically. Seeded starts stay pad-invariant
+(per-coordinate counter draws), so a job's fun/x are bit-identical
+whichever pool, slot, page assignment, or lane mix serves it.
 
 Everything per-job-hot is jitted and cached per compiled shape in
 :class:`PoolOps`: row sweeps keyed (width rung, row-count rung), lane
@@ -64,10 +66,11 @@ _POOL_OPS_CACHE: dict[tuple, "PoolOps"] = {}
 # a canonical rung; 0 disables quantization (exact sizes).
 DEFAULT_MAX_PAD_WASTE = 0.35
 
-# Page id 0 and lane slot `lanes` (one past the budget) are reserved
-# scratch targets for ladder padding entries in gathers/scatters: scratch
-# page content is all-zeros by construction and the scratch lane has
-# n_valid = 0, so padded work is inert and padded reads are exact zeros.
+# Page id 0 and the last lane-slot row (one past the pool's current slot
+# count) are reserved scratch targets for ladder padding entries in
+# gathers/scatters: scratch page content is all-zeros by construction and
+# the scratch lane has n_valid = 0, so padded work is inert and padded
+# reads are exact zeros.
 SCRATCH_PAGE = 0
 
 
@@ -166,15 +169,39 @@ def zeros_pool_state(obj: SeparableObjective, key: tuple, lanes: int,
     )
 
 
-def grow_pool(state: PoolState, pages: int) -> PoolState:
-    """Extend the page pool to ``pages`` capacity (existing pages keep
-    their ids and content; new pages are zero). Host-rare: capacities ride
-    the ladder, so growth happens O(log traffic) times per family."""
-    if pages <= state.pool.shape[0]:
+def resize_pool_state(state: PoolState, lanes: int, pages: int) -> PoolState:
+    """Re-shape a pool's device state to ``lanes`` slots and ``pages``
+    capacity, growing or shrinking either dimension.
+
+    Surviving pages keep their ids and content (new pages are zero;
+    callers must only shrink past all-free tails). Surviving lane slots
+    keep their scalars; the scratch slot — always the LAST row — is
+    rebuilt as zeros at its new index, which also launders the junk that
+    ladder-padded syncs accumulate in it (its pass_idx increments every
+    plan step). Host-rare either way: both dimensions ride the count
+    ladder with a drain-side hysteresis, so resizes happen O(log traffic)
+    times per family, not per admission."""
+    p0 = state.pool.shape[0]
+    s0 = state.aggs.shape[0] - 1
+    if pages == p0 and lanes == s0:
         return state
-    pool = jnp.zeros((pages, state.pool.shape[1]), state.pool.dtype)
-    pool = pool.at[: state.pool.shape[0]].set(state.pool)
-    return dataclasses.replace(state, pool=pool)
+    pool = state.pool
+    if pages > p0:
+        pool = jnp.zeros((pages, pool.shape[1]), pool.dtype).at[:p0].set(pool)
+    elif pages < p0:
+        pool = pool[:pages]
+    state = dataclasses.replace(state, pool=pool)
+    if lanes != s0:
+        keep = min(s0, lanes)
+
+        def resize(a):
+            out = jnp.zeros((lanes + 1,) + a.shape[1:], a.dtype)
+            return out.at[:keep].set(a[:keep])
+
+        state = dataclasses.replace(
+            state, aggs=resize(state.aggs), hist=resize(state.hist),
+            pass_idx=resize(state.pass_idx), n_valid=resize(state.n_valid))
+    return state
 
 
 class PoolOps:
@@ -217,29 +244,37 @@ class PoolOps:
         """Sweep one width band: rows [0, n_rows) of the (r_cap, w) plan
         arrays, in order. Each row gathers the w lanes' blocks, runs the
         shared (w, block, m) probe tile — the identical per-lane schedule
-        + block primitive as abo_pass_step, so commits are bit-identical —
-        and scatters blocks + aggregates back. Ladder-padding entries
-        point at the scratch lane/page and are frozen no-ops; planned rows
-        past n_rows cost nothing (dynamic loop count)."""
+        + block primitive as abo_pass_step — and scatters blocks +
+        aggregates back. Ladder-padding entries point at the scratch
+        lane/page and are frozen no-ops; planned rows past n_rows cost
+        nothing (dynamic loop count).
+
+        The vmapped block step is fenced with ``optimization_barrier``
+        exactly like the dense solver's scan (see core.abo._sweep_pass):
+        without the fence, XLA specializes the probe math to THIS
+        program's dynamic loops (different FMA/vectorization choices than
+        the dense scan) and argmin picks flip wherever candidates probe
+        within an ulp — the reason per-lane bits are identical to
+        abo_minimize at any layout."""
         obj, cfg, probe_tile = self.obj, self.cfg, self.probe_tile
         bsz = cfg.block_size
 
-        def entry_step(xb, ag, p, nv, row):
-            half_width, lam = pass_schedule(cfg, p, ag.dtype)
-            start = row * bsz
-            idx = start + jnp.arange(bsz)
-            valid = idx < nv
+        def core_step(xb, ag, idx, valid, half_width, first, lam):
             return _block_step(obj, cfg, probe_tile, xb, ag, idx, valid,
-                               half_width, p == 0, lam,
+                               half_width, first, lam,
                                obj.lower, obj.upper)
 
         def body(j, carry):
             pool, aggs = carry
             ln, pg, rw = lanes[j], pages[j], rows[j]
-            xb = pool[pg]                        # (w, block)
-            ag = aggs[ln]                        # (w, A)
-            xb2, ag2 = jax.vmap(entry_step)(
-                xb, ag, state.pass_idx[ln], state.n_valid[ln], rw)
+            p = state.pass_idx[ln]               # (w,)
+            half_width, lam = pass_schedule(cfg, p, aggs.dtype)
+            idx = rw[:, None] * bsz + jnp.arange(bsz)[None, :]
+            valid = idx < state.n_valid[ln][:, None]
+            args = jax.lax.optimization_barrier(
+                (pool[pg], aggs[ln], idx, valid, half_width, p == 0, lam))
+            xb2, ag2 = jax.lax.optimization_barrier(
+                jax.vmap(core_step)(*args))
             return pool.at[pg].set(xb2), aggs.at[ln].set(ag2)
 
         pool, aggs = jax.lax.fori_loop(
@@ -248,8 +283,10 @@ class PoolOps:
 
     def _gather_rows(self, state: PoolState, pages):
         """(v, g) page ids -> (v, g*block) contiguous row views. Pages past
-        a lane's true count are scratch (exact zeros), so masked whole-row
-        reductions bit-match the dense solver's padded vector."""
+        a lane's true count are scratch (exact zeros), and the tile-fixed
+        aggregate reduction is length-invariant, so masked whole-row
+        reductions bit-match the dense solver's padded vector at ANY rung
+        width — including views crossing the reduction-tile boundary."""
         v, g = pages.shape
         return state.pool[pages].reshape(v, g * self.cfg.block_size)
 
@@ -268,7 +305,7 @@ class PoolOps:
         # we'd silently depend on drop-out-of-bounds scatter semantics.
         p_hist = jnp.minimum(p, self.cfg.n_passes - 1)
         aggs = jax.vmap(lambda xr, n: obj.aggregates(
-            xr, n, chunk_size=1 << 20))(xrow, nv)
+            xr, n))(xrow, nv)
         f = jax.vmap(obj.combine)(aggs)
         return dataclasses.replace(
             state,
@@ -335,7 +372,7 @@ class PoolOps:
                 xr = jnp.where(is_seeded, xs, xg)
                 xr = jnp.where(jnp.arange(width) < nv, xr,
                                jnp.zeros((), dt))
-                ag = obj.aggregates(xr, nv, chunk_size=1 << 20)
+                ag = obj.aggregates(xr, nv)
                 return xr, ag
 
             def run(state: PoolState, lanes, pages, seeded, seeds, n_valid):
@@ -357,7 +394,7 @@ class PoolOps:
             obj = self.obj
 
             def run(state: PoolState, lane, pages, xrow, n_valid):
-                ag = obj.aggregates(xrow, n_valid, chunk_size=1 << 20)
+                ag = obj.aggregates(xrow, n_valid)
                 return self._write_lanes(
                     state, lane[None], pages[None], xrow[None], ag[None],
                     n_valid[None])
@@ -399,7 +436,7 @@ class PoolOps:
                 xrow = self._gather_rows(state, pages)
                 nv = state.n_valid[lanes]
                 f = jax.vmap(lambda xr, n: obj.combine(obj.aggregates(
-                    xr, n, chunk_size=1 << 20)))(xrow, nv)
+                    xr, n)))(xrow, nv)
                 return f, xrow, state.hist[lanes]
 
             fn = jax.jit(run)

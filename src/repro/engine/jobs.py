@@ -25,6 +25,18 @@ DONE = "done"
 CANCELLED = "cancelled"
 STATUSES = (QUEUED, RUNNING, DONE, CANCELLED)
 
+# Journal record kinds (the append-only checkpoint journal, see
+# scheduler.SolveEngine). The journal is an *intent log* of client inputs
+# — everything else (lane placement, pass progress, results) is
+# deterministically re-derivable from the last base snapshot plus these,
+# which is what keeps journal records tiny and replay bit-exact:
+#   submit  {"job_id", "spec": JobSpec.to_dict()}
+#   cancel  {"job_id"}
+#   fetched {"job_id"}   # result delivered -> snapshots may drop x / GC
+J_SUBMIT = "submit"
+J_CANCEL = "cancel"
+J_FETCHED = "fetched"
+
 
 @dataclasses.dataclass(frozen=True)
 class JobSpec:

@@ -1,6 +1,6 @@
 """Slot-based continuous batching of ABO solve lanes over paged pools.
 
-The engine owns a fixed budget of ``lanes`` concurrent solves. Jobs are
+The engine owns a budget of ``lanes`` concurrent solves. Jobs are
 grouped by compiled *family* (objective, effective config, dtype — see
 batched.family_key); each family gets one :class:`LanePool` whose lane
 coordinate blocks live in a shared page pool with host-side page tables.
@@ -8,6 +8,18 @@ Between steps, lanes whose job has run all its passes are finalized via a
 compact gather of just those lanes and immediately refilled from the
 queue — the swap-finished-jobs-between-steps pattern of
 ``launch/serve.py``, at pass granularity instead of token granularity.
+
+Pool memory is *elastic*: a pool's lane-slot count starts at observed
+demand and rides the count ladder up to the engine budget (a family that
+only ever sees two concurrent jobs sizes its per-slot arrays for two, not
+``lanes``), and on drain both dimensions shrink — free pages and empty
+slots past a ``pool_high_water`` hysteresis of the ladder rung actually
+needed are released from the device (``batched.resize_pool_state``).
+Page/slot ids are stable, so only all-free *tails* can be released; the
+low-id-first free-list policy steers occupancy toward low ids so drains
+strand little. A long-lived service's footprint therefore tracks live
+traffic instead of its historical peak — the zero-RAM contract applied to
+the engine itself.
 
 Heterogeneous n costs what it costs: a lane occupies ``ceil(n / block)``
 pages and the row-compacted sweep touches exactly the occupied rows, so
@@ -35,6 +47,17 @@ run's results exactly. With ``retain_done=N``, whole job records of
 delivered (fetched DONE) or cancelled jobs beyond the N most recent are
 evicted from the table, so a long-lived service's snapshot aux stays
 bounded no matter how many jobs churn through.
+
+With ``journal_every=M`` the whole-state snapshot becomes a rare *base*
+(cut every M steps) and the gaps are covered by an append-only journal of
+client inputs — submit / cancel / fetched records appended the moment
+they happen (see jobs.J_*). Resume restores the newest base, then replays
+journal records past the base's ``journal_seq``: replayed submissions
+re-queue, replayed cancels/fetches re-apply, and every solve past the
+base re-runs deterministically from its base state — so per-job fun/x are
+bit-identical to the uninterrupted run while steady-state checkpoint I/O
+is O(client events), not O(job table). Each base snapshot truncates the
+journal segments it covers (compaction).
 """
 from __future__ import annotations
 
@@ -49,8 +72,9 @@ import numpy as np
 from repro.checkpoint.manager import CheckpointManager
 from repro.core.abo import ABOConfig
 from repro.engine import batched
-from repro.engine.jobs import (CANCELLED, DONE, QUEUED, RUNNING, JobSpec,
-                               JobState, next_job_id)
+from repro.engine.jobs import (CANCELLED, DONE, J_CANCEL, J_FETCHED,
+                               J_SUBMIT, QUEUED, RUNNING, JobSpec, JobState,
+                               next_job_id)
 from repro.objectives import OBJECTIVES
 from repro.objectives.base import SeparableObjective
 
@@ -122,11 +146,20 @@ def _gather_tables(entries: list[tuple[int, list[int]]], scratch_lane: int):
 
 @dataclasses.dataclass
 class LanePool:
-    """One family's lanes: shared page pool + host-side page tables."""
+    """One family's lanes: shared page pool + host-side page tables.
+
+    ``slots`` (the per-slot array height) is sized to this family's
+    observed concurrency, not the engine budget: it starts at zero, grows
+    on the count ladder as admissions demand (capped at ``lanes``), and
+    shrinks back on drain past the ``high_water`` hysteresis — as does the
+    page capacity. ``high_water=None`` disables shrinking (capacity is
+    retained forever, the pre-elastic behavior)."""
 
     key: tuple
     obj: SeparableObjective
-    lanes: int
+    lanes: int                                   # engine budget = slot cap
+    slots: int = 0                               # current lane-slot count
+    high_water: float | None = 2.0               # shrink hysteresis factor
     state: batched.PoolState | None = None       # materialized on first use
     capacity: int = 1                            # pages incl. scratch page 0
     job_ids: list[str | None] = dataclasses.field(default_factory=list)
@@ -137,9 +170,9 @@ class LanePool:
 
     def __post_init__(self):
         if not self.job_ids:
-            self.job_ids = [None] * self.lanes
+            self.job_ids = [None] * self.slots
         if not self.page_table:
-            self.page_table = [None] * self.lanes
+            self.page_table = [None] * self.slots
 
     @property
     def active(self) -> int:
@@ -150,6 +183,22 @@ class LanePool:
             if j is None:
                 return i
         return None
+
+    def take_slot(self) -> int:
+        """A free slot, growing the ladder-sized slot plan when all are
+        occupied (the device arrays resize lazily in :meth:`materialize`).
+        Callers gate admission on the engine-wide lane budget, so growth
+        never exceeds ``lanes``."""
+        slot = self.free_slot()
+        if slot is not None:
+            return slot
+        new = min(batched.pad_ladder(self.slots + 1, 1), self.lanes)
+        assert new > self.slots, "slot budget exhausted"
+        self.job_ids += [None] * (new - self.slots)
+        self.page_table += [None] * (new - self.slots)
+        self.slots = new
+        self.plan = None
+        return self.free_slot()
 
     def alloc_pages(self, count: int) -> list[int]:
         """Take ``count`` page ids, growing the capacity plan onto the
@@ -169,12 +218,52 @@ class LanePool:
         self.free_pages.sort()               # deterministic reassignment
 
     def materialize(self):
-        """Create/grow the device state to the host capacity plan."""
+        """Reconcile the device state to the host plan (slots, capacity)
+        — growing OR shrinking; a no-op when shapes already match."""
         if self.state is None:
             self.state = batched.zeros_pool_state(
-                self.obj, self.key, self.lanes, self.capacity)
-        elif self.state.pool.shape[0] < self.capacity:
-            self.state = batched.grow_pool(self.state, self.capacity)
+                self.obj, self.key, self.slots, self.capacity)
+        else:
+            self.state = batched.resize_pool_state(
+                self.state, self.slots, self.capacity)
+
+    def shrink_to_fit(self):
+        """Release free capacity past the high-water hysteresis. Called
+        after lanes drain: if the current slot count / page capacity
+        exceeds ``high_water ×`` the ladder rung covering the highest
+        occupied slot / used page, the all-free tail is cut and the device
+        arrays resized immediately — that is the moment the memory
+        actually returns. Only tails can go (ids are stable); interior
+        free pages wait for the lanes pinning higher ids to drain."""
+        if self.high_water is None or self.state is None:
+            return
+        top = max((i for i, j in enumerate(self.job_ids) if j is not None),
+                  default=-1)
+        slot_target = min(batched.pad_ladder(max(top + 1, 1), 1), self.lanes)
+        if slot_target < self.slots and self.slots > self.high_water \
+                * slot_target:
+            del self.job_ids[slot_target:]
+            del self.page_table[slot_target:]
+            self.slots = slot_target
+            self.plan = None
+        used_top = max((pg for pt in self.page_table if pt for pg in pt),
+                       default=batched.SCRATCH_PAGE)
+        cap_target = batched.pad_ladder(used_top + 1, 1)
+        if cap_target < self.capacity and self.capacity > self.high_water \
+                * cap_target:
+            self.capacity = cap_target
+            self.free_pages = [p for p in self.free_pages if p < cap_target]
+            self.plan = None
+        self.materialize()
+
+    def device_bytes(self) -> int:
+        """Bytes the device arrays currently hold (0 if unmaterialized)."""
+        if self.state is None:
+            return 0
+        return sum(leaf.size * leaf.dtype.itemsize
+                   for leaf in (self.state.pool, self.state.aggs,
+                                self.state.hist, self.state.pass_idx,
+                                self.state.n_valid))
 
     # ------------------------------------------------------------- planning
     def build_plan(self) -> _Plan:
@@ -186,46 +275,74 @@ class LanePool:
         the fused-step executable, preserving the Gauss-Seidel block
         ordering within every lane. Ladder padding (width and row-count
         rungs) points at the scratch lane/page.
+
+        Construction is array-at-once: lanes sort by depth (descending,
+        slot-ascending ties), so the lanes occupying row r are exactly the
+        first ``count(r)`` of that order and every band's (r_cap, w) plan
+        arrays are numpy slices of one (lane, row) page matrix — no host
+        loop over block rows. A paper-scale lane (1e9 coords ≈ 244k rows)
+        plans in milliseconds; the old per-row Python loop scaled with
+        pool size. Entry order within a row is a permutation of the old
+        planner's — harmless, since row entries touch disjoint
+        (lane, page) pairs.
         """
         active = [(slot, pt) for slot, (jid, pt)
                   in enumerate(zip(self.job_ids, self.page_table))
                   if jid is not None]
         if not active:
             return _Plan([], None, 0, 0)
-        scratch = self.lanes
-        max_rows = max(len(pt) for _, pt in active)
+        scratch = self.slots
+        n_act = len(active)
+        depths = np.fromiter((len(pt) for _, pt in active), np.int64, n_act)
+        order = np.lexsort((np.arange(n_act), -depths))
+        slots_arr = np.fromiter((s for s, _ in active), np.int32,
+                                n_act)[order]
+        max_rows = int(depths.max())
+        pages_mat = np.full((n_act, max_rows), batched.SCRATCH_PAGE,
+                            np.int32)
+        for i, oi in enumerate(order):
+            pt = active[oi][1]
+            pages_mat[i, : len(pt)] = pt
 
-        bands: list[tuple[int, list]] = []   # (width rung, [(r, entries)])
-        for r in range(max_rows):
-            ents = [(slot, pt[r]) for slot, pt in active if len(pt) > r]
-            rung = batched.pad_ladder(len(ents), 1)
-            if bands and bands[-1][0] == rung:
-                bands[-1][1].append((r, ents))
-            else:
-                bands.append((rung, [(r, ents)]))
+        # lanes occupying row r (non-increasing), its width rung, and the
+        # maximal contiguous runs of equal rung = the bands
+        rows_idx = np.arange(max_rows)
+        counts = n_act - np.searchsorted(np.sort(depths), rows_idx,
+                                         side="right")
+        rung_lut = np.array([0] + [batched.pad_ladder(c, 1)
+                                   for c in range(1, n_act + 1)], np.int64)
+        rungs = rung_lut[counts]
+        starts = np.concatenate(
+            [[0], np.flatnonzero(np.diff(rungs)) + 1, [max_rows]])
 
         runs = []
         live = swept = 0
-        for w_rung, band in bands:
-            r_cap = batched.pad_ladder(len(band), 1)
+        for r0, r1 in zip(starts[:-1], starts[1:]):
+            r0, r1 = int(r0), int(r1)
+            w_rung = int(rungs[r0])
+            nb = r1 - r0
+            r_cap = batched.pad_ladder(nb, 1)
+            cmax = int(counts[r0])           # counts peak at the band head
+            colmask = np.arange(cmax)[None, :] < counts[r0:r1, None]
             lanes_np = np.full((r_cap, w_rung), scratch, np.int32)
             pages_np = np.full((r_cap, w_rung), batched.SCRATCH_PAGE,
                                np.int32)
             rows_np = np.zeros((r_cap, w_rung), np.int32)
-            for j, (row, ents) in enumerate(band):
-                for c, (slot, page) in enumerate(ents):
-                    lanes_np[j, c] = slot
-                    pages_np[j, c] = page
-                    rows_np[j, c] = row
-                live += len(ents)
-            swept += len(band) * w_rung
+            lanes_np[:nb, :cmax] = np.where(
+                colmask, slots_arr[None, :cmax], scratch)
+            pages_np[:nb, :cmax] = np.where(
+                colmask, pages_mat[:cmax, r0:r1].T, batched.SCRATCH_PAGE)
+            rows_np[:nb, :cmax] = np.where(colmask, rows_idx[r0:r1, None], 0)
+            band_live = int(counts[r0:r1].sum())
+            live += band_live
+            swept += nb * w_rung
             runs.append(_SweepRun(
                 w=w_rung, r_cap=r_cap,
-                n_rows=jnp.asarray(len(band), jnp.int32),
+                n_rows=jnp.asarray(nb, jnp.int32),
                 lanes=jnp.asarray(lanes_np), pages=jnp.asarray(pages_np),
                 rows=jnp.asarray(rows_np),
-                live_slots=sum(len(e) for _, e in band),
-                swept_slots=len(band) * w_rung))
+                live_slots=band_live,
+                swept_slots=nb * w_rung))
 
         # one gather shape for every active lane: the deepest lane's
         # page-count rung (short lanes read scratch zeros past their
@@ -251,12 +368,28 @@ class SolveEngine:
                  objectives: dict[str, SeparableObjective] | None = None,
                  checkpoint_dir: str | None = None, ckpt_every: int = 1,
                  keep: int = 3, max_fuse: int | None = None,
-                 retain_done: int | None = None):
+                 retain_done: int | None = None,
+                 pool_high_water: float | None = 2.0,
+                 journal_every: int | None = None):
         if lanes < 1:
             raise ValueError(f"lanes must be >= 1, got {lanes}")
         if retain_done is not None and retain_done < 0:
             raise ValueError(
                 f"retain_done must be >= 0 or None, got {retain_done}")
+        if pool_high_water is not None and pool_high_water < 1.0:
+            raise ValueError(
+                f"pool_high_water must be >= 1 or None (never shrink), got "
+                f"{pool_high_water}: shrinking below the rung actually "
+                "needed would thrash resize/recompile every admission")
+        if journal_every is not None:
+            if journal_every < 1:
+                raise ValueError(
+                    f"journal_every must be >= 1, got {journal_every}")
+            if checkpoint_dir is None:
+                raise ValueError(
+                    "journal_every needs a checkpoint_dir: the journal is "
+                    "an incremental layer over base snapshots, not a "
+                    "replacement for them")
         self.lanes = lanes
         # cap on passes fused into one stretch of dispatches per step (None
         # = fuse whole generations); 1 restores strict pass-per-step
@@ -265,6 +398,13 @@ class SolveEngine:
         # keep at most this many delivered/cancelled job records; None
         # keeps everything (see _gc_jobs)
         self.retain_done = retain_done
+        # elastic-pool shrink hysteresis (None = retain capacity forever)
+        self.pool_high_water = pool_high_water
+        # base-snapshot cadence in journal mode (None = legacy whole-state
+        # snapshots every ckpt_every steps)
+        self.journal_every = journal_every
+        # suppresses re-journaling while replaying journal records
+        self._replaying = False
         self.dtype = dtype
         self.objectives = dict(objectives or OBJECTIVES)
         self.jobs: dict[str, JobState] = {}
@@ -284,6 +424,15 @@ class SolveEngine:
         self.ckpt_every = max(ckpt_every, 1)
 
     # ------------------------------------------------------------- client API
+    def _journal(self, kind: str, job_id: str, **fields):
+        """Append a client-input record to the checkpoint journal (no-op
+        outside journal mode, and while replaying — a replayed event is
+        already durable in the segments being replayed)."""
+        if self.ckpt is not None and self.journal_every is not None \
+                and not self._replaying:
+            self.ckpt.journal_append([{"t": kind, "job_id": job_id,
+                                       **fields}])
+
     def submit(self, spec: JobSpec) -> str:
         if spec.objective not in self.objectives:
             raise KeyError(
@@ -293,13 +442,32 @@ class SolveEngine:
         self._next += 1
         self.jobs[job_id] = JobState(job_id=job_id, spec=spec)
         self.queue.append(job_id)
+        self._journal(J_SUBMIT, job_id, spec=spec.to_dict())
         return job_id
 
     def poll(self, job_id: str) -> dict:
         return self.jobs[job_id].poll_dict()
 
     def result(self, job_id: str):
-        return self.jobs[job_id].result()
+        rec = self.jobs[job_id]
+        first = rec.status == DONE and not rec.fetched
+        out = rec.result()               # raises unless DONE; marks fetched
+        if first:
+            self._journal(J_FETCHED, job_id)
+            self._gc_jobs()              # delivery can trigger eviction NOW:
+        return out                       # retain_done=0 must not wait for a
+        #                                  step that may never come
+
+    def mark_fetched(self, job_id: str):
+        """Record that a DONE result was delivered out-of-band (a wire
+        front-end confirming its reply went out): snapshots stop carrying
+        x, the journal remembers across kills, and the retention GC may
+        evict the record immediately."""
+        rec = self.jobs.get(job_id)
+        if rec is not None and rec.status == DONE and not rec.fetched:
+            rec.fetched = True
+            self._journal(J_FETCHED, job_id)
+            self._gc_jobs()
 
     def cancel(self, job_id: str) -> bool:
         rec = self.jobs[job_id]
@@ -310,13 +478,18 @@ class SolveEngine:
                 self.queue.remove(job_id)   # stale ids would otherwise show
             except ValueError:              # up as phantom queued work in
                 pass                        # stats until a refill drains them
+            self._journal(J_CANCEL, job_id)
+            self._gc_jobs()              # retention may evict it right away
             return True
         if rec.status == RUNNING:
             pool, slot = self._locate(job_id)
             if pool is not None:
                 self._release_lane(pool, slot)
+                pool.shrink_to_fit()
             rec.status = CANCELLED       # stale device state is benign: the
             rec.done_seq = self._next_done_seq()   # slot leaves every plan
+            self._journal(J_CANCEL, job_id)
+            self._gc_jobs()
             return True
         return False                     # already DONE/CANCELLED
 
@@ -348,8 +521,13 @@ class SolveEngine:
         finished = 0
         for pool in self.pools.values():
             if pool.active == 0:
+                # idle families still release capacity: a pool that
+                # drained while OTHER families had queued work skipped
+                # the harvest-time shrink and would otherwise pin its
+                # peak footprint forever (cheap no-op once shrunk)
+                pool.shrink_to_fit()
                 continue
-            ops = batched.get_pool_ops(pool.obj, pool.key, self.lanes,
+            ops = batched.get_pool_ops(pool.obj, pool.key, pool.slots,
                                        pool.capacity)
             cfg = batched.key_config(pool.key)
             remaining = [cfg.n_passes - self.jobs[j].passes_done
@@ -370,8 +548,16 @@ class SolveEngine:
             finished += self._harvest(pool, ops)
         self.step_count += 1
         self._gc_jobs()
-        if self.ckpt is not None and self.step_count % self.ckpt_every == 0:
-            self._snapshot()
+        if self.ckpt is not None:
+            if self.journal_every is not None:
+                # journal mode: whole-state snapshots become rare BASES;
+                # the journal already holds every client input since the
+                # last one, so a kill between bases re-derives everything
+                # (at the cost of re-running post-base passes)
+                if self.step_count % self.journal_every == 0:
+                    self._snapshot()
+            elif self.step_count % self.ckpt_every == 0:
+                self._snapshot()
         return finished
 
     def run(self, max_steps: int | None = None) -> int:
@@ -422,11 +608,13 @@ class SolveEngine:
             pool = self.pools.get(key)
             if pool is None:
                 pool = LanePool(key=key, obj=self.objectives[spec.objective],
-                                lanes=self.lanes)
+                                lanes=self.lanes,
+                                high_water=self.pool_high_water)
                 self.pools[key] = pool
                 self.family_keys_seen.add(key)
-            slot = pool.free_slot()
-            assert slot is not None      # pool slots == lane budget
+            slot = pool.take_slot()      # slot plan sized to demand; a
+            #                              whole-burst refill grows it in
+            #                              one hop (device resize is staged)
             cfg = batched.key_config(key)
             pool.job_ids[slot] = rec.job_id
             pool.page_table[slot] = pool.alloc_pages(
@@ -438,7 +626,7 @@ class SolveEngine:
         for key, placed in staged.items():
             pool = self.pools[key]
             pool.materialize()
-            ops = batched.get_pool_ops(pool.obj, key, self.lanes,
+            ops = batched.get_pool_ops(pool.obj, key, pool.slots,
                                        pool.capacity)
             self._place(pool, ops, placed)
 
@@ -463,7 +651,7 @@ class SolveEngine:
             # deepest placed lane's page-count rung (short lanes' extra
             # columns are zeroed and land on the scratch page)
             g, v, lanes_np, pages_np = _gather_tables(
-                [(s, pool.page_table[s]) for s, _ in members], self.lanes)
+                [(s, pool.page_table[s]) for s, _ in members], pool.slots)
             seeded = np.zeros((v,), bool)
             seeds = np.zeros((v,), seed_dt)
             n_valid = np.zeros((v,), np.int32)
@@ -501,7 +689,7 @@ class SolveEngine:
         # lanes only — running and idle lanes aren't touched, so turnover
         # costs the finishers' pages instead of O(K * n_pad)
         g, v, lanes_np, pages_np = _gather_tables(
-            [(s, pool.page_table[s]) for s, _ in fins], self.lanes)
+            [(s, pool.page_table[s]) for s, _ in fins], pool.slots)
         f_all, x_all, hist_all = ops.finalize(g, v)(
             pool.state, jnp.asarray(lanes_np), jnp.asarray(pages_np))
         f_np = np.asarray(f_all)
@@ -514,7 +702,10 @@ class SolveEngine:
             rec.status = DONE
             rec.done_seq = self._next_done_seq()
             self._release_lane(pool, slot)       # refilled next step
-        return len(fins)
+        if not self.queue:               # a true drain, not inter-generation
+            pool.shrink_to_fit()         # turnover mid-burst (phase-aligned
+        return len(fins)                 # lanes all finish together; the
+        #                                  next refill would regrow at once)
 
     def _gc_jobs(self):
         """Whole-record job-table GC: keep only the ``retain_done`` most
@@ -530,7 +721,12 @@ class SolveEngine:
         excess = len(evictable) - self.retain_done
         if excess <= 0:
             return
-        evictable.sort(key=lambda r: (r.done_seq is None, r.done_seq))
+        # records missing done_seq (pre-done_seq snapshots) count as oldest:
+        # their true finish order is unknowable, and a (None, None) sort key
+        # would TypeError the comparison
+        evictable.sort(key=lambda r: (r.done_seq is not None,
+                                      r.done_seq if r.done_seq is not None
+                                      else 0))
         for rec in evictable[:excess]:
             del self.jobs[rec.job_id]
 
@@ -563,6 +759,22 @@ class SolveEngine:
                 "swept_rows": swept, "swept_rows_live": live,
                 "swept_waste": 1.0 - live / swept if swept else None}
 
+    def memory_stats(self) -> dict:
+        """Elastic-pool footprint right now: materialized pages / lane
+        slots across families and the device bytes they hold. With the
+        default hysteresis these track live traffic — after a drain they
+        fall back toward empty instead of pinning the historical peak."""
+        pages = slots = nbytes = 0
+        for pool in self.pools.values():
+            if pool.state is None:
+                continue
+            pages += pool.state.pool.shape[0]
+            slots += pool.state.aggs.shape[0] - 1
+            nbytes += pool.device_bytes()
+        return {"pool_pages": pages, "pool_slots": slots,
+                "pool_device_bytes": nbytes,
+                "pool_high_water": self.pool_high_water}
+
     # ------------------------------------------------------------ checkpoint
     def snapshot(self):
         """Cut a checkpoint now (e.g. right after enqueueing a batch, so a
@@ -582,14 +794,22 @@ class SolveEngine:
                 "config": dataclasses.asdict(pool.key[1]),
                 "dtype": pool.key[2],
                 "capacity": pool.capacity,
+                "slots": pool.slots,
                 "job_ids": pool.job_ids,
                 "page_table": pool.page_table,
             })
+        # journal records at or below this seq are reflected in this
+        # snapshot's job table; resume replays only what came after
+        journal_seq = (self.ckpt.journal_last_seq()
+                       if self.journal_every is not None else None)
         aux = {
             "version": 2,
             "lanes": self.lanes,
             "max_fuse": self.max_fuse,
             "retain_done": self.retain_done,
+            "pool_high_water": self.pool_high_water,
+            "journal_every": self.journal_every,
+            "journal_seq": journal_seq,
             "dtype": jnp.dtype(self.dtype).name,
             "step_count": self.step_count,
             "swept_slots": self.swept_slots,
@@ -608,6 +828,9 @@ class SolveEngine:
                                 key=lambda k: (k[0], k[2]))],
         }
         self.ckpt.save(self.step_count, tree, aux=aux)
+        if journal_seq is not None:
+            # this base covers everything up to journal_seq: compaction
+            self.ckpt.journal_truncate(journal_seq)
 
     @classmethod
     def resume(cls, checkpoint_dir: str, *,
@@ -616,17 +839,30 @@ class SolveEngine:
                **fresh_kw) -> "SolveEngine":
         """Rebuild an engine (jobs, queue, and mid-solve pools with their
         page tables) from the newest committed checkpoint in
-        ``checkpoint_dir``. With no checkpoint present, returns a fresh
-        empty engine built with ``fresh_kw`` (lanes, retain_done, ...);
-        when a checkpoint IS found its recorded values win and
-        ``fresh_kw`` is ignored — runtime knobs must round-trip the kill,
-        or the resumed run would diverge from the uninterrupted one."""
+        ``checkpoint_dir``, then replay any journal records newer than
+        that base (journal mode): replayed submissions re-queue and
+        re-run deterministically, so results match the uninterrupted run
+        bit-for-bit. With no checkpoint present, returns a fresh engine
+        built with ``fresh_kw`` (lanes, retain_done, journal_every, ...)
+        — still replaying a journal if one exists (a kill can land before
+        the first base). When a checkpoint IS found its recorded values
+        win and ``fresh_kw`` is ignored — runtime knobs must round-trip
+        the kill, or the resumed run would diverge from the uninterrupted
+        one."""
         probe = CheckpointManager(checkpoint_dir, keep=keep)
         step = probe.latest_step()
         if step is None:
-            return cls(checkpoint_dir=checkpoint_dir, keep=keep,
-                       ckpt_every=ckpt_every, objectives=objectives,
-                       **fresh_kw)
+            eng = cls(checkpoint_dir=checkpoint_dir, keep=keep,
+                      ckpt_every=ckpt_every, objectives=objectives,
+                      **fresh_kw)
+            # a kill can land before the first base snapshot: submissions
+            # are journal-only at that point, so replay them into the
+            # fresh engine instead of silently dropping the queue (only
+            # in journal mode — a legacy resume must not replay stale
+            # segments left behind by an earlier journaled life)
+            if eng.journal_every is not None:
+                eng._replay_journal(0)
+            return eng
         aux = probe.aux(step)
         if aux is None:
             raise RuntimeError(
@@ -642,7 +878,11 @@ class SolveEngine:
                   objectives=objectives, checkpoint_dir=checkpoint_dir,
                   ckpt_every=ckpt_every, keep=keep,
                   max_fuse=aux.get("max_fuse"),
-                  retain_done=aux.get("retain_done"))
+                  retain_done=aux.get("retain_done"),
+                  # pre-elastic v2 snapshots lack the key entirely (class
+                  # default applies); null means shrinking was disabled
+                  pool_high_water=aux.get("pool_high_water", 2.0),
+                  journal_every=aux.get("journal_every"))
         eng.step_count = aux["step_count"]
         eng.swept_slots = aux.get("swept_slots", 0)
         eng.swept_slots_live = aux.get("swept_slots_live", 0)
@@ -656,17 +896,20 @@ class SolveEngine:
         for i, p in enumerate(aux["pools"]):
             obj = eng.objectives[p["objective"]]
             key = (p["objective"], ABOConfig(**p["config"]), p["dtype"])
+            # pre-elastic v2 snapshots sized every pool to the engine budget
+            slots = p.get("slots", aux["lanes"])
             like[f"p{i:03d}"] = batched.zeros_pool_state(
-                obj, key, eng.lanes, p["capacity"])
-            metas.append((key, obj, p))
+                obj, key, slots, p["capacity"])
+            metas.append((key, obj, p, slots))
         tree = probe.restore(step, like) if like else {}
-        for i, (key, obj, p) in enumerate(metas):
+        for i, (key, obj, p, slots) in enumerate(metas):
             page_table = [list(pt) if pt is not None else None
                           for pt in p["page_table"]]
             used = {pg for pt in page_table if pt for pg in pt}
             used.add(batched.SCRATCH_PAGE)
             pool = LanePool(
-                key=key, obj=obj, lanes=eng.lanes, state=tree[f"p{i:03d}"],
+                key=key, obj=obj, lanes=eng.lanes, slots=slots,
+                high_water=eng.pool_high_water, state=tree[f"p{i:03d}"],
                 capacity=p["capacity"], job_ids=list(p["job_ids"]),
                 page_table=page_table,
                 free_pages=sorted(set(range(p["capacity"])) - used))
@@ -675,4 +918,41 @@ class SolveEngine:
         for d in aux.get("family_keys_seen", []):
             eng.family_keys_seen.add(
                 (d["objective"], ABOConfig(**d["config"]), d["dtype"]))
+        if eng.journal_every is not None:
+            eng._replay_journal(aux.get("journal_seq") or 0)
         return eng
+
+    def _replay_journal(self, after_seq: int):
+        """Re-apply client inputs journaled after the restored base: new
+        submissions re-queue (their post-base passes re-run
+        deterministically, so fun/x match the uninterrupted run
+        bit-for-bit), cancels cancel, delivery marks stick. Replay never
+        re-journals — the records being replayed are already durable."""
+        if self.ckpt is None:
+            return                       # (no journal dir -> no entries;
+        self._replaying = True           # legacy-mode resumes no-op here)
+        try:
+            for rec in self.ckpt.journal_entries(after_seq=after_seq):
+                kind, jid = rec.get("t"), rec.get("job_id")
+                if kind == J_SUBMIT:
+                    if jid in self.jobs:
+                        continue         # already in the base (idempotence)
+                    self.jobs[jid] = JobState(
+                        job_id=jid, spec=JobSpec.from_dict(rec["spec"]))
+                    self.queue.append(jid)
+                    self._next = max(self._next,
+                                     int(jid.rsplit("-", 1)[1]) + 1)
+                elif kind == J_CANCEL:
+                    if jid in self.jobs and self.jobs[jid].status in (
+                            QUEUED, RUNNING):
+                        self.cancel(jid)
+                elif kind == J_FETCHED:
+                    r = self.jobs.get(jid)
+                    if r is not None:
+                        # the pre-kill life delivered this result; if the
+                        # job must re-run first, the mark survives so the
+                        # re-derived record is GC-evictable again
+                        r.fetched = True
+        finally:
+            self._replaying = False
+        self._gc_jobs()

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.engine.jobs import DONE, QUEUED, JobSpec
+from repro.engine.jobs import CANCELLED, DONE, QUEUED, JobSpec
 from repro.engine.scheduler import SolveEngine
 
 
@@ -48,20 +48,22 @@ class SolveService:
         if rec.x is not None:
             out["x"] = np.asarray(rec.x, np.float64).tolist()
         if mark_fetched:
-            rec.fetched = True           # snapshots stop carrying this x
+            # through the engine, not a bare attribute write: the delivery
+            # is journaled and the retention GC may evict the record now
+            self.engine.mark_fetched(job_id)
         return out
 
     def mark_fetched(self, job_id: str) -> None:
-        rec = self.engine.jobs.get(job_id)
-        if rec is not None and rec.status == DONE:
-            rec.fetched = True
+        self.engine.mark_fetched(job_id)
 
     def cancel(self, job_id: str) -> dict:
         if job_id not in self.engine.jobs:
             return {"job_id": job_id, "error": "unknown job"}
         ok = self.engine.cancel(job_id)
+        rec = self.engine.jobs.get(job_id)   # retain_done=0 can evict the
+        #                                      record inside cancel itself
         return {"job_id": job_id, "cancelled": ok,
-                "status": self.engine.jobs[job_id].status}
+                "status": rec.status if rec is not None else CANCELLED}
 
     def stats(self) -> dict:
         eng = self.engine
@@ -75,15 +77,18 @@ class SolveService:
         queued = sum(j in eng.jobs and eng.jobs[j].status == QUEUED
                      for j in eng.queue)
         from repro.engine import batched
-        return {"steps": eng.step_count, "lanes": eng.lanes,
-                "active_lanes": eng.active_lanes,
-                "queued": queued, "jobs": by_status,
-                "families": len(eng.pools),
-                "families_created": len(eng.family_keys_seen),
-                "executables": batched.compiled_executable_count(
-                    eng.family_keys_seen),
-                "retain_done": eng.retain_done,
-                **eng.pad_stats()}
+        out = {"steps": eng.step_count, "lanes": eng.lanes,
+               "active_lanes": eng.active_lanes,
+               "queued": queued, "jobs": by_status,
+               "families": len(eng.pools),
+               "families_created": len(eng.family_keys_seen),
+               "executables": batched.compiled_executable_count(
+                   eng.family_keys_seen),
+               "retain_done": eng.retain_done,
+               **eng.pad_stats(), **eng.memory_stats()}
+        if eng.ckpt is not None and eng.journal_every is not None:
+            out["journal"] = eng.ckpt.journal_stats()
+        return out
 
     # ------------------------------------------------------------- execution
     def step(self) -> int:

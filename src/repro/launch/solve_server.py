@@ -22,7 +22,16 @@ padded compute beyond the last block's tail. Per-job results are
 bit-identical to standalone ``abo_minimize`` at any lane/page layout.
 ``--retain-done N`` bounds the job table: once a result has been
 delivered (or a job cancelled), only the N most recent such records are
-kept, so long-lived services don't grow snapshots without bound.
+kept — eviction happens at delivery/cancel time, so ``--retain-done 0``
+means "forget a record the moment its client is done with it". Pool
+device memory is elastic: drained pools shrink past the
+``--pool-high-water`` hysteresis, so a service's footprint tracks live
+traffic, not its historical peak. ``--journal-every M`` switches
+checkpointing to incremental mode: client inputs append to a journal the
+moment they arrive and the whole engine state is snapshotted (and the
+journal compacted) only every M steps — resume replays the journal over
+the newest base and re-runs post-base passes deterministically, so
+results still match an uninterrupted run bit-for-bit.
 
 ``--http PORT`` additionally exposes submit/poll/result/cancel as
 JSON-over-HTTP on localhost (stdlib only, demo-grade — single engine lock,
@@ -169,9 +178,21 @@ def main(argv=None):
     ap.add_argument("--block", type=int, default=4096)
     ap.add_argument("--retain-done", type=int, default=None, metavar="N",
                     help="evict whole job records of delivered/cancelled "
-                         "jobs beyond the N most recent (default: keep "
-                         "all) — bounds snapshot aux growth on a churny "
-                         "service")
+                         "jobs beyond the N most recent (0 = evict at "
+                         "delivery; default: keep all) — bounds snapshot "
+                         "aux growth on a churny service")
+    ap.add_argument("--pool-high-water", type=float, default=2.0,
+                    metavar="X",
+                    help="shrink a drained pool's device arrays once its "
+                         "capacity exceeds X times the ladder rung "
+                         "actually occupied (X >= 1; 0 disables shrinking "
+                         "— capacity is retained forever)")
+    ap.add_argument("--journal-every", type=int, default=None,
+                    metavar="STEPS",
+                    help="incremental checkpointing: append client inputs "
+                         "to a journal as they happen and cut a whole-"
+                         "state base snapshot (compacting the journal) "
+                         "only every STEPS steps; requires --ckpt-dir")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=1)
     ap.add_argument("--resume", action="store_true",
@@ -181,6 +202,23 @@ def main(argv=None):
                          "running a synthetic batch")
     args = ap.parse_args(argv)
 
+    if args.retain_done is not None and args.retain_done < 0:
+        # must fail at the argparse boundary (usage + exit code 2), not as
+        # a ValueError traceback out of the engine constructor
+        ap.error(f"--retain-done must be >= 0, got {args.retain_done}")
+    high_water = args.pool_high_water
+    if high_water == 0:
+        high_water = None                # 0 = never shrink
+    elif high_water < 1:
+        ap.error("--pool-high-water must be >= 1 (or 0 to disable), got "
+                 f"{args.pool_high_water}")
+    if args.journal_every is not None:
+        if args.journal_every < 1:
+            ap.error(f"--journal-every must be >= 1, got "
+                     f"{args.journal_every}")
+        if not args.ckpt_dir:
+            ap.error("--journal-every requires --ckpt-dir (the journal is "
+                     "an incremental layer over base snapshots)")
     if args.resume:
         if not args.ckpt_dir:
             ap.error("--resume requires --ckpt-dir (without it there is no "
@@ -190,11 +228,15 @@ def main(argv=None):
         # can't diverge from the uninterrupted one
         engine = SolveEngine.resume(args.ckpt_dir, ckpt_every=args.ckpt_every,
                                     lanes=args.lanes,
-                                    retain_done=args.retain_done)
+                                    retain_done=args.retain_done,
+                                    pool_high_water=high_water,
+                                    journal_every=args.journal_every)
     else:
         engine = SolveEngine(lanes=args.lanes, checkpoint_dir=args.ckpt_dir,
                              ckpt_every=args.ckpt_every,
-                             retain_done=args.retain_done)
+                             retain_done=args.retain_done,
+                             pool_high_water=high_water,
+                             journal_every=args.journal_every)
     service = SolveService(engine)
 
     if args.http is not None:
@@ -218,6 +260,12 @@ def main(argv=None):
     t0 = time.time()
     done = engine.run()
     dt = max(time.time() - t0, 1e-9)
+    if args.ckpt_dir:
+        # a final base: in journal mode the last generation's results may
+        # postdate the last in-run base, and a batch CLI never "fetches"
+        # them — without this, a --resume after clean completion would
+        # re-derive the tail instead of finding it done
+        engine.snapshot()
     # FE from the specs of jobs THIS run finished (on --resume they may
     # differ from this invocation's CLI defaults)
     fe = sum(r.spec.config.n_passes * r.spec.config.samples_per_pass
@@ -228,7 +276,9 @@ def main(argv=None):
              "jobs_per_s": done / dt, "fe_per_s": fe / dt,
              "families": len(engine.pools),
              "families_created": len(engine.family_keys_seen),
-             "swept_waste": waste}
+             "swept_waste": waste, **engine.memory_stats()}
+    if engine.ckpt is not None and engine.journal_every is not None:
+        stats["journal"] = engine.ckpt.journal_stats()
     print(f"[solve_server] {done} jobs in {dt:.2f}s over "
           f"{engine.step_count} steps "
           f"({stats['families_created']} executable families, "

@@ -59,40 +59,59 @@ class SeparableObjective:
     combine_relaxed: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray] | None = None
 
     # ---- full evaluations ------------------------------------------------
+    # Fixed reduction tile: every aggregate sum is computed as a sequential
+    # accumulation of (REDUCE_TILE, n_aggs) partial sums over tiles anchored
+    # at multiples of REDUCE_TILE, the last tile zero-padded to full width.
+    # Because every tile reduce has the same compiled shape and tiles are
+    # combined in index order, the floating-point result depends only on the
+    # masked content — NOT on the physical vector length, the number of
+    # trailing zeros, or whether the call is vmapped. XLA:CPU's reduction
+    # grouping is length-dependent (appending even one zero to a ~3e5
+    # vector changes low bits), so this invariance cannot be left to the
+    # backend; the engine's bit-identity contract (gathered lane views at
+    # ladder-padded widths == the dense solver's padded vector) rests on it.
+    REDUCE_TILE = 4096
+
     def aggregates(
         self,
         x: jnp.ndarray,
         n_valid: int | None = None,
         *,
-        chunk_size: int = 1 << 20,
+        chunk_size: int | None = None,
         agg_dtype=None,
     ) -> jnp.ndarray:
-        """Masked, chunked Σ_i terms(i, x_i). Memory O(chunk_size)."""
+        """Masked Σ_i terms(i, x_i), streamed tile-by-tile.
+
+        Memory is O(REDUCE_TILE) beyond the input (dynamic_slice windows —
+        never a padded O(N) copy, which the paper's zero-RAM claim
+        forbids). ``chunk_size`` is accepted for backward compatibility and
+        ignored: the reduction tile must be one global constant or results
+        would depend on the caller's chunking (see REDUCE_TILE)."""
+        del chunk_size
         agg_dtype = agg_dtype or _default_agg_dtype()
+        tile = self.REDUCE_TILE
         n = x.shape[0]
         n_valid = n if n_valid is None else n_valid
-        if n <= chunk_size:
-            idx = jnp.arange(n)
-            t = self.terms(idx, x).astype(agg_dtype)
+
+        def tile_sum(xc, start):
+            idx = start + jnp.arange(tile)
+            t = self.terms(idx, xc).astype(agg_dtype)
             mask = (idx < n_valid)[:, None].astype(agg_dtype)
             return (t * mask).sum(axis=0)
 
-        # Copy-free streaming: dynamic_slice windows over the flat vector
-        # (never pad/reshape — that would materialize a second O(N) buffer,
-        # which is exactly what the paper's zero-RAM claim forbids). The last
-        # window is clamped back and double-covered elements are masked out.
-        n_chunks = -(-n // chunk_size)
+        n_full, tail = divmod(n, tile)
+        acc = jnp.zeros((self.n_aggs,), agg_dtype)
+        if n_full:
+            def body(acc, cid):
+                start = cid * tile
+                xc = jax.lax.dynamic_slice(x, (start,), (tile,))
+                return acc + tile_sum(xc, start), None
 
-        def body(acc, cid):
-            start = jnp.minimum(cid * chunk_size, n - chunk_size)
-            xc = jax.lax.dynamic_slice(x, (start,), (chunk_size,))
-            idx = start + jnp.arange(chunk_size)
-            t = self.terms(idx, xc).astype(agg_dtype)
-            mask = ((idx >= cid * chunk_size) & (idx < n_valid))
-            return acc + (t * mask[:, None].astype(agg_dtype)).sum(axis=0), None
-
-        init = jnp.zeros((self.n_aggs,), agg_dtype)
-        acc, _ = jax.lax.scan(body, init, jnp.arange(n_chunks))
+            acc, _ = jax.lax.scan(body, acc, jnp.arange(n_full))
+        if tail:
+            xt = jnp.zeros((tile,), x.dtype).at[:tail].set(
+                jax.lax.dynamic_slice(x, (n_full * tile,), (tail,)))
+            acc = acc + tile_sum(xt, n_full * tile)
         return acc
 
     def value(self, x: jnp.ndarray, n_valid: int | None = None, **kw) -> jnp.ndarray:

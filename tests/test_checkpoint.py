@@ -84,6 +84,56 @@ def test_train_resume_determinism(tmp_path):
     assert abs(loss_full - loss_resumed) < 1e-4, (loss_full, loss_resumed)
 
 
+# ---- append-only journal ---------------------------------------------------
+def test_journal_append_roll_and_truncate(tmp_path):
+    mgr = CheckpointManager(tmp_path, journal_segment_records=3)
+    for i in range(8):
+        assert mgr.journal_append([{"t": "submit", "job_id": f"j{i}"}]) \
+            == i + 1
+    assert mgr.journal_last_seq() == 8
+    assert len(list((tmp_path / "journal").glob("seg_*.jsonl"))) == 3
+    got = mgr.journal_entries()
+    assert [r["seq"] for r in got] == list(range(1, 9))
+    assert [r["job_id"] for r in got] == [f"j{i}" for i in range(8)]
+    assert mgr.journal_entries(after_seq=6) == got[6:]
+
+    mgr.journal_truncate(6)              # compaction: drop covered segments
+    assert [r["seq"] for r in mgr.journal_entries()] == [7, 8]
+    assert len(list((tmp_path / "journal").glob("seg_*.jsonl"))) == 1
+    st = mgr.journal_stats()
+    assert st["records"] == 2 and st["segments"] == 1 and st["last_seq"] == 8
+
+    # seq stays monotone across truncate-everything + process restart
+    mgr.journal_truncate(8)
+    assert mgr.journal_entries() == []
+    fresh = CheckpointManager(tmp_path)
+    assert fresh.journal_last_seq() == 8
+    assert fresh.journal_append([{"t": "submit", "job_id": "j8"}]) == 9
+
+
+def test_journal_tolerates_and_repairs_torn_tail(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.journal_append([{"a": 1}, {"a": 2}])
+    (seg,) = (tmp_path / "journal").glob("seg_*.jsonl")
+    with seg.open("a") as fh:
+        fh.write('{"seq": 3, "a"')       # kill mid-append: torn last line
+    fresh = CheckpointManager(tmp_path)
+    assert [r["seq"] for r in fresh.journal_entries()] == [1, 2]
+    # appending after the tear must not weld onto the fragment
+    assert fresh.journal_append([{"a": 3}]) == 3
+    assert [r["seq"] for r in fresh.journal_entries()] == [1, 2, 3]
+
+
+def test_journal_corruption_in_old_segment_raises(tmp_path):
+    mgr = CheckpointManager(tmp_path, journal_segment_records=2)
+    mgr.journal_append([{"a": i} for i in range(4)])    # 2 segments
+    first = sorted((tmp_path / "journal").glob("seg_*.jsonl"))[0]
+    first.write_text('{"seq": 1, "a": 0}\nnot json\n')
+    fresh = CheckpointManager(tmp_path)
+    with pytest.raises(RuntimeError):    # silent data loss is worse
+        fresh.journal_entries()
+
+
 def test_seed_redispatch_straggler_policy(rng):
     """ABO-ZO candidates are seed-regenerable: a backup worker recomputes a
     straggler's perturbation bit-for-bit from (key, step) alone."""

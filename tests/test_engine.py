@@ -301,6 +301,64 @@ def test_retain_done_bounds_snapshot_aux(tmp_path):
     assert sizes[-1] <= sizes[1] * 1.01
 
 
+def test_retain_done_zero_evicts_at_delivery_and_cancel():
+    """retain_done=0 means "forget a record the moment its client is done
+    with it": eviction fires inside result()/cancel() themselves — a
+    drained engine never steps again, so waiting for the next step would
+    keep the records forever."""
+    eng = SolveEngine(lanes=2, retain_done=0)
+    ids = eng.submit_many(_mixed_specs(3, seed0=900))
+    assert eng.cancel(ids[2])            # cancelled while queued
+    assert ids[2] not in eng.jobs        # gone immediately, no step needed
+    eng.run()
+    assert ids[0] in eng.jobs            # undelivered results are safe
+    r = eng.result(ids[0])
+    assert r.fun is not None
+    assert ids[0] not in eng.jobs        # evicted the moment it delivered
+    svc = SolveService(eng)
+    out = svc.result(ids[1])             # the service fetch path too
+    assert out["status"] == DONE
+    assert ids[1] not in eng.jobs
+    assert svc.poll(ids[0])["error"] == "unknown job"
+
+
+def test_retain_done_zero_cancel_via_service():
+    # the service reply must survive the record being evicted inside the
+    # cancel call itself
+    svc = SolveService(lanes=1, retain_done=0)
+    jid = svc.submit({"objective": "sphere", "n": 8,
+                      "config": {"samples_per_pass": 12, "n_passes": 2}}
+                     )["job_id"]
+    out = svc.cancel(jid)
+    assert out["cancelled"] and out["status"] == CANCELLED
+    assert jid not in svc.engine.jobs
+
+
+def test_retain_done_tolerates_legacy_records_without_done_seq():
+    """Records restored from pre-done_seq snapshots carry done_seq=None;
+    two of them in the evictable set used to TypeError the retention
+    sort. They count as oldest (unknowable finish order) and evict
+    first."""
+    eng = SolveEngine(lanes=1, retain_done=0)
+    from repro.engine.jobs import JobState
+    for i in (1, 2):
+        rec = JobState(job_id=f"job-x{i}", spec=JobSpec("sphere", 8, CFG),
+                       status=CANCELLED)
+        eng.jobs[rec.job_id] = rec
+    eng._gc_jobs()
+    assert not eng.jobs
+
+
+def test_solve_server_rejects_negative_retain_done():
+    from repro.launch import solve_server
+    with pytest.raises(SystemExit):     # argparse error, not a traceback
+        solve_server.main(["--retain-done", "-1"])
+    with pytest.raises(SystemExit):     # same boundary for the new knobs
+        solve_server.main(["--pool-high-water", "0.5"])
+    with pytest.raises(SystemExit):     # journal needs a checkpoint dir
+        solve_server.main(["--journal-every", "4"])
+
+
 def test_solve_server_resume_requires_ckpt_dir():
     from repro.launch import solve_server
     with pytest.raises(SystemExit):

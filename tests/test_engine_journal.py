@@ -1,0 +1,206 @@
+"""Append-only checkpoint journal: client inputs (submit/cancel/fetched)
+append the moment they happen, whole-state snapshots become rare BASES cut
+every ``journal_every`` steps (each one compacting the journal), and
+resume = newest base + journal replay + deterministic re-run of post-base
+passes — bit-identical to an uninterrupted run.
+
+Also hosts the gathered-row bit-drift regression: a job whose gathered row
+view crosses the old 1 MiB aggregate-chunk boundary (n ≳ 1e6) must stay
+bit-identical to standalone ``abo_minimize`` — the fixed-tile reduction
+(objectives.base.SeparableObjective.REDUCE_TILE) makes whole-lane
+reductions length-invariant, where the old width-keyed chunking diverged.
+"""
+import numpy as np
+import pytest
+
+from repro.core import ABOConfig, abo_minimize
+from repro.engine import (CANCELLED, DONE, QUEUED, JobSpec, SolveEngine,
+                          SolveService)
+from repro.objectives import OBJECTIVES
+
+CFG = ABOConfig(samples_per_pass=12, n_passes=3)
+SHAPES = [("griewank", 64), ("sphere", 96), ("rastrigin", 80)]
+
+
+def _mixed_specs(count, seed0=0):
+    return [JobSpec(*SHAPES[i % len(SHAPES)], CFG, seed=seed0 + i)
+            for i in range(count)]
+
+
+def test_journal_records_inputs_and_bases_compact(tmp_path):
+    eng = SolveEngine(lanes=2, checkpoint_dir=tmp_path, journal_every=100,
+                      max_fuse=1)
+    ids = eng.submit_many(_mixed_specs(4))
+    st = eng.ckpt.journal_stats()
+    assert st["records"] == 4 and st["last_seq"] == 4
+    eng.cancel(ids[3])
+    assert eng.ckpt.journal_stats()["records"] == 5
+    eng.run()
+    # far from a journal_every boundary: no base yet, inputs live in the
+    # journal alone — per-step checkpoint I/O was O(events), not O(state)
+    assert eng.ckpt.latest_step() is None
+    eng.result(ids[0])
+    assert eng.ckpt.journal_stats()["records"] == 6
+    eng.snapshot()                       # manual base -> compaction
+    assert eng.ckpt.journal_stats()["records"] == 0
+    assert eng.ckpt.journal_last_seq() == 6      # seq floor survives
+    aux = eng.ckpt.aux(eng.ckpt.latest_step())
+    assert aux["journal_seq"] == 6 and aux["journal_every"] == 100
+    s = SolveService(eng).stats()
+    assert s["journal"]["records"] == 0 and s["journal"]["last_seq"] == 6
+
+
+def test_resume_replays_journal_with_no_base_snapshot(tmp_path):
+    """A kill before the first base: submissions/cancels exist ONLY in
+    the journal and must be replayed into a fresh engine."""
+    specs = _mixed_specs(3, seed0=20)
+    eng = SolveEngine(lanes=2, checkpoint_dir=tmp_path, journal_every=50)
+    ids = eng.submit_many(specs)
+    eng.cancel(ids[1])
+    del eng                              # killed: no snapshot was ever cut
+
+    res = SolveEngine.resume(tmp_path, lanes=2, journal_every=50)
+    assert [res.jobs[j].status for j in ids] == [QUEUED, CANCELLED, QUEUED]
+    res.run()
+    for spec, jid in ((specs[0], ids[0]), (specs[2], ids[2])):
+        solo = abo_minimize(OBJECTIVES[spec.objective], spec.n,
+                            config=spec.config, seed=spec.seed)
+        assert res.result(jid).fun == solo.fun
+        np.testing.assert_array_equal(res.result(jid).x, solo.x)
+    # fresh ids continue after the replayed ones — no collisions
+    assert res.submit(specs[0]) == "job-000003"
+
+
+def test_resume_replays_cancel_and_fetched_marks(tmp_path):
+    specs = _mixed_specs(3, seed0=60)
+    eng = SolveEngine(lanes=1, checkpoint_dir=tmp_path, journal_every=1,
+                      max_fuse=1)
+    ids = eng.submit_many(specs)
+    eng.step()                           # base at step 1; job 0 running
+    eng.cancel(ids[1])                   # post-base: journal-only
+    eng.run()
+    eng.result(ids[0])                   # delivered after the last base
+    del eng
+
+    res = SolveEngine.resume(tmp_path)
+    assert res.jobs[ids[1]].status == CANCELLED    # replayed cancel
+    assert res.jobs[ids[0]].fetched                # replayed delivery mark
+    res.run()
+    assert res.jobs[ids[2]].status == DONE
+
+
+def test_journal_resume_converges_after_retention_eviction(tmp_path):
+    """retain_done=0 + journal: the delivery record replays onto the
+    restored base and re-evicts, so a resumed service converges to the
+    same bounded table as the uninterrupted one."""
+    eng = SolveEngine(lanes=1, checkpoint_dir=tmp_path, journal_every=1,
+                      retain_done=0)
+    jid = eng.submit(JobSpec("sphere", 64, CFG, seed=5))
+    eng.run()
+    eng.result(jid)                      # delivered -> evicted + journaled
+    assert jid not in eng.jobs
+    del eng
+
+    res = SolveEngine.resume(tmp_path)
+    assert jid not in res.jobs           # replay re-applies the eviction
+    assert not res.pending()
+
+
+def test_journal_resume_bit_identical_including_chunk_boundary(tmp_path):
+    """The elastic-memory acceptance bar: kill a journaled engine after a
+    base with mid-flight lanes plus journal-only submissions, resume, and
+    every job's fun/x must equal the uninterrupted run BIT-FOR-BIT —
+    including an n whose gathered row view (384 pages) crosses the old
+    1 MiB reduction-chunk boundary while its exact pad (294 pages) chunks
+    differently, the exact regression that used to drift."""
+    big = ABOConfig(samples_per_pass=7, n_passes=2)
+    # 1_200_200: exact pad (294 pages) and gathered rung (384 pages) both
+    # cross 1 MiB with different old-style chunk splits; 1_000_000: exact
+    # pad (245 pages) is sub-boundary while the rung gather (256 pages)
+    # lands exactly on it — the combination the old width-keyed chunking
+    # provably drifted on
+    specs = [JobSpec("sphere", 1_200_200, big, seed=0),
+             JobSpec("sphere", 5_000, big, seed=1),
+             JobSpec("sphere", 1_000_000, big, seed=2),
+             JobSpec("sphere", 12_000, big, seed=3)]
+
+    ref = SolveEngine(lanes=2)
+    ref_ids = ref.submit_many(specs)
+    ref.run()
+
+    eng = SolveEngine(lanes=2, checkpoint_dir=tmp_path, journal_every=1,
+                      max_fuse=1)
+    ids = eng.submit_many(specs[:2])
+    eng.step()                           # base at step 1: lanes mid-flight
+    ids += eng.submit_many(specs[2:])    # post-base: journal-only
+    del eng                              # kill before they ever ran
+
+    res = SolveEngine.resume(tmp_path)
+    assert res.active_lanes == 2         # mid-flight lanes restored
+    assert sum(res.jobs[j].status == QUEUED for j in ids) == 2
+    res.run()
+    for spec, a, b in zip(specs, ref_ids, ids):
+        assert ref.result(a).fun == res.result(b).fun, spec
+        np.testing.assert_array_equal(ref.result(a).x, res.result(b).x)
+    # the boundary-crossing lane also bit-matches the standalone solver
+    solo = abo_minimize(OBJECTIVES["sphere"], specs[0].n, config=big,
+                        seed=0)
+    assert res.result(ids[0]).fun == solo.fun
+    np.testing.assert_array_equal(res.result(ids[0]).x, solo.x)
+
+
+def test_legacy_resume_ignores_stale_journal(tmp_path):
+    """A checkpoint dir can carry journal segments from an earlier
+    journaled life; a later legacy-mode (journal_every=None) engine in
+    the same dir must not replay those stale records on resume."""
+    eng = SolveEngine(lanes=1, checkpoint_dir=tmp_path, journal_every=50)
+    eng.submit_many([JobSpec("sphere", 64, CFG, seed=1),
+                     JobSpec("sphere", 64, CFG, seed=2)])  # journal-only
+    del eng                              # killed before any base
+
+    leg = SolveEngine(lanes=1, checkpoint_dir=tmp_path)     # legacy mode
+    jid = leg.submit(JobSpec("sphere", 96, CFG, seed=3))
+    leg.run()
+    del leg
+
+    res = SolveEngine.resume(tmp_path)
+    assert res.journal_every is None
+    # replay would have resurrected the journaled pair (job ids past the
+    # legacy engine's single submission); legacy resume must not
+    assert len(res.jobs) == 1
+    assert res.jobs[jid].status == DONE and not res.pending()
+
+
+def test_engine_handles_scalar_lam_schedules():
+    """coupling_schedule='none' and n_passes=1 hit pass_schedule's
+    constant-lam branch; the hoisted per-row schedule must still be
+    vmappable (a bare rank-0 lam crashed the row sweep) and bit-match
+    the standalone solver."""
+    for cfg in (ABOConfig(samples_per_pass=8, n_passes=2, block_size=64,
+                          coupling_schedule="none"),
+                ABOConfig(samples_per_pass=8, n_passes=1, block_size=64)):
+        spec = JobSpec("sphere", 200, cfg, seed=9)
+        eng = SolveEngine(lanes=1)
+        jid = eng.submit(spec)
+        eng.run()
+        solo = abo_minimize(OBJECTIVES["sphere"], 200, config=cfg, seed=9)
+        assert eng.result(jid).fun == solo.fun
+        np.testing.assert_array_equal(eng.result(jid).x, solo.x)
+
+
+def test_mixed_row_view_rungs_bit_identical_at_boundary():
+    """Gathered-row drift regression in its purest form: a small lane
+    syncing in the same group as a deep lane gathers at the deep lane's
+    rung (over 1 MiB wide), yet must reproduce its dedicated-pool bits —
+    the reduction cannot depend on the gathered width."""
+    big = ABOConfig(samples_per_pass=7, n_passes=2)
+    specs = [JobSpec("sphere", 1_000_000, big, seed=10),
+             JobSpec("sphere", 3_000, big, seed=11)]
+    eng = SolveEngine(lanes=2)
+    ids = eng.submit_many(specs)
+    eng.run()
+    for spec, jid in zip(specs, ids):
+        solo = abo_minimize(OBJECTIVES["sphere"], spec.n, config=spec.config,
+                            seed=spec.seed)
+        assert eng.result(jid).fun == solo.fun
+        np.testing.assert_array_equal(eng.result(jid).x, solo.x)

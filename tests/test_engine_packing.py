@@ -131,7 +131,9 @@ def test_row_width_ladder_and_plan_bands():
 
 
 def test_pool_capacity_grows_on_ladder_and_pages_recycle():
-    eng = SolveEngine(lanes=2, max_fuse=1)
+    # high_water=None pins capacity (no drain-side shrink): this test is
+    # about growth + page recycling; elastic shrink has its own tests below
+    eng = SolveEngine(lanes=2, max_fuse=1, pool_high_water=None)
     ja = eng.submit(JobSpec(OBJ, 300, CFG, seed=0))    # 5 pages
     eng.step()
     (pool,) = eng.pools.values()
@@ -183,6 +185,133 @@ def test_kill_resume_paged_pools(tmp_path):
     assert res.family_keys_seen == seen     # compiled-family history survives
     assert {k: [list(pt) if pt else None for pt in p.page_table]
             for k, p in res.pools.items()} == tables
+    res.run()
+    for a, b in zip(ref_ids, ids):
+        assert ref.result(a).fun == res.result(b).fun
+        np.testing.assert_array_equal(ref.result(a).x, res.result(b).x)
+
+
+# ---- elastic pools ---------------------------------------------------------
+def test_pool_shrinks_after_drain_and_regrows_without_recompile():
+    """Satellite acceptance: after draining a K=32 mixed-n burst the
+    pool's device footprint falls below the high-water hysteresis bound
+    (instead of pinning the burst peak forever), and resubmitting the same
+    burst regrows through the SAME compiled shapes — zero new
+    executables."""
+    from repro.engine import batched
+
+    def burst(seed0):
+        return [JobSpec(OBJ, MIXED_NS[i % len(MIXED_NS)], CFG,
+                        seed=seed0 + i) for i in range(32)]
+
+    eng = SolveEngine(lanes=8)           # default pool_high_water=2.0
+    ids = eng.submit_many(burst(0))
+    peak = 0
+    while eng.pending():
+        eng.step()
+        peak = max(peak, eng.memory_stats()["pool_device_bytes"])
+    (pool,) = eng.pools.values()
+    settled = eng.memory_stats()["pool_device_bytes"]
+    assert peak > 0 and settled < peak
+    # fully drained: both dimensions collapse to the minimum rung, which
+    # trivially satisfies capacity <= high_water * needed-rung
+    assert pool.capacity == 1 and pool.slots == 1
+    assert pool.state.pool.shape[0] == 1
+    assert pool.state.aggs.shape[0] == 2           # 1 slot + scratch
+    assert settled <= peak * pool.high_water / 8   # far below hysteresis
+    # results from the elastic run still match a dedicated solve
+    r = eng.result(ids[0])
+    assert r.fun == _dedicated(JobSpec(OBJ, MIXED_NS[0], CFG, seed=0)).fun
+
+    execs = batched.compiled_executable_count(eng.family_keys_seen)
+    eng.submit_many(burst(0))            # identical burst -> identical
+    eng.run()                            # growth trajectory and signatures
+    assert batched.compiled_executable_count(eng.family_keys_seen) == execs
+
+
+def test_idle_family_pool_shrinks_while_other_families_work():
+    """A family that drains while OTHER families still have queued work
+    must not pin its peak footprint: the step loop sweeps idle pools
+    (harvest-time shrink is skipped when the queue is non-empty)."""
+    eng = SolveEngine(lanes=1, max_fuse=1)
+    eng.submit(JobSpec(OBJ, 440, CFG, seed=0))         # rastrigin family
+    eng.submit(JobSpec("sphere", 440, CFG, seed=1))    # separate family
+    eng.run()
+    assert len(eng.pools) == 2
+    for pool in eng.pools.values():
+        assert pool.capacity == 1 and pool.slots == 1
+        assert pool.state.pool.shape[0] == 1
+
+
+def test_slot_budget_tracks_traffic_not_engine_budget():
+    """A family that only ever sees 2 concurrent jobs sizes its per-slot
+    arrays for 2, not the engine's 8-lane budget."""
+    eng = SolveEngine(lanes=8, max_fuse=1)
+    eng.submit_many(_specs()[:2])
+    eng.step()
+    (pool,) = eng.pools.values()
+    assert pool.slots == 2
+    assert pool.state.aggs.shape[0] == 3           # 2 slots + scratch
+    eng.run()
+    for jid, spec in zip(list(eng.jobs), _specs()[:2]):
+        assert eng.result(jid).fun == _dedicated(spec).fun
+
+
+def test_resume_with_recycled_free_pages_rebuilds_page_tables(tmp_path):
+    """Bugfix regression: a v2 snapshot cut while the pool holds free
+    (recycled) pages must round-trip the page tables AND the free list
+    exactly, so the resumed engine's future allocations land on the same
+    pages as the uninterrupted engine's."""
+    eng = SolveEngine(lanes=2, checkpoint_dir=tmp_path, ckpt_every=1,
+                      max_fuse=1)
+    eng.submit(JobSpec(OBJ, 460, CFG, seed=0))     # 8 pages
+    eng.submit(JobSpec(OBJ, 300, CFG, seed=1))     # 5 pages
+    jc = eng.submit(JobSpec(OBJ, 300, CFG, seed=2))
+    for _ in range(4):       # first two finish at step 3; step 4 admits
+        eng.step()           # the third onto recycled pages
+    (pool,) = eng.pools.values()
+    assert pool.free_pages                         # recycled, mid-flight
+    free = list(pool.free_pages)
+    tables = [list(pt) if pt else None for pt in pool.page_table]
+
+    res = SolveEngine.resume(tmp_path)
+    (rp,) = res.pools.values()
+    assert rp.free_pages == free
+    assert [list(pt) if pt else None for pt in rp.page_table] == tables
+    assert (rp.capacity, rp.slots) == (pool.capacity, pool.slots)
+    res.run()
+    eng.run()
+    assert res.result(jc).fun == eng.result(jc).fun
+    np.testing.assert_array_equal(res.result(jc).x, eng.result(jc).x)
+
+
+def test_resume_accepts_pre_elastic_v2_aux(tmp_path):
+    """PR-3 era v2 snapshots predate the slots / pool_high_water /
+    journal keys; resume must default them (slots = engine lanes) and
+    still reproduce the run."""
+    import json
+
+    specs = _specs(seed0=70)[:3]
+    eng = SolveEngine(lanes=2, checkpoint_dir=tmp_path, ckpt_every=1,
+                      max_fuse=1)
+    ids = eng.submit_many(specs)
+    for _ in range(2):
+        eng.step()
+    mf = tmp_path / f"step_{eng.ckpt.latest_step():012d}" / "manifest.json"
+    m = json.loads(mf.read_text())
+    for key in ("pool_high_water", "journal_every", "journal_seq"):
+        m["aux"].pop(key)
+    for p in m["aux"]["pools"]:
+        p.pop("slots")           # pre-elastic pools were lanes-sized
+    mf.write_text(json.dumps(m))
+    del eng
+
+    ref = SolveEngine(lanes=2)
+    ref_ids = ref.submit_many(specs)
+    ref.run()
+    res = SolveEngine.resume(tmp_path)
+    (rp,) = res.pools.values()
+    assert rp.slots == 2                           # defaulted to lanes
     res.run()
     for a, b in zip(ref_ids, ids):
         assert ref.result(a).fun == res.result(b).fun

@@ -48,11 +48,51 @@ def test_probe_equals_full_recompute(obj, rng):
 
 
 def test_streaming_aggregates_match_direct(rng):
-    x = jnp.asarray(rng.uniform(-600, 600, 10_000).astype(np.float32))
-    direct = GRIEWANK.aggregates(x)
-    chunked = GRIEWANK.aggregates(x, chunk_size=999)   # non-dividing chunk
-    np.testing.assert_allclose(np.asarray(direct), np.asarray(chunked),
-                               rtol=1e-5)
+    # n chosen to NOT divide REDUCE_TILE (4096): exercises the scan-over-
+    # full-tiles path plus the zero-padded tail tile against a plain
+    # numpy double-precision sum
+    n = 10_000
+    x_np = rng.uniform(-600, 600, n).astype(np.float32)
+    tiled = GRIEWANK.aggregates(jnp.asarray(x_np))
+    direct = np.stack([t for t in np.asarray(
+        GRIEWANK.terms(jnp.arange(n), jnp.asarray(x_np)),
+        np.float64)]).sum(axis=0)
+    np.testing.assert_allclose(np.asarray(tiled), direct, rtol=1e-5)
+    # chunk_size is accepted for backward compatibility and ignored (the
+    # reduction tile is a global constant — bit-identity contract)
+    legacy = GRIEWANK.aggregates(jnp.asarray(x_np), chunk_size=999)
+    np.testing.assert_array_equal(np.asarray(tiled), np.asarray(legacy))
+
+
+def test_aggregates_bit_invariant_to_trailing_padding(rng):
+    """The engine reduces gathered lane views at ladder-padded widths and
+    must get the dense solver's exact bits: aggregates may not depend on
+    the physical length, trailing zeros, or vmap batching — including
+    across the old 1 MiB chunk boundary, where the clamped-window
+    chunking re-grouped the sum and drifted (fixed by the REDUCE_TILE
+    fixed-origin tiles)."""
+    import jax
+
+    n = 1_003_520                        # 245 pages of 4096, just under 1 MiB
+    for obj in (SPHERE, GRIEWANK):
+        lo, hi = obj.lower, obj.upper
+        x = jnp.asarray(rng.uniform(lo, hi, n).astype(np.float32))
+        f = jax.jit(lambda x, nv: obj.aggregates(x, nv))
+        base = np.asarray(f(x, n)).view(np.uint32)
+        fv = jax.jit(lambda xs, nvs: jax.vmap(
+            lambda r, q: obj.aggregates(r, q))(xs, nvs))
+        # gathered-view widths: the boundary rung (256 pages) and a
+        # strictly-crossing rung (384 pages)
+        for width in (1_048_576, 1_572_864):
+            xp = jnp.concatenate([x, jnp.zeros((width - n,), jnp.float32)])
+            got = np.asarray(f(xp, n)).view(np.uint32)
+            np.testing.assert_array_equal(got, base, err_msg=f"{obj.name} "
+                                          f"width={width}")
+            got_v = np.asarray(fv(jnp.stack([xp, xp]),
+                                  jnp.asarray([n, n]))).view(np.uint32)
+            np.testing.assert_array_equal(got_v[0], base,
+                                          err_msg=f"{obj.name} vmap "
+                                          f"width={width}")
 
 
 def test_aggregates_masking(rng):
