@@ -127,10 +127,15 @@ class CheckpointManager:
         path = self.dir / f"step_{step:012d}"
         return json.loads((path / "manifest.json").read_text()).get("aux")
 
-    def restore(self, step: int, like: Any, shardings: Any = None) -> Any:
-        """Load into the structure of ``like`` (shapes validated); if
-        ``shardings`` (a matching pytree of NamedSharding) is given, leaves
-        are device_put with it — this is the elastic-resharding path."""
+    def restore_host(self, step: int, like: Any) -> Any:
+        """Load into the structure of ``like`` (shapes/dtypes validated)
+        as HOST numpy arrays — no device placement. This is the
+        reshard-on-load path: callers that must re-partition state for a
+        different device topology (e.g. the solve engine's sharded page
+        pools resuming on a new device count) remap rows host-side first
+        and device_put with their new shardings themselves. ``like`` may
+        be ``ShapeDtypeStruct`` leaves (``jax.eval_shape``) — nothing is
+        allocated on its account."""
         path = self.dir / f"step_{step:012d}"
         manifest = json.loads((path / "manifest.json").read_text())
         _, treedef = _flatten(like)
@@ -141,14 +146,23 @@ class CheckpointManager:
         for got, want in zip(leaves, like_leaves):
             assert tuple(got.shape) == tuple(want.shape), \
                 (got.shape, want.shape)
+        leaves = [l.astype(w.dtype) for l, w in zip(leaves, like_leaves)]
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def restore(self, step: int, like: Any, shardings: Any = None) -> Any:
+        """Load into the structure of ``like`` (shapes validated); if
+        ``shardings`` (a matching pytree of NamedSharding) is given, leaves
+        are device_put with it — this is the elastic-resharding path."""
+        host = self.restore_host(step, like)
+        _, treedef = _flatten(like)
+        leaves = jax.tree_util.tree_leaves(host)
         if shardings is not None:
             sh_leaves = jax.tree_util.tree_leaves(
                 shardings, is_leaf=lambda x: hasattr(x, "spec"))
-            leaves = [jax.device_put(l.astype(w.dtype), s)
-                      for l, w, s in zip(leaves, like_leaves, sh_leaves)]
+            leaves = [jax.device_put(l, s)
+                      for l, s in zip(leaves, sh_leaves)]
         else:
-            leaves = [jax.numpy.asarray(l.astype(w.dtype))
-                      for l, w in zip(leaves, like_leaves)]
+            leaves = [jax.numpy.asarray(l) for l in leaves]
         return jax.tree_util.tree_unflatten(treedef, leaves)
 
     # --------------------------------------------------------------- journal

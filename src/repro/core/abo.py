@@ -191,8 +191,11 @@ def _sweep_pass(obj, x, aggs, n_valid, half_width, pass_idx, lam, cfg,
 
     The :func:`_block_step` call is fenced with ``optimization_barrier``
     (inputs and outputs), and the engine's row sweep fences its vmapped
-    call the same way. The fences pin the probe/commit math into a
-    self-contained fusion region with identical content in both programs,
+    call the same way — including inside the sharded engine's shard_map
+    partition, a third compilation context (the barrier composes inside
+    shard_map; it has no vmap batching rule, so it always wraps OUTSIDE
+    the vmap). The fences pin the probe/commit math into a
+    self-contained fusion region with identical content in every program,
     so XLA cannot specialize its instruction selection (FMA contraction,
     loop-context vectorization) differently per surrounding program —
     which it otherwise does: the same block step compiled inside the

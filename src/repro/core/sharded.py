@@ -25,6 +25,49 @@ from repro.core.abo import ABOConfig, _candidate_grid, _default_probe_tile
 from repro.objectives.base import SeparableObjective
 
 
+def axis_linear_index(axes: Sequence[str]):
+    """Flattened linear device index over ``axes`` (row-major), traced
+    inside a shard_map'd program. The single-axis case is the engine's
+    sharded page pool ("which pool shard am I"); the multi-axis case is
+    :func:`make_sharded_abo`'s coordinate offset on an N-d mesh."""
+    # jax < 0.5 has no lax.axis_size; psum(1, ax) is the classic form
+    axis_size = getattr(jax.lax, "axis_size",
+                        lambda ax: jax.lax.psum(1, ax))
+    dev = jnp.zeros((), jnp.int32)
+    for ax in axes:
+        dev = dev * axis_size(ax) + jax.lax.axis_index(ax)
+    return dev
+
+
+def owner_select(x: jnp.ndarray, owner: jnp.ndarray, my, axis: str):
+    """Replicate per-row state whose row ``i`` is authoritative only on
+    device ``owner[i]``: every device keeps its own rows and takes every
+    other row from that row's owner, in ONE ``psum`` — the O(n_aggs)-
+    scalars-per-device traffic of the paper's Eq. 7, applied to the
+    engine's per-slot aggregate table.
+
+    Bit-exactness is non-negotiable (the engine's results must equal
+    ``abo_minimize``'s at every device count), and a float ``sum`` with
+    zeros is NOT the identity for every bit pattern (-0.0 + 0.0 = +0.0).
+    So the select reduces *bit patterns*: values are reinterpreted as
+    unsigned words, non-owned rows zeroed, psum'd (integer addition of
+    disjoint nonzeros == bitwise OR == exact transfer), and cast back.
+    NaN payloads, signed zeros, and denormals all round-trip untouched.
+
+    ``owner`` is ``(rows,)`` int32; ``x`` is ``(rows, ...)`` of any fixed-
+    width dtype; ``my`` is this device's :func:`axis_linear_index`.
+    """
+    mask = owner == my
+    mask = mask.reshape(mask.shape + (1,) * (x.ndim - 1))
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        picked = jnp.where(mask, x, jnp.zeros_like(x))
+        return jax.lax.psum(picked, axis)
+    bits_dt = jnp.dtype(f"uint{x.dtype.itemsize * 8}")
+    bits = jax.lax.bitcast_convert_type(x, bits_dt)
+    bits = jnp.where(mask, bits, jnp.zeros_like(bits))
+    return jax.lax.bitcast_convert_type(jax.lax.psum(bits, axis), x.dtype)
+
+
 def _local_pass(obj, cfg, probe_tile, x_loc, aggs, half_width, pass_idx, lam,
                 global_offset, n_valid):
     """Sweep this device's coordinate shard; return (x_loc, local agg delta)."""
@@ -82,13 +125,7 @@ def make_sharded_abo(
     probe_tile = _default_probe_tile(obj)
 
     def step(x_loc, aggs, pass_idx):
-        # flattened linear device index over all mesh axes
-        # (jax < 0.5 has no lax.axis_size; psum(1, ax) is the classic form)
-        axis_size = getattr(jax.lax, "axis_size",
-                            lambda ax: jax.lax.psum(1, ax))
-        dev = jnp.zeros((), jnp.int32)
-        for ax in axes:
-            dev = dev * axis_size(ax) + jax.lax.axis_index(ax)
+        dev = axis_linear_index(axes)
         offset = dev.astype(jnp.int64 if jax.config.jax_enable_x64 else
                             jnp.int32) * shard
         if cfg.coupling_schedule == "linear" and cfg.n_passes > 1:

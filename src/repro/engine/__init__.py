@@ -8,7 +8,11 @@ jobs of every n share one executable family, with bit-identical per-job
 results at any layout. Pool memory is elastic (slot budgets size to
 observed traffic; drained pools shrink past a high-water hysteresis) and
 checkpointing can run incrementally (``journal_every``: an append-only
-client-input journal between rare base snapshots, replayed on resume)."""
+client-input journal between rare base snapshots, replayed on resume).
+With ``devices=D`` the page pools shard across a device mesh (lanes
+place whole per device; one owner-psum per pass; donated zero-copy
+stepping) and results remain bit-identical at every device count —
+snapshots reshard on load when resumed under a different D."""
 from repro.engine.jobs import CANCELLED, DONE, QUEUED, RUNNING, JobSpec, JobState
 from repro.engine.scheduler import LanePool, SolveEngine
 from repro.engine.service import SolveService

@@ -45,6 +45,27 @@ Everything per-job-hot is jitted and cached per compiled shape in
 syncs / placements / finalizes keyed (page-count rung, lane-batch rung).
 The scheduler tracks progress host-side and never syncs the device
 mid-flight; successive row sweeps pipeline through JAX's async dispatch.
+
+Sharded pools. With a ``mesh`` (a 1-axis ``"pool"`` device mesh) the page
+dimension carries a ``NamedSharding``: device d owns local pages
+``[d·cap_loc, (d+1)·cap_loc)`` of the global ``(n_dev·cap_loc, block)``
+pool, each with its own all-zero local scratch page 0, while the per-slot
+scalars stay replicated. Every pool op becomes one ``shard_map``'d
+executable consuming *per-device* index tables (leading device axis,
+sharded along it): each device sweeps only its resident lanes' bands —
+Gauss-Seidel within a device, Jacobi across, exactly
+``repro.core.sharded``'s semantics — and the per-slot tables are
+re-replicated by ONE owner-selected ``psum`` per pass
+(:func:`repro.core.sharded.owner_select`, which transfers bit patterns,
+not float sums, so replicas agree to the bit). Lanes are placed wholly on
+one device, so the psum moves each slot's n_aggs scalars from its single
+writer — the paper's Eq. 7 communication bound — and per-lane math stays
+bit-identical to ``abo_minimize`` at every device count. The
+``optimization_barrier`` fences still wrap the vmapped block step (the
+barrier composes inside shard_map; it has no vmap rule, so it must stay
+outside the vmap), pinning the probe math against XLA's per-partition
+respecialization. All state arguments are donated, sharded buffers
+included, so steady-state stepping updates every shard in place.
 """
 from __future__ import annotations
 
@@ -53,13 +74,19 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.abo import (ABOConfig, _block_step, _default_probe_tile,
                             effective_config, pass_schedule, seeded_start)
+from repro.core.sharded import axis_linear_index, owner_select
 from repro.objectives.base import SeparableObjective, _default_agg_dtype
 
-# (family key, lanes, pages) -> PoolOps bundle of jitted functions
+# (family key, lanes, pages, n_dev) -> PoolOps bundle of jitted functions
 _POOL_OPS_CACHE: dict[tuple, "PoolOps"] = {}
+
+# (device ids, target dims, state shapes) -> jitted sharded resize
+_RESIZE_CACHE: dict[tuple, Callable] = {}
 
 # Padding-waste ceiling for ladder quantization: the {1, 1.5} x pow2
 # ladder's intrinsic worst case is 1/3, so at the default every count rides
@@ -70,7 +97,10 @@ DEFAULT_MAX_PAD_WASTE = 0.35
 # count) are reserved scratch targets for ladder padding entries in
 # gathers/scatters: scratch page content is all-zeros by construction and
 # the scratch lane has n_valid = 0, so padded work is inert and padded
-# reads are exact zeros.
+# reads are exact zeros. Sharded pools reserve LOCAL page 0 on every
+# device (per-device tables hold local ids, so the same constant applies
+# shard-by-shard); the shared scratch lane-slot row is owned by device 0
+# for replication purposes.
 SCRATCH_PAGE = 0
 
 
@@ -153,23 +183,47 @@ jax.tree_util.register_dataclass(
 )
 
 
+def state_sharding(mesh: Mesh) -> PoolState:
+    """The NamedSharding pytree of a sharded PoolState: pages split over
+    the mesh's ``"pool"`` axis, per-slot scalars replicated."""
+    return PoolState(
+        pool=NamedSharding(mesh, P("pool", None)),
+        aggs=NamedSharding(mesh, P()),
+        hist=NamedSharding(mesh, P()),
+        pass_idx=NamedSharding(mesh, P()),
+        n_valid=NamedSharding(mesh, P()),
+    )
+
+
+def _state_specs() -> PoolState:
+    """shard_map in/out specs matching :func:`state_sharding`."""
+    return PoolState(pool=P("pool", None), aggs=P(), hist=P(),
+                     pass_idx=P(), n_valid=P())
+
+
 def zeros_pool_state(obj: SeparableObjective, key: tuple, lanes: int,
-                     pages: int) -> PoolState:
+                     pages: int, mesh: Mesh | None = None) -> PoolState:
     """An all-idle pool (also the checkpoint-restore ``like`` tree).
     Idle and scratch slots hold n_valid=0, so they are never swept and any
-    ladder-padding work routed at them is frozen."""
+    ladder-padding work routed at them is frozen. With ``mesh``, ``pages``
+    is the GLOBAL page count (``n_dev × cap_loc``) and the pool lands
+    sharded over the page dimension."""
     _, cfg, dtype = key
     agg_dt = _default_agg_dtype()
-    return PoolState(
+    state = PoolState(
         pool=jnp.zeros((pages, cfg.block_size), jnp.dtype(dtype)),
         aggs=jnp.zeros((lanes + 1, obj.n_aggs), agg_dt),
         hist=jnp.zeros((lanes + 1, cfg.n_passes), agg_dt),
         pass_idx=jnp.zeros((lanes + 1,), jnp.int32),
         n_valid=jnp.zeros((lanes + 1,), jnp.int32),
     )
+    if mesh is not None:
+        state = jax.device_put(state, state_sharding(mesh))
+    return state
 
 
-def resize_pool_state(state: PoolState, lanes: int, pages: int) -> PoolState:
+def resize_pool_state(state: PoolState, lanes: int, pages: int,
+                      mesh: Mesh | None = None) -> PoolState:
     """Re-shape a pool's device state to ``lanes`` slots and ``pages``
     capacity, growing or shrinking either dimension.
 
@@ -180,11 +234,58 @@ def resize_pool_state(state: PoolState, lanes: int, pages: int) -> PoolState:
     ladder-padded syncs accumulate in it (its pass_idx increments every
     plan step). Host-rare either way: both dimensions ride the count
     ladder with a drain-side hysteresis, so resizes happen O(log traffic)
-    times per family, not per admission."""
+    times per family, not per admission.
+
+    Sharded pools resize *per shard*: ``pages`` is the new global count
+    (``n_dev × cap_loc'``) and each device pads/trims its own local page
+    tail — page ids are (device, local), so a global-row copy would move
+    pages across devices when the shard height changes."""
     p0 = state.pool.shape[0]
     s0 = state.aggs.shape[0] - 1
     if pages == p0 and lanes == s0:
         return state
+    keep = min(s0, lanes)
+
+    def resize_slots(a):
+        out = jnp.zeros((lanes + 1,) + a.shape[1:], a.dtype)
+        return out.at[:keep].set(a[:keep])
+
+    if mesh is not None:
+        n_dev = mesh.devices.size
+        loc_new = pages // n_dev
+        loc_old = p0 // n_dev
+        # cache the jitted resize per (topology, shape transition): an
+        # unjitted shard_map re-traces every call, and drain/regrow
+        # cycles resize on the same few ladder rungs over and over
+        ck = (tuple(d.id for d in mesh.devices.flat), lanes, pages,
+              tuple((leaf.shape, str(leaf.dtype))
+                    for leaf in (state.pool, state.aggs, state.hist,
+                                 state.pass_idx, state.n_valid)))
+        fn = _RESIZE_CACHE.get(ck)
+        if fn is None:
+
+            def local_resize(pool, aggs, hist, pass_idx, n_valid):
+                if loc_new > loc_old:
+                    pool = jnp.zeros((loc_new, pool.shape[1]),
+                                     pool.dtype).at[:loc_old].set(pool)
+                elif loc_new < loc_old:
+                    pool = pool[:loc_new]
+                if lanes != s0:
+                    aggs, hist = resize_slots(aggs), resize_slots(hist)
+                    pass_idx, n_valid = (resize_slots(pass_idx),
+                                         resize_slots(n_valid))
+                return pool, aggs, hist, pass_idx, n_valid
+
+            fn = jax.jit(shard_map(
+                local_resize, mesh=mesh, check_rep=False,
+                in_specs=(P("pool", None), P(), P(), P(), P()),
+                out_specs=(P("pool", None), P(), P(), P(), P())),
+                donate_argnums=(0, 1, 2, 3, 4))
+            _RESIZE_CACHE[ck] = fn
+        out = fn(state.pool, state.aggs, state.hist, state.pass_idx,
+                 state.n_valid)
+        return PoolState(*out)
+
     pool = state.pool
     if pages > p0:
         pool = jnp.zeros((pages, pool.shape[1]), pool.dtype).at[:p0].set(pool)
@@ -192,15 +293,11 @@ def resize_pool_state(state: PoolState, lanes: int, pages: int) -> PoolState:
         pool = pool[:pages]
     state = dataclasses.replace(state, pool=pool)
     if lanes != s0:
-        keep = min(s0, lanes)
-
-        def resize(a):
-            out = jnp.zeros((lanes + 1,) + a.shape[1:], a.dtype)
-            return out.at[:keep].set(a[:keep])
-
         state = dataclasses.replace(
-            state, aggs=resize(state.aggs), hist=resize(state.hist),
-            pass_idx=resize(state.pass_idx), n_valid=resize(state.n_valid))
+            state, aggs=resize_slots(state.aggs),
+            hist=resize_slots(state.hist),
+            pass_idx=resize_slots(state.pass_idx),
+            n_valid=resize_slots(state.n_valid))
     return state
 
 
@@ -223,14 +320,22 @@ class PoolOps:
 
     All state arguments are donated: the scheduler threads one PoolState
     through, so buffers update in place.
+
+    With a ``mesh`` the same methods return shard_map'd executables over
+    *per-device* tables (leading device axis, local page ids) plus an
+    ``owner`` slot→device table; see the module docstring for the layout
+    and the per-pass owner-selected psum that keeps the replicated slot
+    arrays in agreement.
     """
 
     def __init__(self, obj: SeparableObjective, key: tuple, lanes: int,
-                 pages: int):
+                 pages: int, mesh: Mesh | None = None):
         self.obj = obj
         self.key = key
         self.lanes = lanes
         self.pages = pages
+        self.mesh = mesh
+        self.n_dev = mesh.devices.size if mesh is not None else 1
         self.cfg: ABOConfig = key_config(key)
         self.dtype = jnp.dtype(key[2])
         self.probe_tile = _default_probe_tile(obj)
@@ -328,11 +433,22 @@ class PoolOps:
         one dynamic fori_loop. Both the pass count and the per-band row
         counts are traced scalars, so one compiled program serves any
         fuse depth and any partial band fill of the same signature.
+
+        Sharded pools take ``(state, n_fused, owner, *per_device_arrs)``
+        where every table carries a leading device axis (band lanes/pages/
+        rows ``(D, r_cap, w)``, band row counts ``(D,)``, sync tables
+        ``(D, v)`` / ``(D, v, g)``) and ``owner`` maps slot→device. Each
+        device runs ITS band schedule and lane sync per pass, then the
+        slot arrays are re-replicated by one owner-selected psum — the
+        pass-end Jacobi exchange of ``core.sharded``, n_aggs scalars per
+        slot from its one writer.
         """
         ck = ("step", bands, sync)
         fn = self._cache.get(ck)
-        if fn is None:
-            n_bands = len(bands)
+        if fn is not None:
+            return fn
+        n_bands = len(bands)
+        if self.mesh is None:
 
             def run(state: PoolState, n_fused, *arrs):
                 band_args = [arrs[4 * i: 4 * i + 4] for i in range(n_bands)]
@@ -346,7 +462,38 @@ class PoolOps:
                 return jax.lax.fori_loop(0, n_fused, one_pass, state)
 
             fn = jax.jit(run, donate_argnums=(0,))
-            self._cache[ck] = fn
+        else:
+
+            def run_local(state: PoolState, n_fused, owner, *arrs):
+                my = axis_linear_index(("pool",))
+                band_args = [tuple(a[0] for a in arrs[4 * i: 4 * i + 3])
+                             + (arrs[4 * i + 3][0],) for i in range(n_bands)]
+                sync_args = tuple(a[0] for a in
+                                  arrs[4 * n_bands: 4 * n_bands + 2])
+
+                def one_pass(_, st):
+                    for ba in band_args:
+                        st = self._band_body(st, *ba)
+                    st = self._sync_body(st, *sync_args)
+                    # ONE psum per pass: every slot's scalars from their
+                    # single writer (bit patterns, not float sums)
+                    return dataclasses.replace(
+                        st,
+                        aggs=owner_select(st.aggs, owner, my, "pool"),
+                        hist=owner_select(st.hist, owner, my, "pool"),
+                        pass_idx=owner_select(st.pass_idx, owner, my,
+                                              "pool"))
+
+                return jax.lax.fori_loop(0, n_fused, one_pass, state)
+
+            band_specs = (P("pool", None, None),) * 3 + (P("pool"),)
+            fn = jax.jit(shard_map(
+                run_local, mesh=self.mesh, check_rep=False,
+                in_specs=(_state_specs(), P(), P())
+                + band_specs * n_bands
+                + (P("pool", None), P("pool", None, None)),
+                out_specs=_state_specs()), donate_argnums=(0,))
+        self._cache[ck] = fn
         return fn
 
     # ------------------------------------------------------------ placement
@@ -360,20 +507,23 @@ class PoolOps:
         from ladder padding keep the scratch page exactly zero."""
         ck = ("place", g, v)
         fn = self._cache.get(ck)
-        if fn is None:
-            obj, cfg, dt = self.obj, self.cfg, self.dtype
-            bsz = cfg.block_size
-            width = g * bsz
+        if fn is not None:
+            return fn
+        obj, cfg, dt = self.obj, self.cfg, self.dtype
+        bsz = cfg.block_size
+        width = g * bsz
 
-            def init_row(seed, is_seeded, nv):
-                xs = seeded_start(seed, width, dt, obj.lower, obj.upper)
-                xg = jnp.full((width,), obj.lower + 0.6180339887
-                              * (obj.upper - obj.lower), dt)
-                xr = jnp.where(is_seeded, xs, xg)
-                xr = jnp.where(jnp.arange(width) < nv, xr,
-                               jnp.zeros((), dt))
-                ag = obj.aggregates(xr, nv)
-                return xr, ag
+        def init_row(seed, is_seeded, nv):
+            xs = seeded_start(seed, width, dt, obj.lower, obj.upper)
+            xg = jnp.full((width,), obj.lower + 0.6180339887
+                          * (obj.upper - obj.lower), dt)
+            xr = jnp.where(is_seeded, xs, xg)
+            xr = jnp.where(jnp.arange(width) < nv, xr,
+                           jnp.zeros((), dt))
+            ag = obj.aggregates(xr, nv)
+            return xr, ag
+
+        if self.mesh is None:
 
             def run(state: PoolState, lanes, pages, seeded, seeds, n_valid):
                 xr, ag = jax.vmap(init_row)(seeds, seeded, n_valid)
@@ -381,8 +531,39 @@ class PoolOps:
                                          n_valid)
 
             fn = jax.jit(run, donate_argnums=(0,))
-            self._cache[ck] = fn
+        else:
+            # sharded: per-device tables; every device computes the whole
+            # v-batch of start rows (v is a refill batch, tiny next to a
+            # sweep) but only ITS lanes' rows are real — the rest target
+            # its local scratch slot/page and the owner psum restores one
+            # authoritative value per slot across replicas
+            def run_local(state: PoolState, owner, lanes, pages, seeded,
+                          seeds, n_valid):
+                my = axis_linear_index(("pool",))
+                lanes, pages = lanes[0], pages[0]
+                seeded, seeds, n_valid = seeded[0], seeds[0], n_valid[0]
+                xr, ag = jax.vmap(init_row)(seeds, seeded, n_valid)
+                st = self._write_lanes(state, lanes, pages, xr, ag, n_valid)
+                return self._reconcile_slots(st, owner, my)
+
+            fn = jax.jit(shard_map(
+                run_local, mesh=self.mesh, check_rep=False,
+                in_specs=(_state_specs(), P(), P("pool", None),
+                          P("pool", None, None), P("pool", None),
+                          P("pool", None), P("pool", None)),
+                out_specs=_state_specs()), donate_argnums=(0,))
+        self._cache[ck] = fn
         return fn
+
+    def _reconcile_slots(self, st: PoolState, owner, my) -> PoolState:
+        """Re-replicate every per-slot array from its owner device (one
+        bit-exact psum each; see core.sharded.owner_select)."""
+        return dataclasses.replace(
+            st,
+            aggs=owner_select(st.aggs, owner, my, "pool"),
+            hist=owner_select(st.hist, owner, my, "pool"),
+            pass_idx=owner_select(st.pass_idx, owner, my, "pool"),
+            n_valid=owner_select(st.n_valid, owner, my, "pool"))
 
     def place_x(self, g: int) -> Callable:
         """(state, lane (), pages (g,), xrow (g*block,), n_valid ()) ->
@@ -390,8 +571,10 @@ class PoolOps:
         host-side with zeros past n)."""
         ck = ("place_x", g)
         fn = self._cache.get(ck)
-        if fn is None:
-            obj = self.obj
+        if fn is not None:
+            return fn
+        obj = self.obj
+        if self.mesh is None:
 
             def run(state: PoolState, lane, pages, xrow, n_valid):
                 ag = obj.aggregates(xrow, n_valid)
@@ -400,7 +583,25 @@ class PoolOps:
                     n_valid[None])
 
             fn = jax.jit(run, donate_argnums=(0,))
-            self._cache[ck] = fn
+        else:
+
+            def run_local(state: PoolState, owner, lane, pages, xrow,
+                          n_valid):
+                my = axis_linear_index(("pool",))
+                lane, pages, xrow, n_valid = (lane[0], pages[0], xrow[0],
+                                              n_valid[0])
+                ag = obj.aggregates(xrow, n_valid)
+                st = self._write_lanes(
+                    state, lane[None], pages[None], xrow[None], ag[None],
+                    n_valid[None])
+                return self._reconcile_slots(st, owner, my)
+
+            fn = jax.jit(shard_map(
+                run_local, mesh=self.mesh, check_rep=False,
+                in_specs=(_state_specs(), P(), P("pool"),
+                          P("pool", None), P("pool", None), P("pool")),
+                out_specs=_state_specs()), donate_argnums=(0,))
+        self._cache[ck] = fn
         return fn
 
     def _write_lanes(self, state, lanes, pages, xrow, aggs, n_valid):
@@ -429,8 +630,10 @@ class PoolOps:
         harvest batch), a fraction of the compute."""
         ck = ("final", g, v)
         fn = self._cache.get(ck)
-        if fn is None:
-            obj = self.obj
+        if fn is not None:
+            return fn
+        obj = self.obj
+        if self.mesh is None:
 
             def run(state: PoolState, lanes, pages):
                 xrow = self._gather_rows(state, pages)
@@ -440,16 +643,39 @@ class PoolOps:
                 return f, xrow, state.hist[lanes]
 
             fn = jax.jit(run)
-            self._cache[ck] = fn
+        else:
+            # sharded: finisher i's row in each output is computed by its
+            # resident device (row_dev[i]) from its local pages; the other
+            # devices produce scratch garbage in that row, which the
+            # owner-selected psum discards — outputs land replicated, so
+            # the host reads exact per-lane values once
+            def run_local(state: PoolState, row_dev, lanes, pages):
+                my = axis_linear_index(("pool",))
+                lanes, pages = lanes[0], pages[0]
+                xrow = self._gather_rows(state, pages)
+                nv = state.n_valid[lanes]
+                f = jax.vmap(lambda xr, n: obj.combine(obj.aggregates(
+                    xr, n)))(xrow, nv)
+                return (owner_select(f, row_dev, my, "pool"),
+                        owner_select(xrow, row_dev, my, "pool"),
+                        owner_select(state.hist[lanes], row_dev, my,
+                                     "pool"))
+
+            fn = jax.jit(shard_map(
+                run_local, mesh=self.mesh, check_rep=False,
+                in_specs=(_state_specs(), P(), P("pool", None),
+                          P("pool", None, None)),
+                out_specs=(P(), P(), P())))
+        self._cache[ck] = fn
         return fn
 
 
 def get_pool_ops(obj: SeparableObjective, key: tuple, lanes: int,
-                 pages: int) -> PoolOps:
-    ck = (key, lanes, pages)
+                 pages: int, mesh: Mesh | None = None) -> PoolOps:
+    ck = (key, lanes, pages, mesh.devices.size if mesh is not None else 1)
     ops = _POOL_OPS_CACHE.get(ck)
     if ops is None:
-        ops = PoolOps(obj, key, lanes, pages)
+        ops = PoolOps(obj, key, lanes, pages, mesh)
         _POOL_OPS_CACHE[ck] = ops
     return ops
 
@@ -460,6 +686,6 @@ def compiled_executable_count(families: set | None = None) -> int:
     keys, e.g. an engine's ``family_keys_seen``), counts only executables
     those families own — the per-engine number stats report; without it,
     the process-wide total."""
-    return sum(ops.compiled_count() for (key, _, _), ops
+    return sum(ops.compiled_count() for (key, _, _, _), ops
                in _POOL_OPS_CACHE.items()
                if families is None or key in families)

@@ -35,7 +35,18 @@ Every lane advances whole passes per step, so job progress is tracked
 host-side (``JobState.passes_done``) and the step loop never reads device
 memory: row sweeps pipeline through JAX's async dispatch, and the engine
 only syncs when a job finishes (its exact final objective) or a
-checkpoint is cut.
+checkpoint is cut. Steady-state dispatch re-sends the plan's cached
+device-resident tables and a cached fused-pass-count constant — no
+per-step host wraps or transfers.
+
+With ``devices=D`` each family's page pool is sharded across a 1-axis
+device mesh: lanes place whole onto the least-loaded device (host page
+tables map lane→(device, local page)), each device sweeps only its
+resident lanes' bands inside one shard_map'd fused executable, and one
+owner-selected psum per pass re-replicates the per-slot scalars — the
+Gauss-Seidel-within / Jacobi-across semantics of ``core/sharded.py`` at
+the pool layer, with per-job fun/x still bit-identical to abo_minimize
+at every device count (see engine/DESIGN.md "Sharded pools & donation").
 
 Fault tolerance: with a ``checkpoint_dir``, the engine snapshots every
 ``ckpt_every`` steps — the pool states as array leaves, and the job
@@ -68,6 +79,7 @@ from typing import Any, Iterable
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.core.abo import ABOConfig
@@ -82,7 +94,10 @@ from repro.objectives.base import SeparableObjective
 @dataclasses.dataclass
 class _SweepRun:
     """One contiguous band of block rows sharing a width rung: the plan
-    arrays one band loop of the fused-step executable consumes."""
+    arrays one band loop of the fused-step executable consumes. Sharded
+    plans carry a leading device axis on every array (``(D, r_cap, w)``
+    tables sharded over the mesh, per-device row counts ``(D,)``) — the
+    same signature rungs, one schedule per device."""
 
     w: int                   # width rung (lanes gathered per row)
     r_cap: int               # row-count rung (array length)
@@ -98,7 +113,8 @@ class _SweepRun:
 class _SyncGroup:
     """All active lanes gathered at one page-count rung: the end-of-pass
     lane sync inside the fused step (finalize at harvest reuses the same
-    gather shape for just the finishing lanes)."""
+    gather shape for just the finishing lanes). Sharded plans carry a
+    leading device axis (each device syncs its resident lanes)."""
 
     g: int                   # page-count rung (gathered row view, pages)
     v: int                   # lane-batch rung
@@ -112,18 +128,17 @@ class _Plan:
     sync: _SyncGroup | None
     live_slots: int          # per-pass true block rows
     swept_slots: int         # per-pass executed block rows
+    # the dispatch-ready argument list (band tables, sync tables — owner
+    # table first when sharded), built ONCE at plan time: steady-state
+    # stepping re-sends the same device-resident arrays every fused
+    # dispatch instead of re-wrapping host indices per step
+    args: list = dataclasses.field(default_factory=list)
 
     def signature(self) -> tuple:
         """The compiled shape of this plan: band + sync rungs only. Plans
         sharing a signature share one fused-step executable."""
         return (tuple((r.w, r.r_cap) for r in self.runs),
                 (self.sync.g, self.sync.v))
-
-    def step_args(self) -> list:
-        args = []
-        for r in self.runs:
-            args += [r.lanes, r.pages, r.rows, r.n_rows]
-        return args + [self.sync.lanes, self.sync.pages]
 
 
 def _gather_tables(entries: list[tuple[int, list[int]]], scratch_lane: int):
@@ -153,7 +168,15 @@ class LanePool:
     on the count ladder as admissions demand (capped at ``lanes``), and
     shrinks back on drain past the ``high_water`` hysteresis — as does the
     page capacity. ``high_water=None`` disables shrinking (capacity is
-    retained forever, the pre-elastic behavior)."""
+    retained forever, the pre-elastic behavior).
+
+    With a ``mesh`` the pool pages are sharded: the global capacity is
+    ``n_dev × cap_loc``, page ids in :attr:`page_table` are LOCAL to the
+    lane's device, and ``lane_dev[slot]`` records which device hosts each
+    lane (the lane→(device, page) mapping of the page tables). Lanes are
+    placed whole onto the least-loaded device, so per-lane sweeps stay
+    single-device Gauss-Seidel and results stay bit-identical to the
+    unsharded engine; devices balance at lane granularity."""
 
     key: tuple
     obj: SeparableObjective
@@ -161,11 +184,16 @@ class LanePool:
     slots: int = 0                               # current lane-slot count
     high_water: float | None = 2.0               # shrink hysteresis factor
     state: batched.PoolState | None = None       # materialized on first use
-    capacity: int = 1                            # pages incl. scratch page 0
+    capacity: int = 1                            # GLOBAL pages incl. the
+    #                                              per-device scratch page 0
+    mesh: Mesh | None = None                     # None = unsharded
+    n_dev: int = 1
     job_ids: list[str | None] = dataclasses.field(default_factory=list)
     page_table: list[list[int] | None] = dataclasses.field(
         default_factory=list)
-    free_pages: list[int] = dataclasses.field(default_factory=list)
+    lane_dev: list[int | None] = dataclasses.field(default_factory=list)
+    # per-device free lists of LOCAL page ids (index 0 = device 0, ...)
+    free_pages: list[list[int]] = dataclasses.field(default_factory=list)
     plan: _Plan | None = None                    # rebuilt when lanes change
 
     def __post_init__(self):
@@ -173,6 +201,17 @@ class LanePool:
             self.job_ids = [None] * self.slots
         if not self.page_table:
             self.page_table = [None] * self.slots
+        if not self.lane_dev:
+            self.lane_dev = [None] * self.slots
+        if not self.free_pages:
+            self.free_pages = [[] for _ in range(self.n_dev)]
+        if self.capacity < self.n_dev:       # one scratch page per device
+            self.capacity = self.n_dev
+
+    @property
+    def cap_loc(self) -> int:
+        """Per-device page capacity (== ``capacity`` when unsharded)."""
+        return self.capacity // self.n_dev
 
     @property
     def active(self) -> int:
@@ -196,36 +235,55 @@ class LanePool:
         assert new > self.slots, "slot budget exhausted"
         self.job_ids += [None] * (new - self.slots)
         self.page_table += [None] * (new - self.slots)
+        self.lane_dev += [None] * (new - self.slots)
         self.slots = new
         self.plan = None
         return self.free_slot()
 
-    def alloc_pages(self, count: int) -> list[int]:
-        """Take ``count`` page ids, growing the capacity plan onto the
-        next ladder rung when the free list runs short (the device array
-        is grown lazily by :meth:`materialize`)."""
-        if len(self.free_pages) < count:
-            need = count - len(self.free_pages)
-            new_cap = batched.pad_ladder(self.capacity + need, 1)
-            self.free_pages.extend(range(self.capacity, new_cap))
-            self.capacity = new_cap
-        pages, self.free_pages = (self.free_pages[:count],
-                                  self.free_pages[count:])
+    def pick_device(self) -> int:
+        """The least-loaded device (fewest live pages; ties go low) — the
+        deterministic placement rule for a new lane. Bit-identity does not
+        depend on it (any placement gives the same per-lane bits); balance
+        does."""
+        if self.n_dev == 1:
+            return 0
+        live = [0] * self.n_dev
+        for jid, pt, dev in zip(self.job_ids, self.page_table,
+                                self.lane_dev):
+            if jid is not None and pt:
+                live[dev] += len(pt)
+        return min(range(self.n_dev), key=lambda d: (live[d], d))
+
+    def alloc_pages(self, count: int, dev: int = 0) -> list[int]:
+        """Take ``count`` LOCAL page ids on device ``dev``, growing the
+        per-device capacity plan onto the next ladder rung when that
+        device's free list runs short (every device's shard grows in
+        lockstep — the pool is one sharded array; the device arrays
+        resize lazily in :meth:`materialize`)."""
+        free = self.free_pages[dev]
+        if len(free) < count:
+            need = count - len(free)
+            new_loc = batched.pad_ladder(self.cap_loc + need, 1)
+            for d in range(self.n_dev):
+                self.free_pages[d].extend(range(self.cap_loc, new_loc))
+            self.capacity = new_loc * self.n_dev
+            free = self.free_pages[dev]
+        pages, self.free_pages[dev] = free[:count], free[count:]
         return pages
 
-    def release_pages(self, pages: list[int]):
-        self.free_pages.extend(pages)
-        self.free_pages.sort()               # deterministic reassignment
+    def release_pages(self, pages: list[int], dev: int = 0):
+        self.free_pages[dev].extend(pages)
+        self.free_pages[dev].sort()          # deterministic reassignment
 
     def materialize(self):
         """Reconcile the device state to the host plan (slots, capacity)
         — growing OR shrinking; a no-op when shapes already match."""
         if self.state is None:
             self.state = batched.zeros_pool_state(
-                self.obj, self.key, self.slots, self.capacity)
+                self.obj, self.key, self.slots, self.capacity, self.mesh)
         else:
             self.state = batched.resize_pool_state(
-                self.state, self.slots, self.capacity)
+                self.state, self.slots, self.capacity, self.mesh)
 
     def shrink_to_fit(self):
         """Release free capacity past the high-water hysteresis. Called
@@ -234,7 +292,9 @@ class LanePool:
         occupied slot / used page, the all-free tail is cut and the device
         arrays resized immediately — that is the moment the memory
         actually returns. Only tails can go (ids are stable); interior
-        free pages wait for the lanes pinning higher ids to drain."""
+        free pages wait for the lanes pinning higher ids to drain.
+        Sharded pools cut every shard to the ladder rung covering the
+        deepest-loaded device (shards stay equal-height)."""
         if self.high_water is None or self.state is None:
             return
         top = max((i for i, j in enumerate(self.job_ids) if j is not None),
@@ -244,54 +304,70 @@ class LanePool:
                 * slot_target:
             del self.job_ids[slot_target:]
             del self.page_table[slot_target:]
+            del self.lane_dev[slot_target:]
             self.slots = slot_target
             self.plan = None
-        used_top = max((pg for pt in self.page_table if pt for pg in pt),
-                       default=batched.SCRATCH_PAGE)
-        cap_target = batched.pad_ladder(used_top + 1, 1)
-        if cap_target < self.capacity and self.capacity > self.high_water \
-                * cap_target:
-            self.capacity = cap_target
-            self.free_pages = [p for p in self.free_pages if p < cap_target]
+        used_top = batched.SCRATCH_PAGE
+        for jid, pt in zip(self.job_ids, self.page_table):
+            if jid is not None and pt:
+                used_top = max(used_top, max(pt))
+        loc_target = batched.pad_ladder(used_top + 1, 1)
+        if loc_target < self.cap_loc and self.cap_loc > self.high_water \
+                * loc_target:
+            self.capacity = loc_target * self.n_dev
+            self.free_pages = [[p for p in fp if p < loc_target]
+                               for fp in self.free_pages]
             self.plan = None
         self.materialize()
 
+    def _slot_bytes(self) -> int:
+        return sum(leaf.size * leaf.dtype.itemsize
+                   for leaf in (self.state.aggs, self.state.hist,
+                                self.state.pass_idx, self.state.n_valid))
+
     def device_bytes(self) -> int:
-        """Bytes the device arrays currently hold (0 if unmaterialized)."""
+        """Physical bytes the device arrays hold across all devices (0 if
+        unmaterialized). Sharded pools count the replicated per-slot
+        arrays once per device — that is what actually sits in device
+        memory."""
         if self.state is None:
             return 0
-        return sum(leaf.size * leaf.dtype.itemsize
-                   for leaf in (self.state.pool, self.state.aggs,
-                                self.state.hist, self.state.pass_idx,
-                                self.state.n_valid))
+        pool_b = self.state.pool.size * self.state.pool.dtype.itemsize
+        return pool_b + self._slot_bytes() * self.n_dev
+
+    def per_device_stats(self) -> list[dict]:
+        """Per-device resident footprint: local pages, slots, bytes."""
+        if self.state is None:
+            return [{"pages": 0, "slots": 0, "bytes": 0}
+                    for _ in range(self.n_dev)]
+        bsz = self.state.pool.shape[1]
+        shard_b = self.cap_loc * bsz * self.state.pool.dtype.itemsize
+        slot_b = self._slot_bytes()
+        return [{"pages": self.cap_loc,
+                 "slots": self.state.aggs.shape[0] - 1,
+                 "bytes": shard_b + slot_b} for _ in range(self.n_dev)]
 
     # ------------------------------------------------------------- planning
-    def build_plan(self) -> _Plan:
-        """Row-compacted sweep plan for the current lane occupancy.
-
-        Band structure: the number of lanes occupying row r is
-        non-increasing in r, so rows sharing a width rung are contiguous;
-        the bands run in ascending-row order (descending width) inside
-        the fused-step executable, preserving the Gauss-Seidel block
-        ordering within every lane. Ladder padding (width and row-count
-        rungs) points at the scratch lane/page.
+    @staticmethod
+    def _bands_np(active: list[tuple[int, list[int]]], scratch: int):
+        """Numpy band tables for one device's (or the unsharded pool's)
+        active lanes: a list of ``{w, nb, lanes, pages, rows, live}``
+        dicts with ``(nb, w)`` arrays, width already on its rung, rows
+        NOT yet padded to a row-count rung (callers pad — the unsharded
+        plan to each band's own rung, the sharded plan to the rung
+        unified across devices).
 
         Construction is array-at-once: lanes sort by depth (descending,
         slot-ascending ties), so the lanes occupying row r are exactly the
-        first ``count(r)`` of that order and every band's (r_cap, w) plan
-        arrays are numpy slices of one (lane, row) page matrix — no host
-        loop over block rows. A paper-scale lane (1e9 coords ≈ 244k rows)
-        plans in milliseconds; the old per-row Python loop scaled with
-        pool size. Entry order within a row is a permutation of the old
-        planner's — harmless, since row entries touch disjoint
-        (lane, page) pairs.
+        first ``count(r)`` of that order and every band's plan arrays are
+        numpy slices of one (lane, row) page matrix — no host loop over
+        block rows. A paper-scale lane (1e9 coords ≈ 244k rows) plans in
+        milliseconds; the old per-row Python loop scaled with pool size.
+        Entry order within a row is a permutation of the old planner's —
+        harmless, since row entries touch disjoint (lane, page) pairs.
         """
-        active = [(slot, pt) for slot, (jid, pt)
-                  in enumerate(zip(self.job_ids, self.page_table))
-                  if jid is not None]
         if not active:
-            return _Plan([], None, 0, 0)
-        scratch = self.slots
+            return []
         n_act = len(active)
         depths = np.fromiter((len(pt) for _, pt in active), np.int64, n_act)
         order = np.lexsort((np.arange(n_act), -depths))
@@ -315,42 +391,160 @@ class LanePool:
         starts = np.concatenate(
             [[0], np.flatnonzero(np.diff(rungs)) + 1, [max_rows]])
 
-        runs = []
-        live = swept = 0
+        bands = []
         for r0, r1 in zip(starts[:-1], starts[1:]):
             r0, r1 = int(r0), int(r1)
             w_rung = int(rungs[r0])
             nb = r1 - r0
-            r_cap = batched.pad_ladder(nb, 1)
             cmax = int(counts[r0])           # counts peak at the band head
             colmask = np.arange(cmax)[None, :] < counts[r0:r1, None]
-            lanes_np = np.full((r_cap, w_rung), scratch, np.int32)
-            pages_np = np.full((r_cap, w_rung), batched.SCRATCH_PAGE,
+            lanes_np = np.full((nb, w_rung), scratch, np.int32)
+            pages_np = np.full((nb, w_rung), batched.SCRATCH_PAGE,
                                np.int32)
-            rows_np = np.zeros((r_cap, w_rung), np.int32)
-            lanes_np[:nb, :cmax] = np.where(
+            rows_np = np.zeros((nb, w_rung), np.int32)
+            lanes_np[:, :cmax] = np.where(
                 colmask, slots_arr[None, :cmax], scratch)
-            pages_np[:nb, :cmax] = np.where(
+            pages_np[:, :cmax] = np.where(
                 colmask, pages_mat[:cmax, r0:r1].T, batched.SCRATCH_PAGE)
-            rows_np[:nb, :cmax] = np.where(colmask, rows_idx[r0:r1, None], 0)
-            band_live = int(counts[r0:r1].sum())
-            live += band_live
-            swept += nb * w_rung
-            runs.append(_SweepRun(
-                w=w_rung, r_cap=r_cap,
-                n_rows=jnp.asarray(nb, jnp.int32),
-                lanes=jnp.asarray(lanes_np), pages=jnp.asarray(pages_np),
-                rows=jnp.asarray(rows_np),
-                live_slots=band_live,
-                swept_slots=nb * w_rung))
+            rows_np[:, :cmax] = np.where(colmask, rows_idx[r0:r1, None], 0)
+            bands.append({"w": w_rung, "nb": nb, "lanes": lanes_np,
+                          "pages": pages_np, "rows": rows_np,
+                          "live": int(counts[r0:r1].sum())})
+        return bands
 
-        # one gather shape for every active lane: the deepest lane's
-        # page-count rung (short lanes read scratch zeros past their
-        # pages — masked out, and a 1/m-cost side dish vs the sweep)
-        g, v, lanes_np, pages_np = _gather_tables(active, scratch)
-        sync = _SyncGroup(g=g, v=v, lanes=jnp.asarray(lanes_np),
-                          pages=jnp.asarray(pages_np))
-        return _Plan(runs, sync, live, swept)
+    def build_plan(self) -> _Plan:
+        """Row-compacted sweep plan for the current lane occupancy.
+
+        Band structure: the number of lanes occupying row r is
+        non-increasing in r, so rows sharing a width rung are contiguous;
+        the bands run in ascending-row order (descending width) inside
+        the fused-step executable, preserving the Gauss-Seidel block
+        ordering within every lane. Ladder padding (width and row-count
+        rungs) points at the scratch lane/page.
+
+        Sharded pools build one band schedule PER DEVICE (each over that
+        device's resident lanes, local page ids) and unify the shapes —
+        band i compiles at the max (width, row-count) rung any device
+        needs, devices with less work ride scratch padding and a smaller
+        dynamic row count. The unified rungs are the plan signature, so
+        the one-executable-per-signature contract is unchanged; the
+        stacked ``(D, ...)`` tables are device_put sharded once here and
+        re-sent verbatim every step.
+        """
+        active = [(slot, pt) for slot, (jid, pt)
+                  in enumerate(zip(self.job_ids, self.page_table))
+                  if jid is not None]
+        if not active:
+            return _Plan([], None, 0, 0)
+        scratch = self.slots
+        if self.mesh is None:
+            runs = []
+            live = swept = 0
+            for b in self._bands_np(active, scratch):
+                nb, w_rung = b["nb"], b["w"]
+                r_cap = batched.pad_ladder(nb, 1)
+
+                def pad(a, fill):
+                    out = np.full((r_cap, w_rung), fill, np.int32)
+                    out[:nb] = a
+                    return out
+
+                live += b["live"]
+                swept += nb * w_rung
+                runs.append(_SweepRun(
+                    w=w_rung, r_cap=r_cap,
+                    n_rows=jnp.asarray(nb, jnp.int32),
+                    lanes=jnp.asarray(pad(b["lanes"], scratch)),
+                    pages=jnp.asarray(pad(b["pages"],
+                                          batched.SCRATCH_PAGE)),
+                    rows=jnp.asarray(pad(b["rows"], 0)),
+                    live_slots=b["live"],
+                    swept_slots=nb * w_rung))
+
+            # one gather shape for every active lane: the deepest lane's
+            # page-count rung (short lanes read scratch zeros past their
+            # pages — masked out, and a 1/m-cost side dish vs the sweep)
+            g, v, lanes_np, pages_np = _gather_tables(active, scratch)
+            sync = _SyncGroup(g=g, v=v, lanes=jnp.asarray(lanes_np),
+                              pages=jnp.asarray(pages_np))
+            plan = _Plan(runs, sync, live, swept)
+            for r in plan.runs:
+                plan.args += [r.lanes, r.pages, r.rows, r.n_rows]
+            plan.args += [sync.lanes, sync.pages]
+            return plan
+        return self._build_plan_sharded(active, scratch)
+
+    def _build_plan_sharded(self, active, scratch) -> _Plan:
+        D = self.n_dev
+        mesh = self.mesh
+        per_dev = [[(s, pt) for s, pt in active if self.lane_dev[s] == d]
+                   for d in range(D)]
+        bands_d = [self._bands_np(act, scratch) for act in per_dev]
+        n_bands = max(len(b) for b in bands_d)
+        sh_tab = NamedSharding(mesh, PartitionSpec("pool", None, None))
+        sh_vec = NamedSharding(mesh, PartitionSpec("pool"))
+        sh_mat = NamedSharding(mesh, PartitionSpec("pool", None))
+        sh_rep = NamedSharding(mesh, PartitionSpec())
+
+        runs = []
+        live = swept = 0
+        for i in range(n_bands):
+            devs = [b[i] if i < len(b) else None for b in bands_d]
+            w = max((b["w"] for b in devs if b), default=1)
+            r_cap = batched.pad_ladder(
+                max((b["nb"] for b in devs if b), default=1), 1)
+            lanes_np = np.full((D, r_cap, w), scratch, np.int32)
+            pages_np = np.full((D, r_cap, w), batched.SCRATCH_PAGE,
+                               np.int32)
+            rows_np = np.zeros((D, r_cap, w), np.int32)
+            n_rows_np = np.zeros((D,), np.int32)
+            band_live = band_swept = 0
+            for d, b in enumerate(devs):
+                if b is None:
+                    continue
+                nb, wd = b["nb"], b["w"]
+                lanes_np[d, :nb, :wd] = b["lanes"]
+                pages_np[d, :nb, :wd] = b["pages"]
+                rows_np[d, :nb, :wd] = b["rows"]
+                n_rows_np[d] = nb
+                band_live += b["live"]
+                band_swept += nb * w
+            live += band_live
+            swept += band_swept
+            runs.append(_SweepRun(
+                w=w, r_cap=r_cap,
+                n_rows=jax.device_put(jnp.asarray(n_rows_np), sh_vec),
+                lanes=jax.device_put(jnp.asarray(lanes_np), sh_tab),
+                pages=jax.device_put(jnp.asarray(pages_np), sh_tab),
+                rows=jax.device_put(jnp.asarray(rows_np), sh_tab),
+                live_slots=band_live,
+                swept_slots=band_swept))
+
+        # per-device lane sync at rungs unified across devices
+        g = max(batched.pad_ladder(max(len(pt) for _, pt in act), 1)
+                for act in per_dev if act)
+        v = max(batched.pad_ladder(len(act), 1)
+                for act in per_dev if act)
+        lanes_np = np.full((D, v), scratch, np.int32)
+        pages_np = np.full((D, v, g), batched.SCRATCH_PAGE, np.int32)
+        for d, act in enumerate(per_dev):
+            for i, (slot, pt) in enumerate(act):
+                lanes_np[d, i] = slot
+                pages_np[d, i, : len(pt)] = pt
+        sync = _SyncGroup(
+            g=g, v=v,
+            lanes=jax.device_put(jnp.asarray(lanes_np), sh_mat),
+            pages=jax.device_put(jnp.asarray(pages_np), sh_tab))
+
+        owner_np = np.zeros((self.slots + 1,), np.int32)
+        for slot, _ in active:
+            owner_np[slot] = self.lane_dev[slot]
+        plan = _Plan(runs, sync, live, swept)
+        plan.args = [jax.device_put(jnp.asarray(owner_np), sh_rep)]
+        for r in plan.runs:
+            plan.args += [r.lanes, r.pages, r.rows, r.n_rows]
+        plan.args += [sync.lanes, sync.pages]
+        return plan
 
 
 class SolveEngine:
@@ -370,9 +564,24 @@ class SolveEngine:
                  keep: int = 3, max_fuse: int | None = None,
                  retain_done: int | None = None,
                  pool_high_water: float | None = 2.0,
-                 journal_every: int | None = None):
+                 journal_every: int | None = None,
+                 devices: int | None = None):
         if lanes < 1:
             raise ValueError(f"lanes must be >= 1, got {lanes}")
+        if devices is not None and devices < 1:
+            raise ValueError(f"devices must be >= 1, got {devices}")
+        self.n_dev = int(devices or 1)
+        if self.n_dev > 1:
+            avail = jax.devices()
+            if len(avail) < self.n_dev:
+                raise ValueError(
+                    f"devices={self.n_dev} but only {len(avail)} JAX "
+                    f"device(s) are visible; on CPU, launch with "
+                    f"XLA_FLAGS=--xla_force_host_platform_device_count="
+                    f"{self.n_dev} (must be set before jax initializes)")
+            self.mesh = Mesh(np.array(avail[:self.n_dev]), ("pool",))
+        else:
+            self.mesh = None
         if retain_done is not None and retain_done < 0:
             raise ValueError(
                 f"retain_done must be >= 0 or None, got {retain_done}")
@@ -417,6 +626,10 @@ class SolveEngine:
         # cumulative row-sweep slot accounting (see pad_stats)
         self.swept_slots = 0
         self.swept_slots_live = 0
+        # fused pass counts as device-resident constants, keyed by r: the
+        # fused dispatch re-sends the same committed scalar instead of
+        # re-wrapping a host int (a host->device transfer) every step
+        self._r_cache: dict[int, jnp.ndarray] = {}
         self._next = 0
         self._done_seq = 0
         self.ckpt = (CheckpointManager(checkpoint_dir, keep=keep)
@@ -528,7 +741,7 @@ class SolveEngine:
                 pool.shrink_to_fit()
                 continue
             ops = batched.get_pool_ops(pool.obj, pool.key, pool.slots,
-                                       pool.capacity)
+                                       pool.capacity, pool.mesh)
             cfg = batched.key_config(pool.key)
             remaining = [cfg.n_passes - self.jobs[j].passes_done
                          for j in pool.job_ids if j is not None]
@@ -538,8 +751,11 @@ class SolveEngine:
             if pool.plan is None:
                 pool.plan = pool.build_plan()
             plan = pool.plan
+            # plan.args and the r constant are device-resident and cached:
+            # steady-state stepping is one async dispatch re-sending the
+            # same buffers — no per-step host wrap, transfer, or sync
             pool.state = ops.fused_step(*plan.signature())(
-                pool.state, jnp.asarray(r, jnp.int32), *plan.step_args())
+                pool.state, self._r_const(r), *plan.args)
             self.swept_slots += r * plan.swept_slots
             self.swept_slots_live += r * plan.live_slots
             for job_id in pool.job_ids:
@@ -573,6 +789,16 @@ class SolveEngine:
         return [self.submit(s) for s in specs]
 
     # -------------------------------------------------------------- internals
+    def _r_const(self, r: int) -> jnp.ndarray:
+        arr = self._r_cache.get(r)
+        if arr is None:
+            arr = jnp.asarray(r, jnp.int32)
+            if self.mesh is not None:
+                arr = jax.device_put(
+                    arr, NamedSharding(self.mesh, PartitionSpec()))
+            self._r_cache[r] = arr
+        return arr
+
     def _locate(self, job_id: str) -> tuple[LanePool | None, int]:
         for pool in self.pools.values():
             if job_id in pool.job_ids:
@@ -582,8 +808,10 @@ class SolveEngine:
     def _release_lane(self, pool: LanePool, slot: int):
         pool.job_ids[slot] = None
         if pool.page_table[slot]:
-            pool.release_pages(pool.page_table[slot])
+            pool.release_pages(pool.page_table[slot],
+                               pool.lane_dev[slot] or 0)
         pool.page_table[slot] = None
+        pool.lane_dev[slot] = None
         pool.plan = None
 
     def _next_done_seq(self) -> int:
@@ -609,16 +837,19 @@ class SolveEngine:
             if pool is None:
                 pool = LanePool(key=key, obj=self.objectives[spec.objective],
                                 lanes=self.lanes,
-                                high_water=self.pool_high_water)
+                                high_water=self.pool_high_water,
+                                mesh=self.mesh, n_dev=self.n_dev)
                 self.pools[key] = pool
                 self.family_keys_seen.add(key)
             slot = pool.take_slot()      # slot plan sized to demand; a
             #                              whole-burst refill grows it in
             #                              one hop (device resize is staged)
             cfg = batched.key_config(key)
+            dev = pool.pick_device()     # whole lane on one device
             pool.job_ids[slot] = rec.job_id
+            pool.lane_dev[slot] = dev
             pool.page_table[slot] = pool.alloc_pages(
-                batched.pages_for(spec.n, cfg.block_size))
+                batched.pages_for(spec.n, cfg.block_size), dev)
             pool.plan = None
             rec.passes_done = 0
             rec.status = RUNNING
@@ -627,7 +858,7 @@ class SolveEngine:
             pool = self.pools[key]
             pool.materialize()
             ops = batched.get_pool_ops(pool.obj, key, pool.slots,
-                                       pool.capacity)
+                                       pool.capacity, pool.mesh)
             self._place(pool, ops, placed)
 
     def _place(self, pool: LanePool, ops: batched.PoolOps,
@@ -646,7 +877,7 @@ class SolveEngine:
         for slot, rec in placed:
             (x0_jobs if rec.spec.x0 is not None else members).append(
                 (slot, rec))
-        if members:
+        if members and pool.mesh is None:
             # one dispatch for the whole refill batch, gathered at the
             # deepest placed lane's page-count rung (short lanes' extra
             # columns are zeroed and land on the scratch page)
@@ -664,18 +895,68 @@ class SolveEngine:
                 pool.state, jnp.asarray(lanes_np), jnp.asarray(pages_np),
                 jnp.asarray(seeded), jnp.asarray(seeds),
                 jnp.asarray(n_valid))
+        elif members:
+            # sharded: still ONE dispatch for the whole refill batch —
+            # per-device tables at rungs unified across devices, each
+            # device writing its own lanes' pages and the owner psum
+            # re-replicating the slot scalars
+            D = pool.n_dev
+            by_dev: list[list[tuple[int, JobState]]] = \
+                [[] for _ in range(D)]
+            for slot, rec in members:
+                by_dev[pool.lane_dev[slot]].append((slot, rec))
+            g = max(batched.pad_ladder(len(pool.page_table[s]), 1)
+                    for s, _ in members)
+            v = max(batched.pad_ladder(max(len(m), 1), 1) for m in by_dev)
+            lanes_np = np.full((D, v), pool.slots, np.int32)
+            pages_np = np.full((D, v, g), batched.SCRATCH_PAGE, np.int32)
+            seeded = np.zeros((D, v), bool)
+            seeds = np.zeros((D, v), seed_dt)
+            n_valid = np.zeros((D, v), np.int32)
+            owner_np = np.zeros((pool.slots + 1,), np.int32)
+            for d, mem in enumerate(by_dev):
+                for i, (slot, rec) in enumerate(mem):
+                    lanes_np[d, i] = slot
+                    pt = pool.page_table[slot]
+                    pages_np[d, i, : len(pt)] = pt
+                    n_valid[d, i] = rec.spec.n
+                    owner_np[slot] = d
+                    if rec.spec.seed is not None:
+                        seeded[d, i] = True
+                        seeds[d, i] = seed_dt(rec.spec.seed & seed_mask)
+            pool.state = ops.place(g, v)(
+                pool.state, jnp.asarray(owner_np), jnp.asarray(lanes_np),
+                jnp.asarray(pages_np), jnp.asarray(seeded),
+                jnp.asarray(seeds), jnp.asarray(n_valid))
         for slot, rec in x0_jobs:        # explicit-x0 jobs: rare, per-lane
             spec = rec.spec
             pages = pool.page_table[slot]
             g = batched.pad_ladder(len(pages), 1)
-            pages_np = np.full((g,), batched.SCRATCH_PAGE, np.int32)
-            pages_np[: len(pages)] = pages
-            xrow = np.zeros((g * bsz,), jnp.dtype(self.dtype).name)
-            xrow[: spec.n] = np.asarray(spec.x0, xrow.dtype)
-            pool.state = ops.place_x(g)(
-                pool.state, jnp.asarray(slot, jnp.int32),
-                jnp.asarray(pages_np), jnp.asarray(xrow),
-                jnp.asarray(spec.n, jnp.int32))
+            if pool.mesh is None:
+                pages_np = np.full((g,), batched.SCRATCH_PAGE, np.int32)
+                pages_np[: len(pages)] = pages
+                xrow = np.zeros((g * bsz,), jnp.dtype(self.dtype).name)
+                xrow[: spec.n] = np.asarray(spec.x0, xrow.dtype)
+                pool.state = ops.place_x(g)(
+                    pool.state, jnp.asarray(slot, jnp.int32),
+                    jnp.asarray(pages_np), jnp.asarray(xrow),
+                    jnp.asarray(spec.n, jnp.int32))
+            else:
+                D, dev = pool.n_dev, pool.lane_dev[slot]
+                lane_np = np.full((D,), pool.slots, np.int32)
+                pages_np = np.full((D, g), batched.SCRATCH_PAGE, np.int32)
+                xrow = np.zeros((D, g * bsz), jnp.dtype(self.dtype).name)
+                nv_np = np.zeros((D,), np.int32)
+                lane_np[dev] = slot
+                pages_np[dev, : len(pages)] = pages
+                xrow[dev, : spec.n] = np.asarray(spec.x0, xrow.dtype)
+                nv_np[dev] = spec.n
+                owner_np = np.zeros((pool.slots + 1,), np.int32)
+                owner_np[slot] = dev
+                pool.state = ops.place_x(g)(
+                    pool.state, jnp.asarray(owner_np),
+                    jnp.asarray(lane_np), jnp.asarray(pages_np),
+                    jnp.asarray(xrow), jnp.asarray(nv_np))
 
     def _harvest(self, pool: LanePool, ops: batched.PoolOps) -> int:
         cfg = batched.key_config(pool.key)
@@ -688,10 +969,30 @@ class SolveEngine:
         # compact gather: ONE dispatch + one device sync for the FINISHING
         # lanes only — running and idle lanes aren't touched, so turnover
         # costs the finishers' pages instead of O(K * n_pad)
-        g, v, lanes_np, pages_np = _gather_tables(
-            [(s, pool.page_table[s]) for s, _ in fins], pool.slots)
-        f_all, x_all, hist_all = ops.finalize(g, v)(
-            pool.state, jnp.asarray(lanes_np), jnp.asarray(pages_np))
+        if pool.mesh is None:
+            g, v, lanes_np, pages_np = _gather_tables(
+                [(s, pool.page_table[s]) for s, _ in fins], pool.slots)
+            f_all, x_all, hist_all = ops.finalize(g, v)(
+                pool.state, jnp.asarray(lanes_np), jnp.asarray(pages_np))
+        else:
+            # sharded: finisher i's output row is computed by its resident
+            # device (row_dev) and replicated by the owner psum
+            D = pool.n_dev
+            g = batched.pad_ladder(
+                max(len(pool.page_table[s]) for s, _ in fins), 1)
+            v = batched.pad_ladder(len(fins), 1)
+            row_dev = np.zeros((v,), np.int32)
+            lanes_np = np.full((D, v), pool.slots, np.int32)
+            pages_np = np.full((D, v, g), batched.SCRATCH_PAGE, np.int32)
+            for i, (slot, _) in enumerate(fins):
+                d = pool.lane_dev[slot]
+                row_dev[i] = d
+                lanes_np[d, i] = slot
+                pt = pool.page_table[slot]
+                pages_np[d, i, : len(pt)] = pt
+            f_all, x_all, hist_all = ops.finalize(g, v)(
+                pool.state, jnp.asarray(row_dev), jnp.asarray(lanes_np),
+                jnp.asarray(pages_np))
         f_np = np.asarray(f_all)
         x_np = np.asarray(x_all)
         h_np = np.asarray(hist_all)
@@ -763,17 +1064,28 @@ class SolveEngine:
         """Elastic-pool footprint right now: materialized pages / lane
         slots across families and the device bytes they hold. With the
         default hysteresis these track live traffic — after a drain they
-        fall back toward empty instead of pinning the historical peak."""
+        fall back toward empty instead of pinning the historical peak.
+        Sharded engines additionally break the footprint down per device
+        (local pages, replicated slot rows, resident bytes)."""
         pages = slots = nbytes = 0
+        per_dev = [{"pages": 0, "slots": 0, "bytes": 0}
+                   for _ in range(self.n_dev)]
         for pool in self.pools.values():
             if pool.state is None:
                 continue
             pages += pool.state.pool.shape[0]
             slots += pool.state.aggs.shape[0] - 1
             nbytes += pool.device_bytes()
-        return {"pool_pages": pages, "pool_slots": slots,
-                "pool_device_bytes": nbytes,
-                "pool_high_water": self.pool_high_water}
+            for d, st in enumerate(pool.per_device_stats()):
+                for k in ("pages", "slots", "bytes"):
+                    per_dev[d][k] += st[k]
+        out = {"pool_pages": pages, "pool_slots": slots,
+               "pool_device_bytes": nbytes,
+               "pool_high_water": self.pool_high_water,
+               "devices": self.n_dev}
+        if self.n_dev > 1:
+            out["per_device"] = per_dev
+        return out
 
     # ------------------------------------------------------------ checkpoint
     def snapshot(self):
@@ -796,7 +1108,12 @@ class SolveEngine:
                 "capacity": pool.capacity,
                 "slots": pool.slots,
                 "job_ids": pool.job_ids,
+                # LOCAL page ids when sharded (n_dev > 1); lane_dev maps
+                # each slot to its resident device — together the
+                # lane→(device, page) table, round-tripped exactly
                 "page_table": pool.page_table,
+                "n_dev": pool.n_dev,
+                "lane_dev": pool.lane_dev,
             })
         # journal records at or below this seq are reflected in this
         # snapshot's job table; resume replays only what came after
@@ -805,6 +1122,7 @@ class SolveEngine:
         aux = {
             "version": 2,
             "lanes": self.lanes,
+            "devices": self.n_dev,
             "max_fuse": self.max_fuse,
             "retain_done": self.retain_done,
             "pool_high_water": self.pool_high_water,
@@ -836,6 +1154,7 @@ class SolveEngine:
     def resume(cls, checkpoint_dir: str, *,
                objectives: dict[str, SeparableObjective] | None = None,
                keep: int = 3, ckpt_every: int = 1,
+               devices: int | None = None,
                **fresh_kw) -> "SolveEngine":
         """Rebuild an engine (jobs, queue, and mid-solve pools with their
         page tables) from the newest committed checkpoint in
@@ -848,13 +1167,18 @@ class SolveEngine:
         the first base). When a checkpoint IS found its recorded values
         win and ``fresh_kw`` is ignored — runtime knobs must round-trip
         the kill, or the resumed run would diverge from the uninterrupted
-        one."""
+        one. ``devices`` is the exception: it is *topology*, not
+        semantics — a snapshot cut on D devices resumes on D' by
+        remapping every lane's pages onto the new shards host-side
+        (reshard on load), and per-job results still match the
+        uninterrupted run bit-for-bit, because per-lane math is placement-
+        invariant."""
         probe = CheckpointManager(checkpoint_dir, keep=keep)
         step = probe.latest_step()
         if step is None:
             eng = cls(checkpoint_dir=checkpoint_dir, keep=keep,
                       ckpt_every=ckpt_every, objectives=objectives,
-                      **fresh_kw)
+                      devices=devices, **fresh_kw)
             # a kill can land before the first base snapshot: submissions
             # are journal-only at that point, so replay them into the
             # fresh engine instead of silently dropping the queue (only
@@ -882,7 +1206,9 @@ class SolveEngine:
                   # pre-elastic v2 snapshots lack the key entirely (class
                   # default applies); null means shrinking was disabled
                   pool_high_water=aux.get("pool_high_water", 2.0),
-                  journal_every=aux.get("journal_every"))
+                  journal_every=aux.get("journal_every"),
+                  devices=(devices if devices is not None
+                           else aux.get("devices", 1)))
         eng.step_count = aux["step_count"]
         eng.swept_slots = aux.get("swept_slots", 0)
         eng.swept_slots_live = aux.get("swept_slots_live", 0)
@@ -898,29 +1224,91 @@ class SolveEngine:
             key = (p["objective"], ABOConfig(**p["config"]), p["dtype"])
             # pre-elastic v2 snapshots sized every pool to the engine budget
             slots = p.get("slots", aux["lanes"])
-            like[f"p{i:03d}"] = batched.zeros_pool_state(
-                obj, key, slots, p["capacity"])
+            like[f"p{i:03d}"] = jax.eval_shape(
+                lambda o=obj, k=key, s=slots, c=p["capacity"]:
+                batched.zeros_pool_state(o, k, s, c))
             metas.append((key, obj, p, slots))
-        tree = probe.restore(step, like) if like else {}
+        tree = probe.restore_host(step, like) if like else {}
         for i, (key, obj, p, slots) in enumerate(metas):
-            page_table = [list(pt) if pt is not None else None
-                          for pt in p["page_table"]]
-            used = {pg for pt in page_table if pt for pg in pt}
-            used.add(batched.SCRATCH_PAGE)
-            pool = LanePool(
-                key=key, obj=obj, lanes=eng.lanes, slots=slots,
-                high_water=eng.pool_high_water, state=tree[f"p{i:03d}"],
-                capacity=p["capacity"], job_ids=list(p["job_ids"]),
-                page_table=page_table,
-                free_pages=sorted(set(range(p["capacity"])) - used))
-            eng.pools[key] = pool
-            eng.family_keys_seen.add(key)
+            eng._mount_pool(key, obj, p, slots, tree[f"p{i:03d}"])
         for d in aux.get("family_keys_seen", []):
             eng.family_keys_seen.add(
                 (d["objective"], ABOConfig(**d["config"]), d["dtype"]))
         if eng.journal_every is not None:
             eng._replay_journal(aux.get("journal_seq") or 0)
         return eng
+
+    def _mount_pool(self, key, obj, p: dict, slots: int, host_state):
+        """Attach one restored pool: remap its pages onto THIS engine's
+        device count if the snapshot's differs (reshard on load), place
+        the arrays (sharded when this engine has a mesh), and rebuild the
+        per-device free lists from the page tables."""
+        page_table = [list(pt) if pt is not None else None
+                      for pt in p["page_table"]]
+        # pre-sharded snapshots carry global==local ids and no lane_dev
+        lane_dev = list(p.get("lane_dev") or
+                        [0 if pt is not None else None
+                         for pt in page_table])
+        capacity = p["capacity"]
+        n_dev_old = p.get("n_dev", 1)
+        if n_dev_old != self.n_dev:
+            page_table, lane_dev, capacity, pool_np = self._reshard_pages(
+                n_dev_old, capacity, page_table, lane_dev,
+                np.asarray(host_state.pool))
+            host_state = dataclasses.replace(host_state, pool=pool_np)
+        if self.mesh is not None:
+            state = jax.device_put(host_state,
+                                   batched.state_sharding(self.mesh))
+        else:
+            state = jax.tree_util.tree_map(jnp.asarray, host_state)
+        cap_loc = capacity // self.n_dev
+        used = [set() for _ in range(self.n_dev)]
+        for pt, dev in zip(page_table, lane_dev):
+            if pt:
+                used[dev].update(pt)
+        free = [sorted(set(range(1, cap_loc)) - used[d])
+                for d in range(self.n_dev)]
+        pool = LanePool(
+            key=key, obj=obj, lanes=self.lanes, slots=slots,
+            high_water=self.pool_high_water, state=state,
+            capacity=capacity, mesh=self.mesh, n_dev=self.n_dev,
+            job_ids=list(p["job_ids"]), page_table=page_table,
+            lane_dev=lane_dev, free_pages=free)
+        self.pools[key] = pool
+        self.family_keys_seen.add(key)
+
+    def _reshard_pages(self, n_dev_old: int, capacity: int, page_table,
+                       lane_dev, pool_np):
+        """Host-side page remap for a device-count change: every live
+        lane lands whole on a new device (balanced by pages, slot order —
+        deterministic), its rows copy to fresh local ids, and the new
+        global pool array is rebuilt with one fancy-indexed row copy.
+        Content is moved, never recomputed, so mid-flight lane state
+        resumes bit-exactly on the new topology."""
+        cap_loc_old = capacity // n_dev_old
+        live = [0] * self.n_dev
+        next_local = [1] * self.n_dev        # local 0 = per-device scratch
+        new_pt = [None] * len(page_table)
+        new_dev = [None] * len(page_table)
+        src_idx, dst_rel = [], []            # dst_rel: (dev, local)
+        for slot, (pt, dev) in enumerate(zip(page_table, lane_dev)):
+            if pt is None:
+                continue
+            d = min(range(self.n_dev), key=lambda k: (live[k], k))
+            live[d] += len(pt)
+            start = next_local[d]
+            next_local[d] += len(pt)
+            new_pt[slot] = list(range(start, start + len(pt)))
+            new_dev[slot] = d
+            src_idx.extend((dev or 0) * cap_loc_old + pg for pg in pt)
+            dst_rel.extend((d, loc) for loc in new_pt[slot])
+        cap_loc_new = batched.pad_ladder(max(next_local), 1)
+        new_pool = np.zeros((self.n_dev * cap_loc_new, pool_np.shape[1]),
+                            pool_np.dtype)
+        if src_idx:
+            dst_idx = [d * cap_loc_new + loc for d, loc in dst_rel]
+            new_pool[np.asarray(dst_idx)] = pool_np[np.asarray(src_idx)]
+        return new_pt, new_dev, self.n_dev * cap_loc_new, new_pool
 
     def _replay_journal(self, after_seq: int):
         """Re-apply client inputs journaled after the restored base: new

@@ -78,6 +78,7 @@ class SolveService:
                      for j in eng.queue)
         from repro.engine import batched
         out = {"steps": eng.step_count, "lanes": eng.lanes,
+               "devices": eng.n_dev,
                "active_lanes": eng.active_lanes,
                "queued": queued, "jobs": by_status,
                "families": len(eng.pools),

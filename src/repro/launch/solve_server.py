@@ -20,6 +20,12 @@ row-compacted sweep touches only occupied block rows, and every n shares
 one compiled executable family — no pad rungs, no admission gating, no
 padded compute beyond the last block's tail. Per-job results are
 bit-identical to standalone ``abo_minimize`` at any lane/page layout.
+With ``--devices D`` the page pools shard across the first D JAX devices
+(on CPU: launch with XLA_FLAGS=--xla_force_host_platform_device_count=D
+so D host devices exist before jax initializes); lanes place whole per
+device, stepping is donated and zero-copy, and results stay bit-identical
+at every device count — a snapshot cut on one D resumes on another
+(reshard on load).
 ``--retain-done N`` bounds the job table: once a result has been
 delivered (or a job cancelled), only the N most recent such records are
 kept — eviction happens at delivery/cancel time, so ``--retain-done 0``
@@ -169,6 +175,14 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--jobs", type=int, default=32)
     ap.add_argument("--lanes", type=int, default=8)
+    ap.add_argument("--devices", type=int, default=None, metavar="D",
+                    help="shard each family's page pool across the first "
+                         "D JAX devices (lanes place whole onto the least-"
+                         "loaded device; results stay bit-identical at any "
+                         "D). On CPU, launch with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=D to "
+                         "expose D host devices. On resume, D overrides "
+                         "the snapshot's device count (reshard on load)")
     ap.add_argument("--n", default="1000",
                     help="problem size, or a comma list for a "
                          "heterogeneous-n workload (e.g. 500,1300,6000)")
@@ -219,6 +233,17 @@ def main(argv=None):
         if not args.ckpt_dir:
             ap.error("--journal-every requires --ckpt-dir (the journal is "
                      "an incremental layer over base snapshots)")
+    if args.devices is not None:
+        import jax
+        if args.devices < 1:
+            ap.error(f"--devices must be >= 1, got {args.devices}")
+        if args.devices > len(jax.devices()):
+            # usage error, not an engine traceback: the fix is the launch
+            # environment (XLA_FLAGS predates jax init), not the request
+            ap.error(f"--devices {args.devices} but only "
+                     f"{len(jax.devices())} JAX device(s) are visible; "
+                     "launch with XLA_FLAGS=--xla_force_host_platform_"
+                     f"device_count={args.devices}")
     if args.resume:
         if not args.ckpt_dir:
             ap.error("--resume requires --ckpt-dir (without it there is no "
@@ -230,13 +255,15 @@ def main(argv=None):
                                     lanes=args.lanes,
                                     retain_done=args.retain_done,
                                     pool_high_water=high_water,
-                                    journal_every=args.journal_every)
+                                    journal_every=args.journal_every,
+                                    devices=args.devices)
     else:
         engine = SolveEngine(lanes=args.lanes, checkpoint_dir=args.ckpt_dir,
                              ckpt_every=args.ckpt_every,
                              retain_done=args.retain_done,
                              pool_high_water=high_water,
-                             journal_every=args.journal_every)
+                             journal_every=args.journal_every,
+                             devices=args.devices)
     service = SolveService(engine)
 
     if args.http is not None:
@@ -276,6 +303,7 @@ def main(argv=None):
              "jobs_per_s": done / dt, "fe_per_s": fe / dt,
              "families": len(engine.pools),
              "families_created": len(engine.family_keys_seen),
+             "devices": engine.n_dev,
              "swept_waste": waste, **engine.memory_stats()}
     if engine.ckpt is not None and engine.journal_every is not None:
         stats["journal"] = engine.ckpt.journal_stats()

@@ -150,8 +150,10 @@ def test_pool_capacity_grows_on_ladder_and_pages_recycle():
                                                     seed=0)).fun
     assert eng.result(jb).fun == _dedicated(JobSpec(OBJ, 460, CFG,
                                                     seed=1)).fun
-    # every page returns to the free list; capacity is retained
-    assert pool.free_pages == list(range(1, 16))
+    # every page returns to the free list (per-device lists since the
+    # sharded-pool layout; unsharded pools have one device); capacity is
+    # retained
+    assert pool.free_pages == [list(range(1, 16))]
     # the scratch page stayed exactly zero through placement and sweeps
     assert not np.asarray(pool.state.pool[SCRATCH_PAGE]).any()
     # recycled pages serve the next job with identical results
