@@ -370,6 +370,87 @@ def engine_sharded():
                f"bit_identical={same_bits}")
 
 
+# ---- roofline: achieved vs peak DRAM bandwidth ----------------------------
+# The paper's model is a pure bandwidth roofline: pass throughput ~ DRAM
+# bandwidth / working-set bytes. This scenario measures how close the
+# fused engine sweep gets. Workload: few jobs x large n at a low sampling
+# rate, so the pass streams a multi-MB working set and probe arithmetic
+# can't hide the memory traffic. Three numbers land in BENCH_engine.json:
+#   bytes/coordinate/pass   from engine_est_bytes_moved_total (the
+#                           analytic obs.roofline model, accumulated at
+#                           dispatch time) over jobs*n*n_passes
+#   achieved bandwidth      est bytes / median drain wall time
+#   peak bandwidth          measured_peak_bandwidth() — best-of-N donated
+#                           x+1 stream on THIS backend, not a datasheet
+# plus an HLO cost_analysis cross-check of one dispatched pass against
+# the analytic plan.pass_bytes (order-of-magnitude only: XLA costs scan
+# bodies once and counts cache-resident traffic — see obs.roofline).
+ROOF_N = 400_000
+ROOF_JOBS = 4
+ROOF_LANES = 4
+ROOF_CFG = ABOConfig(samples_per_pass=5, n_passes=4, block_size=4096)
+
+
+def _roof_specs(seed0):
+    return [JobSpec(OBJ, ROOF_N, ROOF_CFG, seed=seed0 + i)
+            for i in range(ROOF_JOBS)]
+
+
+def engine_roofline():
+    from repro.engine import batched
+    from repro.obs.roofline import (hlo_bytes_accessed,
+                                    measured_peak_bandwidth)
+
+    peak = measured_peak_bandwidth()
+
+    # probe engine at max_fuse=1: one step dispatches exactly one pass,
+    # leaving a live plan to read pass_bytes from and to cross-check
+    # against XLA's cost model on the same (state, r=1, *args) signature
+    probe = SolveEngine(lanes=ROOF_LANES, max_fuse=1)
+    probe.submit_many(_roof_specs(0))
+    probe.step()
+    pool = next(p for p in probe.pools.values() if p.plan is not None)
+    plan = pool.plan
+    ops = batched.get_pool_ops(pool.obj, pool.key, pool.slots,
+                               pool.capacity, pool.mesh)
+    hlo = hlo_bytes_accessed(ops.fused_step(*plan.signature()),
+                             pool.state, probe._r_const(1), *plan.args)
+    plan_bytes = plan.pass_bytes
+
+    # timed drains: the median lap's engine carries the est-bytes counter
+    probe.run()                          # also warms the compile caches
+    runs = sorted((_engine(_roof_specs(1000 + r), ROOF_LANES)
+                   for r in range(REPEATS)), key=lambda t: t[0])
+    dt, eng = runs[len(runs) // 2]
+    est = eng.stats()["engine_est_bytes_moved_total"]
+    coord_passes = ROOF_JOBS * ROOF_N * ROOF_CFG.n_passes
+    bpcp = est / coord_passes            # incl. padding + sync residue;
+    #                                      the un-padded floor is
+    #                                      3*itemsize (r/w sweep + sync)
+    achieved = est / dt
+    _METRICS["engine_roofline"] = {
+        "jobs": ROOF_JOBS, "n": ROOF_N,
+        "n_passes": ROOF_CFG.n_passes,
+        "samples_per_pass": ROOF_CFG.samples_per_pass,
+        "block_size": ROOF_CFG.block_size,
+        "plan_pass_bytes": plan_bytes,
+        "hlo_pass_bytes": hlo,
+        "hlo_vs_plan": (hlo / plan_bytes) if hlo and plan_bytes else None,
+        "est_bytes_total": est,
+        "bytes_per_coordinate_per_pass": bpcp,
+        "dt_s": dt,
+        "achieved_gb_s": achieved / 1e9,
+        "peak_gb_s": peak / 1e9,
+        "achieved_vs_peak": achieved / peak,
+    }
+    yield (f"engine_roofline_k{ROOF_JOBS}", dt / ROOF_JOBS * 1e6,
+           f"bytes_per_coord_pass={bpcp:.1f} "
+           f"achieved_gb_s={achieved / 1e9:.2f} "
+           f"peak_gb_s={peak / 1e9:.2f} "
+           f"roofline_frac={achieved / peak:.3f} "
+           f"hlo_vs_plan={(hlo / plan_bytes) if hlo and plan_bytes else float('nan'):.2f}")
+
+
 def write_artifact(path: str | pathlib.Path = ARTIFACT) -> pathlib.Path:
     """Append this run's metrics to the JSON perf trajectory (a list of
     run records, newest last). Partial runs append whatever scenarios
@@ -401,6 +482,8 @@ def main():
     for name, us, derived in engine_elastic():
         print(f"{name},{us:.1f},{derived}")
     for name, us, derived in engine_mixed_n():
+        print(f"{name},{us:.1f},{derived}")
+    for name, us, derived in engine_roofline():
         print(f"{name},{us:.1f},{derived}")
     for name, us, derived in engine_sharded():
         print(f"{name},{us:.1f},{derived}")

@@ -20,7 +20,8 @@ def main() -> None:
                     help="paper-scale sizes (up to 1e9 decision variables)")
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table2,table3,kernels,abo_zo,"
-                         "engine,engine_mixed,engine_sharded")
+                         "engine,engine_mixed,engine_roofline,"
+                         "engine_sharded")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -54,13 +55,20 @@ def main() -> None:
     if want("engine_mixed"):
         from benchmarks.engine_bench import engine_mixed_n
         rows += list(engine_mixed_n())
+    if want("engine_roofline"):
+        # achieved vs measured-peak DRAM bandwidth of the fused sweep
+        # (analytic bytes/coordinate/pass + HLO cross-check)
+        # -> BENCH_engine.json
+        from benchmarks.engine_bench import engine_roofline
+        rows += list(engine_roofline())
     if want("engine_sharded"):
         # D=1 vs D=2/4 forced-host-device scaling of the sharded page
         # pools (spawns one child process per device count; bit-identity
         # digest-asserted) -> BENCH_engine.json
         from benchmarks.engine_bench import engine_sharded
         rows += list(engine_sharded())
-    if want("engine") or want("engine_mixed") or want("engine_sharded"):
+    if (want("engine") or want("engine_mixed") or want("engine_roofline")
+            or want("engine_sharded")):
         # machine-readable perf trajectory (jobs/s, speedup vs the
         # in-bench sequential lap, executable count, padded-compute waste)
         from benchmarks import engine_bench

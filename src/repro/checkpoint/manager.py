@@ -31,6 +31,7 @@ import json
 import pathlib
 import shutil
 import threading
+import time
 from typing import Any
 
 import jax
@@ -44,7 +45,12 @@ def _flatten(tree) -> tuple[list, Any]:
 
 class CheckpointManager:
     def __init__(self, directory: str | pathlib.Path, *, keep: int = 3,
-                 journal_segment_records: int = 1024):
+                 journal_segment_records: int = 1024, metrics=None):
+        """``metrics`` (an optional ``repro.obs.MetricsRegistry``) hooks
+        snapshot/journal instrumentation in: write-duration histogram,
+        snapshot and journal-record counters. Journal *gauges* (lag,
+        segments, bytes) are sampled by the owner at scrape time —
+        they cost file stats, which don't belong on the save path."""
         self.dir = pathlib.Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
@@ -53,6 +59,19 @@ class CheckpointManager:
         # (last seq, open-segment path, open-segment record count) — lazily
         # initialized from a directory scan on first journal use
         self._journal: tuple[int, pathlib.Path | None, int] | None = None
+        self._h_snapshot = (metrics.histogram(
+            "ckpt_snapshot_seconds", "whole-state snapshot write+commit")
+            if metrics is not None else None)
+        self._c_snapshots = (metrics.counter(
+            "ckpt_snapshots_total", "committed snapshots")
+            if metrics is not None else None)
+        self._c_journal_records = (metrics.counter(
+            "ckpt_journal_records_total", "journal records appended")
+            if metrics is not None else None)
+        self._c_journal_truncations = (metrics.counter(
+            "ckpt_journal_truncations_total",
+            "journal compactions after a base snapshot")
+            if metrics is not None else None)
 
     # ------------------------------------------------------------------ save
     def save(self, step: int, tree: Any, *, blocking: bool = True,
@@ -78,6 +97,7 @@ class CheckpointManager:
             self._thread = None
 
     def _write(self, step: int, leaves: list, treedef, aux: Any = None):
+        t0 = time.perf_counter()
         tmp = self.dir / f"step_{step:012d}.tmp"
         final = self.dir / f"step_{step:012d}"
         if tmp.exists():
@@ -100,6 +120,9 @@ class CheckpointManager:
             shutil.rmtree(final)
         tmp.rename(final)                         # atomic commit
         self._rotate()
+        if self._h_snapshot is not None:
+            self._h_snapshot.observe(time.perf_counter() - t0)
+            self._c_snapshots.inc()
 
     def _rotate(self):
         ckpts = sorted(self.dir.glob("step_*"))
@@ -251,6 +274,8 @@ class CheckpointManager:
             if fh is not None:
                 fh.close()
         self._journal = (seq, open_seg, count)
+        if self._c_journal_records is not None:
+            self._c_journal_records.inc(len(records))
         return seq
 
     def journal_entries(self, after_seq: int = 0) -> list[dict]:
@@ -285,6 +310,8 @@ class CheckpointManager:
             if seg == open_seg:
                 open_seg, count = None, 0
         self._journal = (max(seq, upto_seq), open_seg, count)
+        if self._c_journal_truncations is not None:
+            self._c_journal_truncations.inc()
 
     def journal_stats(self) -> dict:
         """Size/position of the live journal (post-compaction residue).

@@ -118,6 +118,14 @@ class JobState:
     done_seq: int | None = None      # engine-wide finish order (DONE or
     #                                  CANCELLED) — retention-window GC
     #                                  evicts delivered records oldest-first
+    # lifecycle wall-clock marks (time.time()), set by the engine as the
+    # job transitions: submit -> placed on a lane -> done -> first fetch.
+    # They feed the queued/run/fetch latency histograms and survive
+    # snapshots, so a resumed service's latency accounting spans the kill.
+    t_submit: float | None = None
+    t_place: float | None = None
+    t_done: float | None = None
+    t_fetch: float | None = None
 
     @property
     def n_passes(self) -> int:
@@ -163,6 +171,10 @@ class JobState:
             d["fun"] = self.fun
         if self.done_seq is not None:
             d["done_seq"] = self.done_seq
+        for k in ("t_submit", "t_place", "t_done", "t_fetch"):
+            v = getattr(self, k)
+            if v is not None:
+                d[k] = v
         if self.fetched:
             d["fetched"] = True
         elif self.x is not None and self.x.size <= self.AUX_X_MAX_N:
@@ -179,7 +191,9 @@ class JobState:
                    status=d["status"], passes_done=d.get("passes_done", 0),
                    history=list(d.get("history", [])), fun=d.get("fun"),
                    x=x, fetched=d.get("fetched", False),
-                   done_seq=d.get("done_seq"))
+                   done_seq=d.get("done_seq"),
+                   t_submit=d.get("t_submit"), t_place=d.get("t_place"),
+                   t_done=d.get("t_done"), t_fetch=d.get("t_fetch"))
 
 
 def next_job_id(counter: int) -> str:

@@ -73,6 +73,7 @@ journal segments it covers (compaction).
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Any, Iterable
 
@@ -82,6 +83,9 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.checkpoint.manager import CheckpointManager
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.roofline import plan_pass_bytes
+from repro.obs.trace import Tracer
 from repro.core.abo import ABOConfig
 from repro.engine import batched
 from repro.engine.jobs import (CANCELLED, DONE, J_CANCEL, J_FETCHED,
@@ -133,6 +137,10 @@ class _Plan:
     # stepping re-sends the same device-resident arrays every fused
     # dispatch instead of re-wrapping host indices per step
     args: list = dataclasses.field(default_factory=list)
+    # analytic DRAM bytes one pass of this plan moves (obs.roofline):
+    # computed once from plan shapes at build time, accumulated into
+    # engine_est_bytes_moved_total per dispatch — never a device read
+    pass_bytes: int = 0
 
     def signature(self) -> tuple:
         """The compiled shape of this plan: band + sync rungs only. Plans
@@ -275,15 +283,20 @@ class LanePool:
         self.free_pages[dev].extend(pages)
         self.free_pages[dev].sort()          # deterministic reassignment
 
-    def materialize(self):
+    def materialize(self) -> bool:
         """Reconcile the device state to the host plan (slots, capacity)
-        — growing OR shrinking; a no-op when shapes already match."""
+        — growing OR shrinking; a no-op when shapes already match.
+        Returns True when the device arrays actually changed (the engine
+        counts these as pool resizes)."""
         if self.state is None:
             self.state = batched.zeros_pool_state(
                 self.obj, self.key, self.slots, self.capacity, self.mesh)
-        else:
-            self.state = batched.resize_pool_state(
-                self.state, self.slots, self.capacity, self.mesh)
+            return True
+        new = batched.resize_pool_state(
+            self.state, self.slots, self.capacity, self.mesh)
+        changed = new is not self.state
+        self.state = new
+        return changed
 
     def shrink_to_fit(self):
         """Release free capacity past the high-water hysteresis. Called
@@ -294,9 +307,10 @@ class LanePool:
         actually returns. Only tails can go (ids are stable); interior
         free pages wait for the lanes pinning higher ids to drain.
         Sharded pools cut every shard to the ladder rung covering the
-        deepest-loaded device (shards stay equal-height)."""
+        deepest-loaded device (shards stay equal-height). Returns True
+        when device arrays were actually resized."""
         if self.high_water is None or self.state is None:
-            return
+            return False
         top = max((i for i, j in enumerate(self.job_ids) if j is not None),
                   default=-1)
         slot_target = min(batched.pad_ladder(max(top + 1, 1), 1), self.lanes)
@@ -318,7 +332,7 @@ class LanePool:
             self.free_pages = [[p for p in fp if p < loc_target]
                                for fp in self.free_pages]
             self.plan = None
-        self.materialize()
+        return self.materialize()
 
     def _slot_bytes(self) -> int:
         return sum(leaf.size * leaf.dtype.itemsize
@@ -471,6 +485,9 @@ class LanePool:
             for r in plan.runs:
                 plan.args += [r.lanes, r.pages, r.rows, r.n_rows]
             plan.args += [sync.lanes, sync.pages]
+            plan.pass_bytes = plan_pass_bytes(
+                plan, batched.key_config(self.key).block_size,
+                jnp.dtype(self.key[2]).itemsize)
             return plan
         return self._build_plan_sharded(active, scratch)
 
@@ -544,6 +561,9 @@ class LanePool:
         for r in plan.runs:
             plan.args += [r.lanes, r.pages, r.rows, r.n_rows]
         plan.args += [sync.lanes, sync.pages]
+        plan.pass_bytes = plan_pass_bytes(
+            plan, batched.key_config(self.key).block_size,
+            jnp.dtype(self.key[2]).itemsize)
         return plan
 
 
@@ -632,7 +652,48 @@ class SolveEngine:
         self._r_cache: dict[int, jnp.ndarray] = {}
         self._next = 0
         self._done_seq = 0
-        self.ckpt = (CheckpointManager(checkpoint_dir, keep=keep)
+        # telemetry (obs/): registry + tracer are always present; the
+        # tracer is disabled (null spans) until trace()/--trace enables
+        # it, and every hot-path instrument is cached as an attribute so
+        # a step pays attribute-add cost, never name resolution
+        self.metrics = MetricsRegistry()
+        self.tracer = Tracer()
+        m = self.metrics
+        self._c_steps = m.counter(
+            "engine_steps_total", "engine step() calls")
+        self._c_passes = m.counter(
+            "engine_passes_total", "fused ABO passes dispatched, summed "
+            "over pools (r per dispatch)")
+        self._c_submitted = m.counter(
+            "engine_jobs_submitted_total", "jobs accepted by submit()")
+        self._c_done = m.counter(
+            "engine_jobs_done_total", "jobs finished")
+        self._c_cancelled = m.counter(
+            "engine_jobs_cancelled_total", "jobs cancelled")
+        self._c_plan_builds = m.counter(
+            "engine_plan_builds_total", "sweep-plan rebuilds (occupancy "
+            "changes)")
+        self._c_resizes = m.counter(
+            "engine_pool_resizes_total", "device-array pool resizes "
+            "(grow or shrink)")
+        self._c_pages_alloc = m.counter(
+            "engine_pages_allocated_total", "pool pages bound to lanes")
+        self._c_pages_freed = m.counter(
+            "engine_pages_released_total", "pool pages returned to the "
+            "free lists")
+        self._c_est_bytes = m.counter(
+            "engine_est_bytes_moved_total", "analytic DRAM bytes moved "
+            "by dispatched sweeps (obs.roofline model)")
+        self._h_queued = m.histogram(
+            "engine_job_queued_seconds", "submit -> placed on a lane")
+        self._h_run = m.histogram(
+            "engine_job_run_seconds", "placed -> done")
+        self._h_total = m.histogram(
+            "engine_job_total_seconds", "submit -> done")
+        self._h_fetch = m.histogram(
+            "engine_job_fetch_seconds", "done -> first result fetch")
+        self.ckpt = (CheckpointManager(checkpoint_dir, keep=keep,
+                                       metrics=self.metrics)
                      if checkpoint_dir else None)
         self.ckpt_every = max(ckpt_every, 1)
 
@@ -653,8 +714,10 @@ class SolveEngine:
                 f"{sorted(self.objectives)}")
         job_id = next_job_id(self._next)
         self._next += 1
-        self.jobs[job_id] = JobState(job_id=job_id, spec=spec)
+        self.jobs[job_id] = JobState(job_id=job_id, spec=spec,
+                                     t_submit=time.time())
         self.queue.append(job_id)
+        self._c_submitted.inc()
         self._journal(J_SUBMIT, job_id, spec=spec.to_dict())
         return job_id
 
@@ -666,6 +729,7 @@ class SolveEngine:
         first = rec.status == DONE and not rec.fetched
         out = rec.result()               # raises unless DONE; marks fetched
         if first:
+            self._mark_fetch_time(rec)
             self._journal(J_FETCHED, job_id)
             self._gc_jobs()              # delivery can trigger eviction NOW:
         return out                       # retain_done=0 must not wait for a
@@ -679,14 +743,22 @@ class SolveEngine:
         rec = self.jobs.get(job_id)
         if rec is not None and rec.status == DONE and not rec.fetched:
             rec.fetched = True
+            self._mark_fetch_time(rec)
             self._journal(J_FETCHED, job_id)
             self._gc_jobs()
+
+    def _mark_fetch_time(self, rec: JobState):
+        if rec.t_fetch is None:
+            rec.t_fetch = time.time()
+            if rec.t_done is not None:
+                self._h_fetch.observe(rec.t_fetch - rec.t_done)
 
     def cancel(self, job_id: str) -> bool:
         rec = self.jobs[job_id]
         if rec.status == QUEUED:
             rec.status = CANCELLED
             rec.done_seq = self._next_done_seq()
+            self._c_cancelled.inc()
             try:                         # purge now, not at the next refill:
                 self.queue.remove(job_id)   # stale ids would otherwise show
             except ValueError:              # up as phantom queued work in
@@ -701,6 +773,7 @@ class SolveEngine:
                 pool.shrink_to_fit()
             rec.status = CANCELLED       # stale device state is benign: the
             rec.done_seq = self._next_done_seq()   # slot leaves every plan
+            self._c_cancelled.inc()
             self._journal(J_CANCEL, job_id)
             self._gc_jobs()
             return True
@@ -730,50 +803,75 @@ class SolveEngine:
         lane sync, times r passes — is ONE async dispatch of the plan
         signature's fused-step executable.
         """
-        self._refill()
-        finished = 0
-        for pool in self.pools.values():
-            if pool.active == 0:
-                # idle families still release capacity: a pool that
-                # drained while OTHER families had queued work skipped
-                # the harvest-time shrink and would otherwise pin its
-                # peak footprint forever (cheap no-op once shrunk)
-                pool.shrink_to_fit()
-                continue
-            ops = batched.get_pool_ops(pool.obj, pool.key, pool.slots,
-                                       pool.capacity, pool.mesh)
-            cfg = batched.key_config(pool.key)
-            remaining = [cfg.n_passes - self.jobs[j].passes_done
-                         for j in pool.job_ids if j is not None]
-            r = max(min(remaining), 1)
-            if self.max_fuse is not None:
-                r = min(r, self.max_fuse)
-            if pool.plan is None:
-                pool.plan = pool.build_plan()
-            plan = pool.plan
-            # plan.args and the r constant are device-resident and cached:
-            # steady-state stepping is one async dispatch re-sending the
-            # same buffers — no per-step host wrap, transfer, or sync
-            pool.state = ops.fused_step(*plan.signature())(
-                pool.state, self._r_const(r), *plan.args)
-            self.swept_slots += r * plan.swept_slots
-            self.swept_slots_live += r * plan.live_slots
-            for job_id in pool.job_ids:
-                if job_id is not None:
-                    self.jobs[job_id].passes_done += r
-            finished += self._harvest(pool, ops)
-        self.step_count += 1
-        self._gc_jobs()
-        if self.ckpt is not None:
-            if self.journal_every is not None:
-                # journal mode: whole-state snapshots become rare BASES;
-                # the journal already holds every client input since the
-                # last one, so a kill between bases re-derives everything
-                # (at the cost of re-running post-base passes)
-                if self.step_count % self.journal_every == 0:
-                    self._snapshot()
-            elif self.step_count % self.ckpt_every == 0:
-                self._snapshot()
+        tr = self.tracer
+        with tr.span("step", step=self.step_count) as step_sp:
+            with tr.span("refill"):
+                self._refill()
+            finished = 0
+            for pool in self.pools.values():
+                if pool.active == 0:
+                    # idle families still release capacity: a pool that
+                    # drained while OTHER families had queued work skipped
+                    # the harvest-time shrink and would otherwise pin its
+                    # peak footprint forever (cheap no-op once shrunk)
+                    with tr.span("resize", family=pool.key[0]) as sp:
+                        resized = pool.shrink_to_fit()
+                        sp.set(resized=resized)
+                    if resized:
+                        self._c_resizes.inc()
+                    continue
+                ops = batched.get_pool_ops(pool.obj, pool.key, pool.slots,
+                                           pool.capacity, pool.mesh)
+                cfg = batched.key_config(pool.key)
+                remaining = [cfg.n_passes - self.jobs[j].passes_done
+                             for j in pool.job_ids if j is not None]
+                r = max(min(remaining), 1)
+                if self.max_fuse is not None:
+                    r = min(r, self.max_fuse)
+                if pool.plan is None:
+                    with tr.span("plan_build", family=pool.key[0],
+                                 active=pool.active):
+                        pool.plan = pool.build_plan()
+                    self._c_plan_builds.inc()
+                plan = pool.plan
+                # plan.args and the r constant are device-resident and
+                # cached: steady-state stepping is one async dispatch
+                # re-sending the same buffers — no per-step host wrap,
+                # transfer, or sync (the fused_sweep span measures
+                # dispatch, not device completion, for the same reason)
+                with tr.span("fused_sweep", family=pool.key[0], passes=r,
+                             swept_rows=plan.swept_slots,
+                             est_bytes=r * plan.pass_bytes):
+                    pool.state = ops.fused_step(*plan.signature())(
+                        pool.state, self._r_const(r), *plan.args)
+                self.swept_slots += r * plan.swept_slots
+                self.swept_slots_live += r * plan.live_slots
+                self._c_passes.inc(r)
+                self._c_est_bytes.inc(r * plan.pass_bytes)
+                for job_id in pool.job_ids:
+                    if job_id is not None:
+                        self.jobs[job_id].passes_done += r
+                with tr.span("harvest", family=pool.key[0]) as sp:
+                    got = self._harvest(pool, ops)
+                    sp.set(finished=got)
+                finished += got
+            self.step_count += 1
+            self._c_steps.inc()
+            self._gc_jobs()
+            if self.ckpt is not None:
+                if self.journal_every is not None:
+                    # journal mode: whole-state snapshots become rare
+                    # BASES; the journal already holds every client input
+                    # since the last one, so a kill between bases
+                    # re-derives everything (at the cost of re-running
+                    # post-base passes)
+                    if self.step_count % self.journal_every == 0:
+                        with tr.span("snapshot", step=self.step_count):
+                            self._snapshot()
+                elif self.step_count % self.ckpt_every == 0:
+                    with tr.span("snapshot", step=self.step_count):
+                        self._snapshot()
+            step_sp.set(finished=finished)
         return finished
 
     def run(self, max_steps: int | None = None) -> int:
@@ -808,6 +906,7 @@ class SolveEngine:
     def _release_lane(self, pool: LanePool, slot: int):
         pool.job_ids[slot] = None
         if pool.page_table[slot]:
+            self._c_pages_freed.inc(len(pool.page_table[slot]))
             pool.release_pages(pool.page_table[slot],
                                pool.lane_dev[slot] or 0)
         pool.page_table[slot] = None
@@ -850,13 +949,21 @@ class SolveEngine:
             pool.lane_dev[slot] = dev
             pool.page_table[slot] = pool.alloc_pages(
                 batched.pages_for(spec.n, cfg.block_size), dev)
+            self._c_pages_alloc.inc(len(pool.page_table[slot]))
             pool.plan = None
             rec.passes_done = 0
             rec.status = RUNNING
+            rec.t_place = time.time()
+            if rec.t_submit is not None:
+                self._h_queued.observe(rec.t_place - rec.t_submit)
             staged.setdefault(key, []).append((slot, rec))
         for key, placed in staged.items():
             pool = self.pools[key]
-            pool.materialize()
+            with self.tracer.span("resize", family=key[0]) as sp:
+                resized = pool.materialize()
+                sp.set(resized=resized)
+            if resized:
+                self._c_resizes.inc()
             ops = batched.get_pool_ops(pool.obj, key, pool.slots,
                                        pool.capacity, pool.mesh)
             self._place(pool, ops, placed)
@@ -996,17 +1103,24 @@ class SolveEngine:
         f_np = np.asarray(f_all)
         x_np = np.asarray(x_all)
         h_np = np.asarray(hist_all)
+        now = time.time()
         for i, (slot, rec) in enumerate(fins):
             rec.fun = float(f_np[i])
             rec.x = x_np[i, : rec.spec.n].copy()
             rec.history = [float(vv) for vv in h_np[i]]
             rec.status = DONE
             rec.done_seq = self._next_done_seq()
+            rec.t_done = now
+            if rec.t_place is not None:
+                self._h_run.observe(now - rec.t_place)
+            if rec.t_submit is not None:
+                self._h_total.observe(now - rec.t_submit)
             self._release_lane(pool, slot)       # refilled next step
+        self._c_done.inc(len(fins))
         if not self.queue:               # a true drain, not inter-generation
-            pool.shrink_to_fit()         # turnover mid-burst (phase-aligned
-        return len(fins)                 # lanes all finish together; the
-        #                                  next refill would regrow at once)
+            if pool.shrink_to_fit():     # turnover mid-burst (phase-aligned
+                self._c_resizes.inc()    # lanes all finish together; the
+        return len(fins)                 # next refill would regrow at once)
 
     def _gc_jobs(self):
         """Whole-record job-table GC: keep only the ``retain_done`` most
@@ -1066,7 +1180,14 @@ class SolveEngine:
         default hysteresis these track live traffic — after a drain they
         fall back toward empty instead of pinning the historical peak.
         Sharded engines additionally break the footprint down per device
-        (local pages, replicated slot rows, resident bytes)."""
+        (local pages, replicated slot rows, resident bytes).
+
+        .. deprecated::
+            These keys are kept as aliases for existing callers; the
+            canonical snapshot is :meth:`stats` (the obs registry —
+            ``engine_pool_pages`` / ``engine_pool_device_bytes`` /
+            ``engine_device_bytes{device=...}`` carry the same census).
+        """
         pages = slots = nbytes = 0
         per_dev = [{"pages": 0, "slots": 0, "bytes": 0}
                    for _ in range(self.n_dev)]
@@ -1086,6 +1207,90 @@ class SolveEngine:
         if self.n_dev > 1:
             out["per_device"] = per_dev
         return out
+
+    # ------------------------------------------------------------- telemetry
+    def trace(self, path: str | None = None):
+        """Enable pass-level span tracing (``path`` becomes the default
+        Chrome-trace export target for :meth:`trace_export`). Until this
+        is called every span is the shared null span — tracing costs one
+        attribute check per phase."""
+        self.tracer.enable(path)
+
+    def trace_export(self, path: str | None = None) -> str:
+        """Write recorded spans as Chrome trace-event JSON (loadable in
+        chrome://tracing or Perfetto); returns the path written."""
+        return self.tracer.export(path)
+
+    def _refresh_gauges(self):
+        """Sample device-derived and O(pools) gauges into the registry.
+
+        Runs at stats/scrape boundaries ONLY — never on the step hot
+        path: it walks pool shapes (host metadata, no device reads) and,
+        in journal mode, stats the journal files."""
+        g = self.metrics.gauge
+        queued = sum(j in self.jobs and self.jobs[j].status == QUEUED
+                     for j in self.queue)
+        g("engine_active_lanes", "lanes bound to running jobs").set(
+            self.active_lanes)
+        g("engine_lane_budget", "engine-wide concurrent-lane cap").set(
+            self.lanes)
+        g("engine_queue_depth", "truly-QUEUED jobs awaiting a lane").set(
+            queued)
+        g("engine_families", "live lane pools").set(len(self.pools))
+        g("engine_families_created",
+          "distinct executable families ever opened").set(
+            len(self.family_keys_seen))
+        g("engine_executables", "compiled pool executables").set(
+            batched.compiled_executable_count(self.family_keys_seen))
+        ps = self.pad_stats()
+        g("engine_fill_ratio", "true n / paged n over active lanes").set(
+            ps["fill_ratio"] or 0.0)
+        g("engine_swept_waste_ratio",
+          "padded fraction of cumulative swept rows").set(
+            ps["swept_waste"] or 0.0)
+        ms = self.memory_stats()
+        g("engine_pool_pages", "materialized pool pages").set(
+            ms["pool_pages"])
+        g("engine_pool_slots", "materialized lane slots").set(
+            ms["pool_slots"])
+        g("engine_pool_device_bytes",
+          "device bytes held by pool arrays").set(ms["pool_device_bytes"])
+        per_dev = [{"pages": 0, "slots": 0, "bytes": 0}
+                   for _ in range(self.n_dev)]
+        for pool in self.pools.values():
+            for d, st in enumerate(pool.per_device_stats()):
+                for k in ("pages", "slots", "bytes"):
+                    per_dev[d][k] += st[k]
+        for d, st in enumerate(per_dev):
+            g("engine_device_bytes", "resident pool bytes per device",
+              device=d).set(st["bytes"])
+            g("engine_device_pages", "local pool pages per device",
+              device=d).set(st["pages"])
+        if self.ckpt is not None and self.journal_every is not None:
+            js = self.ckpt.journal_stats()
+            g("ckpt_journal_segments", "live journal segment files").set(
+                js["segments"])
+            g("ckpt_journal_lag_records",
+              "journal records not yet covered by a base snapshot").set(
+                js["records"])
+            g("ckpt_journal_bytes", "journal bytes on disk").set(
+                js["bytes"])
+
+    def stats(self) -> dict:
+        """The canonical flat telemetry snapshot: every registry counter,
+        gauge (freshly sampled), and histogram summary, keyed by metric
+        name (labeled metrics render as ``name{k="v"}``). This is the one
+        source of truth; ``memory_stats()`` / ``pad_stats()`` /
+        ``SolveService.stats()`` keep their historical keys as aliases
+        over the same census."""
+        self._refresh_gauges()
+        return self.metrics.snapshot()
+
+    def render_prometheus(self) -> str:
+        """Prometheus text exposition of the registry (gauges freshly
+        sampled) — what ``solve_server``'s ``/metrics`` endpoint serves."""
+        self._refresh_gauges()
+        return self.metrics.render_prometheus()
 
     # ------------------------------------------------------------ checkpoint
     def snapshot(self):

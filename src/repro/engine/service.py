@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.engine.jobs import CANCELLED, DONE, QUEUED, JobSpec
+from repro.engine.jobs import CANCELLED, DONE, JobSpec
 from repro.engine.scheduler import SolveEngine
 
 
@@ -66,30 +66,43 @@ class SolveService:
                 "status": rec.status if rec is not None else CANCELLED}
 
     def stats(self) -> dict:
+        """Service stats: the historical flat keys plus the canonical
+        registry snapshot under ``"metrics"``.
+
+        The canonical source is ``SolveEngine.stats()`` (the obs metrics
+        registry — one census, sampled here once). The top-level keys
+        (``steps``, ``active_lanes``, ``pool_device_bytes``, ...) are
+        kept as ALIASES for existing clients and tests.
+
+        .. deprecated::
+            New consumers should read ``out["metrics"]`` (or scrape
+            ``/metrics``); the aliases mirror it and won't grow new
+            fields.
+        """
         eng = self.engine
         by_status: dict[str, int] = {}
         for rec in eng.jobs.values():
             by_status[rec.status] = by_status.get(rec.status, 0) + 1
-        # count only truly-QUEUED ids: a job cancelled while queued may
-        # linger in eng.queue until a refill drains it (and resumed queues
-        # can carry such ids, or ids the retention GC already evicted) —
-        # len(eng.queue) overcounts
-        queued = sum(j in eng.jobs and eng.jobs[j].status == QUEUED
-                     for j in eng.queue)
-        from repro.engine import batched
+        snap = eng.stats()               # refreshes gauges; one census
         out = {"steps": eng.step_count, "lanes": eng.lanes,
                "devices": eng.n_dev,
-               "active_lanes": eng.active_lanes,
-               "queued": queued, "jobs": by_status,
-               "families": len(eng.pools),
-               "families_created": len(eng.family_keys_seen),
-               "executables": batched.compiled_executable_count(
-                   eng.family_keys_seen),
+               "active_lanes": int(snap["engine_active_lanes"]),
+               "queued": int(snap["engine_queue_depth"]),
+               "jobs": by_status,
+               "families": int(snap["engine_families"]),
+               "families_created": int(snap["engine_families_created"]),
+               "executables": int(snap["engine_executables"]),
                "retain_done": eng.retain_done,
-               **eng.pad_stats(), **eng.memory_stats()}
+               **eng.pad_stats(), **eng.memory_stats(),
+               "metrics": snap}
         if eng.ckpt is not None and eng.journal_every is not None:
             out["journal"] = eng.ckpt.journal_stats()
         return out
+
+    def prometheus(self) -> str:
+        """Prometheus text exposition of the engine registry (the
+        ``/metrics`` endpoint body)."""
+        return self.engine.render_prometheus()
 
     # ------------------------------------------------------------- execution
     def step(self) -> int:

@@ -48,9 +48,19 @@ no auth; hardening is a ROADMAP item). Endpoints:
     GET  /result?job_id=job-000000
     POST /cancel   {"job_id": "job-000000"}
     GET  /stats
+    GET  /metrics          # Prometheus text exposition of the registry
 
 Unknown job ids answer 404, malformed requests 400, and handler failures
-a JSON 500 — never a raw traceback.
+a JSON 500 — never a raw traceback. ``--verbose`` turns on access
+logging: one structured JSON line per request (method, path, status,
+duration_ms) on stdout — without it the server is silent, as before.
+
+Telemetry: ``--trace PATH`` enables the engine's pass-level span tracer
+and exports Chrome-trace-event JSON to PATH when the run ends (batch
+mode) or the server shuts down (HTTP mode) — load it in
+chrome://tracing or https://ui.perfetto.dev. ``--metrics-out PATH``
+writes a final Prometheus text snapshot of the metrics registry after a
+batch run (what CI uploads as a build artifact).
 """
 from __future__ import annotations
 
@@ -71,15 +81,18 @@ def _mixed_specs(n_jobs, objectives, ns, cfg, seed0=0):
             for i in range(n_jobs)]
 
 
-def _build_server(service: SolveService, port: int, poll_s: float = 0.01):
+def _build_server(service: SolveService, port: int, poll_s: float = 0.01,
+                  verbose: bool = False):
     """HTTP server + engine-stepper thread (not yet serving — callers run
     ``serve_forever``; tests drive it from their own thread and
     ``shutdown()`` it). The lock serializes engine access between the
-    stepper and request handlers."""
+    stepper and request handlers. ``verbose`` enables per-request access
+    logging (one structured JSON line on stdout)."""
     from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
     from urllib.parse import parse_qs, urlparse
 
     lock = threading.Lock()
+    c_requests = service.engine.metrics.counter
 
     def stepper():
         while True:
@@ -89,6 +102,21 @@ def _build_server(service: SolveService, port: int, poll_s: float = 0.01):
             time.sleep(poll_s)
 
     class Handler(BaseHTTPRequestHandler):
+        def _finish_request(self, code: int):
+            """Per-request accounting at the single reply choke point:
+            the http_requests_total counter always, and — with
+            --verbose — one structured access-log line."""
+            endpoint = self.path.split("?", 1)[0]
+            c_requests("http_requests_total", "HTTP requests served",
+                       endpoint=endpoint, status=code).inc()
+            if verbose:
+                print(json.dumps(
+                    {"method": self.command, "path": self.path,
+                     "status": code,
+                     "duration_ms": round(
+                         (time.perf_counter() - self._t0) * 1000, 3)}),
+                    flush=True)
+
         def _reply(self, payload, code=200):
             # unknown-id lookups are misses, not field-level soft errors
             if code == 200 and isinstance(payload, dict) \
@@ -100,9 +128,29 @@ def _build_server(service: SolveService, port: int, poll_s: float = 0.01):
             self.send_header("Content-Length", str(len(body)))
             self.end_headers()
             self.wfile.write(body)
+            self._finish_request(code)
 
-        def log_message(self, *a):      # quiet
+        def _reply_text(self, text: str, code=200,
+                        ctype="text/plain; version=0.0.4"):
+            body = text.encode()
+            self.send_response(code)
+            self.send_header("Content-Type", ctype)
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+            self._finish_request(code)
+
+        def log_request(self, *a):      # replaced by the JSON access log
             pass
+
+        def log_message(self, fmt, *a):
+            # stdlib handler internals (log_error) land here: verbose
+            # routes them to stderr, default stays quiet — the old
+            # unconditional silence hid even hard failures
+            if verbose:
+                import sys
+                print(f"[solve_server] {fmt % a}", file=sys.stderr,
+                      flush=True)
 
         def _guarded(self, fn):
             """Run a handler body; malformed input answers 400 and any
@@ -116,6 +164,7 @@ def _build_server(service: SolveService, port: int, poll_s: float = 0.01):
                 self._reply({"error": f"internal error: {e}"}, 500)
 
         def do_GET(self):
+            self._t0 = time.perf_counter()
             url = urlparse(self.path)
             q = parse_qs(url.query)
             job_id = q.get("job_id", [""])[0]
@@ -134,12 +183,15 @@ def _build_server(service: SolveService, port: int, poll_s: float = 0.01):
                             service.mark_fetched(job_id)
                     elif url.path == "/stats":
                         self._reply(service.stats())
+                    elif url.path == "/metrics":
+                        self._reply_text(service.prometheus())
                     else:
                         self._reply({"error": "unknown endpoint"}, 404)
 
             self._guarded(run)
 
         def do_POST(self):
+            self._t0 = time.perf_counter()
             length = int(self.headers.get("Content-Length", 0))
             try:
                 req = json.loads(self.rfile.read(length) or b"{}")
@@ -162,13 +214,21 @@ def _build_server(service: SolveService, port: int, poll_s: float = 0.01):
     return httpd, stepper_thread
 
 
-def _serve_http(service: SolveService, port: int, poll_s: float = 0.01):
-    """Demo JSON-over-HTTP front-end; blocks forever."""
-    httpd, stepper_thread = _build_server(service, port, poll_s)
+def _serve_http(service: SolveService, port: int, poll_s: float = 0.01,
+                verbose: bool = False):
+    """Demo JSON-over-HTTP front-end; blocks until interrupted."""
+    httpd, stepper_thread = _build_server(service, port, poll_s, verbose)
     stepper_thread.start()
     print(f"[solve_server] listening on "
           f"http://127.0.0.1:{httpd.server_address[1]}", flush=True)
-    httpd.serve_forever()
+    try:
+        httpd.serve_forever()
+    finally:
+        # a --trace run must not lose its spans to Ctrl-C
+        tracer = service.engine.tracer
+        if tracer.enabled and tracer.default_path:
+            print(f"[solve_server] trace -> {service.engine.trace_export()}",
+                  flush=True)
 
 
 def main(argv=None):
@@ -214,6 +274,16 @@ def main(argv=None):
     ap.add_argument("--http", type=int, default=None, metavar="PORT",
                     help="serve submit/poll/result over HTTP instead of "
                          "running a synthetic batch")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="enable pass-level span tracing and export "
+                         "Chrome-trace-event JSON to PATH when the run "
+                         "(or server) ends — load it in Perfetto")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a final Prometheus text snapshot of the "
+                         "metrics registry to PATH after a batch run")
+    ap.add_argument("--verbose", action="store_true",
+                    help="HTTP access logging: one structured JSON line "
+                         "per request (method, path, status, duration_ms)")
     args = ap.parse_args(argv)
 
     if args.retain_done is not None and args.retain_done < 0:
@@ -265,10 +335,12 @@ def main(argv=None):
                              journal_every=args.journal_every,
                              devices=args.devices)
     service = SolveService(engine)
+    if args.trace:
+        engine.trace(args.trace)
 
     if args.http is not None:
-        _serve_http(service, args.http)
-        return None                      # unreachable (serve_forever)
+        _serve_http(service, args.http, verbose=args.verbose)
+        return None                      # returns only on interrupt
 
     cfg = ABOConfig(samples_per_pass=args.samples, n_passes=args.passes,
                     block_size=args.block)
@@ -313,6 +385,13 @@ def main(argv=None):
           f"{0.0 if waste is None else waste:.1%} swept-row waste): "
           f"{stats['jobs_per_s']:.1f} jobs/s, {stats['fe_per_s']:.3g} "
           f"probe-FE/s", flush=True)
+    if args.trace:
+        print(f"[solve_server] trace -> {engine.trace_export()}",
+              flush=True)
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as fh:
+            fh.write(engine.render_prometheus())
+        print(f"[solve_server] metrics -> {args.metrics_out}", flush=True)
     return stats
 
 

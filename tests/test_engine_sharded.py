@@ -168,6 +168,54 @@ def test_sharded_donation_and_memory_subprocess():
     assert "OK" in out
 
 
+def test_per_device_census_gauges_subprocess():
+    """Satellite regression: the three per-device reporting surfaces —
+    ``per_device_stats()``, ``memory_stats()['per_device']`` totals, and
+    the ``engine_device_bytes{device=...}`` registry gauges — agree with
+    each other AND with a live-array census at D=1 and D=2 (one resident
+    pool copy per family; donation leaves no stragglers)."""
+    out = _run("""
+        import jax
+        import numpy as np
+        from repro.core import ABOConfig
+        from repro.engine.jobs import JobSpec
+        from repro.engine.scheduler import SolveEngine
+
+        cfg = ABOConfig(samples_per_pass=7, n_passes=3, block_size=8)
+        for D in (1, 2):
+            eng = SolveEngine(lanes=4, devices=D, max_fuse=1,
+                              pool_high_water=None)
+            eng.submit_many([JobSpec('sphere', 60 + 11 * i, cfg, seed=i)
+                             for i in range(6)])
+            eng.step()
+            jax.block_until_ready([p.state.pool
+                                   for p in eng.pools.values()])
+            ms = eng.memory_stats()
+            per = [p.per_device_stats() for p in eng.pools.values()]
+            by_dev = [sum(st[d]['bytes'] for st in per)
+                      for d in range(D)]
+            assert sum(by_dev) == ms['pool_device_bytes'], (D, by_dev)
+            snap = eng.stats()
+            assert snap['engine_pool_device_bytes'] \\
+                == ms['pool_device_bytes'], D
+            for d in range(D):
+                assert snap[f'engine_device_bytes{{device="{d}"}}'] \\
+                    == by_dev[d], (D, d)
+                assert snap[f'engine_device_pages{{device="{d}"}}'] \\
+                    == sum(st[d]['pages'] for st in per), (D, d)
+            # ground truth: exactly one resident pool-shaped buffer per
+            # family accounts for the pool term of the census
+            pool_shapes = {p.state.pool.shape for p in eng.pools.values()}
+            live = sum(a.nbytes for a in jax.live_arrays()
+                       if a.shape in pool_shapes and not a.is_deleted())
+            pool_bytes = sum(p.state.pool.nbytes
+                             for p in eng.pools.values())
+            assert live == pool_bytes, (D, live, pool_bytes)
+        print('OK')
+    """, devices=2)
+    assert "OK" in out
+
+
 # --------------------------------------------------- in-process (>=2 devices)
 @multi_device
 def test_sharded_inprocess_small():
