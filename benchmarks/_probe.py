@@ -11,7 +11,6 @@ import argparse
 import json
 import os
 import resource
-import sys
 import time
 
 
@@ -31,7 +30,6 @@ def main():
 
     if args.dtype == "float64":
         os.environ["JAX_ENABLE_X64"] = "1"
-    import jax
     import jax.numpy as jnp
     from repro.core import ABOConfig, abo_minimize
     from repro.objectives import GRIEWANK, griewank
@@ -47,11 +45,13 @@ def main():
                             block_size=min(4096, max(8, args.n)))
             if args.algo == "abo_kernel":
                 from repro.kernels.coord_sweep.ops import abo_minimize_kernel
-                run = lambda: abo_minimize_kernel(args.n, config=cfg,
-                                                  interpret=True)
+                def run():
+                    return abo_minimize_kernel(args.n, config=cfg,
+                                               interpret=True)
             else:
-                run = lambda: abo_minimize(GRIEWANK, args.n, config=cfg,
-                                           dtype=dtype, seed=args.seed)
+                def run():
+                    return abo_minimize(GRIEWANK, args.n, config=cfg,
+                                        dtype=dtype, seed=args.seed)
             r = run()                      # wall (includes compile)
             wall = time.time() - t0
             t1 = time.time()

@@ -9,8 +9,6 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 
 def abo_zo_vs_adamw(steps: int = 20):

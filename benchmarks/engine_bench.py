@@ -95,8 +95,13 @@ def _sequential(specs) -> float:
     return time.perf_counter() - t0
 
 
+# set by --sanitize: every engine the bench builds runs under the
+# repro.analysis runtime sanitizers (host-sync guard + donation checks)
+SANITIZE = False
+
+
 def _engine(specs, lanes) -> tuple[float, SolveEngine]:
-    eng = SolveEngine(lanes=lanes)
+    eng = SolveEngine(lanes=lanes, sanitize=SANITIZE)
     eng.submit_many(specs)
     t0 = time.perf_counter()
     eng.run()
@@ -451,6 +456,75 @@ def engine_roofline():
            f"hlo_vs_plan={(hlo / plan_bytes) if hlo and plan_bytes else float('nan'):.2f}")
 
 
+# ---- sanitized laps: the guardrails as a bench scenario -------------------
+# `--sanitize` runs the K-sweep and mixed-n workloads with every engine
+# under the repro.analysis runtime sanitizers (host-sync guard on step(),
+# donation checks on every fused dispatch) and each steady-state timed lap
+# additionally under compile_guard(0) — zero executables may be built once
+# the caches are warm, proving one-executable-per-plan-signature over the
+# full drain/regrow cycle. Per-job fun/x are asserted bit-identical to
+# standalone abo_minimize, and the plain-vs-sanitized lap ratio is the
+# measured sanitizer overhead reported in benchmarks/README.md.
+def engine_sanitized():
+    import numpy as np
+
+    from repro.analysis import compile_guard
+
+    global SANITIZE
+
+    def check_bits(eng, spec0):
+        rec = eng.jobs[min(eng.jobs)]     # job-000000: first submitted
+        ref = abo_minimize(OBJECTIVES[spec0.objective], spec0.n,
+                           config=spec0.config, seed=spec0.seed)
+        ok = (rec.fun == float(ref.fun)
+              and np.asarray(rec.x).tobytes()
+              == np.asarray(ref.x).tobytes())
+        if not ok:
+            raise AssertionError(
+                f"--sanitize bit-identity broken for {spec0}: "
+                f"engine fun={rec.fun!r} vs abo_minimize {ref.fun!r}")
+        return ok
+
+    scenarios = (
+        ("k", lambda s0: _k_specs(OBJ, max(KS), s0), min(max(KS), MAX_LANES)),
+        ("mixedn", _mixed_specs, MIXED_LANES),
+    )
+    global SANITIZE
+    for tag, mk, lanes in scenarios:
+        jobs = len(mk(0))
+        SANITIZE = False
+        _engine(mk(0), lanes)            # warm compile caches (plain)
+        dt_plain = _median(_engine(mk(1000 + r), lanes)[0]
+                           for r in range(REPEATS))
+        SANITIZE = True
+        _engine(mk(0), lanes)            # warm the sanitized path too: the
+        #                                  guard itself never compiles, but
+        #                                  the warm lap covers every resize
+        #                                  rung a fresh engine regrows over
+        laps = []
+        eng = None
+        for r in range(REPEATS):
+            with compile_guard(0, f"sanitized {tag} steady lap"):
+                dt, eng = _engine(mk(1000 + r), lanes)
+            laps.append(dt)
+        dt_san = _median(laps)
+        SANITIZE = False
+        check_bits(eng, mk(1000 + REPEATS - 1)[0])
+        overhead = dt_san / dt_plain - 1.0
+        _METRICS[f"engine_sanitized_{tag}"] = {
+            "jobs": jobs,
+            "jobs_per_s_plain": jobs / dt_plain,
+            "jobs_per_s_sanitized": jobs / dt_san,
+            "overhead_frac": overhead,
+            "steady_lap_compiles": 0,    # compile_guard(0) just proved it
+            "bit_identical": True,       # check_bits just proved it
+        }
+        yield (f"engine_sanitized_{tag}{jobs}", dt_san / jobs * 1e6,
+               f"jobs_per_s={jobs / dt_san:.1f} "
+               f"overhead={overhead:+.1%} steady_compiles=0 "
+               "bit_identical=True")
+
+
 def write_artifact(path: str | pathlib.Path = ARTIFACT) -> pathlib.Path:
     """Append this run's metrics to the JSON perf trajectory (a list of
     run records, newest last). Partial runs append whatever scenarios
@@ -475,6 +549,14 @@ def write_artifact(path: str | pathlib.Path = ARTIFACT) -> pathlib.Path:
 def main():
     if len(sys.argv) >= 3 and sys.argv[1] == "--sharded-child":
         sharded_child(int(sys.argv[2]))
+        return
+    if "--sanitize" in sys.argv[1:]:
+        # sanitizer mode: the guardrail scenarios only (fast enough for
+        # CI; the full bench is the perf gate, this is the invariant gate)
+        print("name,us_per_call,derived")
+        for name, us, derived in engine_sanitized():
+            print(f"{name},{us:.1f},{derived}")
+        print(f"# wrote {write_artifact()}")
         return
     print("name,us_per_call,derived")
     for name, us, derived in engine_vs_sequential():

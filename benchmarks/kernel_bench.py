@@ -24,7 +24,7 @@ def _time(fn, *args, iters=5):
 
 def coord_sweep_bench():
     """ABO sweep: CPU jnp path timing + TPU analytic (memory-bound)."""
-    from repro.core import ABOConfig, abo_minimize
+    from repro.core import abo_minimize
     from repro.objectives import GRIEWANK
     n = 1_000_000
     t0 = time.time()

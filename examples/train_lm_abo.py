@@ -10,7 +10,6 @@ same pjit graphs the 512-chip dry-run compiles).
 import argparse
 import time
 
-import jax
 
 from repro.launch.train import main as train_main
 
@@ -43,9 +42,9 @@ def main():
     t_zo = time.time() - t0
 
     print(f"\nAdamW : loss {loss_adamw:.4f} in {t_adamw:.0f}s "
-          f"(3 fp32 state copies)")
+          "(3 fp32 state copies)")
     print(f"ABO-ZO: loss {loss_zo:.4f} in {t_zo:.0f}s "
-          f"(ZERO optimizer state — the paper's claim)")
+          "(ZERO optimizer state — the paper's claim)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,18 @@
+"""Static and runtime guardrails for the engine's invariants.
+
+`repro.analysis.lint` is the static half (AST rules RPR001..RPR006,
+CLI: `python -m repro.analysis.lint src/`); `repro.analysis.sanitize`
+is the runtime half (compile_guard, sync_guard/allowed_sync,
+assert_donated).  See engine/DESIGN.md "Invariants & guardrails".
+"""
+from repro.analysis.sanitize import (  # noqa: F401
+    CompileBudgetExceeded,
+    DonationError,
+    HostSyncError,
+    SanitizerError,
+    allowed_sync,
+    assert_donated,
+    compile_guard,
+    compiles_so_far,
+    sync_guard,
+)

@@ -1,0 +1,274 @@
+"""Repo-specific AST lint rules.
+
+Each rule encodes one of the engine's load-bearing invariants (see
+engine/DESIGN.md "Invariants & guardrails"):
+
+  RPR001  no implicit device->host transfer in hot-path files
+  RPR002  no `_block_step` call outside an `optimization_barrier` fence
+  RPR003  no jax/jnp in gauge/sample paths (obs must never force a sync)
+  RPR004  no wall-clock reads inside jitted or span-measured regions
+  RPR005  no bare `jax.jit` in engine/ without a donation/static audit
+  RPR006  `# repro: allow[...]` must carry a justification (emitted by
+          the driver in lint.py, listed here for the catalogue)
+
+Rules are syntactic by design: they run on every file in milliseconds,
+with no imports of the code under analysis.  The suppression mechanism
+(`# repro: allow[RULE] why...`) is handled by lint.py; rules just
+report candidate findings.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+
+# File tags (standalone comments anywhere in the file):
+#   # repro: hot-path    -- file contains the per-pass sweep hot loop
+#   # repro: gauge-path  -- file is an obs gauge/sample path
+TAG_HOT_PATH = "hot-path"
+TAG_GAUGE_PATH = "gauge-path"
+
+RULES = {
+    "RPR001": "implicit device->host transfer in a hot-path file",
+    "RPR002": "_block_step call outside an optimization_barrier fence",
+    "RPR003": "jax/jnp use in a gauge/sample path",
+    "RPR004": "wall-clock read inside a jitted or span-measured region",
+    "RPR005": "jax.jit in engine/ without donate/static audit annotation",
+    "RPR006": "repro: allow[...] without a justification",
+}
+
+
+@dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+
+def _parents(tree: ast.AST) -> dict[ast.AST, ast.AST]:
+    par: dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            par[child] = node
+    return par
+
+
+def _dotted(node: ast.AST) -> str:
+    """Best-effort dotted name of a call target ('jax.lax.map' etc.)."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _is_call_to(node: ast.AST, names: tuple[str, ...]) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    dotted = _dotted(node.func)
+    return dotted in names or any(dotted.endswith("." + n) for n in names)
+
+
+# --------------------------------------------------------------------------
+# RPR001 — implicit device->host transfers in hot-path files
+# --------------------------------------------------------------------------
+# float(x) on a non-literal, .item()/.tolist(), np.asarray, and
+# jax.device_get all force the device to materialise a buffer on the
+# host.  In a hot-path file every such site must be a designed sync point,
+# annotated with `# repro: allow[RPR001] <why this sync is intended>`.
+# (int() and np.array() are deliberately not flagged: the host-side plan
+# builder uses them heavily on numpy scalars/lists, which never touch the
+# device.)
+_HOST_FNS = ("np.asarray", "numpy.asarray", "jax.device_get", "device_get")
+_HOST_METHODS = ("item", "tolist")
+
+
+def check_host_transfers(path, tree, lines, tags):
+    if TAG_HOT_PATH not in tags:
+        return
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        dotted = _dotted(node.func)
+        if dotted == "float" and node.args:
+            if not isinstance(node.args[0], ast.Constant):
+                yield Finding(path, node.lineno, node.col_offset, "RPR001",
+                              f"{dotted}() on a non-literal forces a host sync")
+        elif dotted in _HOST_FNS:
+            yield Finding(path, node.lineno, node.col_offset, "RPR001",
+                          f"{dotted}() materialises device data on the host")
+        elif (isinstance(node.func, ast.Attribute)
+              and node.func.attr in _HOST_METHODS and not node.args):
+            yield Finding(path, node.lineno, node.col_offset, "RPR001",
+                          f".{node.func.attr}() forces a host sync")
+
+
+# --------------------------------------------------------------------------
+# RPR002 — _block_step must be fenced by optimization_barrier
+# --------------------------------------------------------------------------
+# Bit-identity between the engine and abo_minimize depends on pinning the
+# codegen context of the probe-tile reduction (XLA:CPU rounding is
+# compilation-context-dependent).  A `_block_step` call is fenced when
+# either (a) it sits lexically inside the arguments of an
+# `optimization_barrier(...)` call, or (b) it sits inside a local function
+# whose *name* appears inside an optimization_barrier call's arguments in
+# the same file (the vmap'd-closure form used by engine/batched.py).
+_BARRIER = ("optimization_barrier",)
+
+
+def check_block_step_fences(path, tree, lines, tags):
+    parents = _parents(tree)
+
+    # names referenced inside any optimization_barrier(...) argument list
+    fenced_names: set[str] = set()
+    for node in ast.walk(tree):
+        if _is_call_to(node, _BARRIER):
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                for sub in ast.walk(arg):
+                    if isinstance(sub, ast.Name):
+                        fenced_names.add(sub.id)
+
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and _dotted(node.func).split(".")[-1] == "_block_step"):
+            continue
+        cur = parents.get(node)
+        fenced = False
+        while cur is not None:
+            if _is_call_to(cur, _BARRIER):
+                fenced = True
+                break
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if cur.name in fenced_names:
+                    fenced = True
+                break  # nearest enclosing function decides
+            cur = parents.get(cur)
+        if not fenced:
+            yield Finding(path, node.lineno, node.col_offset, "RPR002",
+                          "_block_step outside an optimization_barrier fence "
+                          "(bit-identity depends on pinned codegen context)")
+
+
+# --------------------------------------------------------------------------
+# RPR003 — no jax in gauge/sample paths
+# --------------------------------------------------------------------------
+# obs gauges sample engine state at scrape time; they must stay pure
+# host/stdlib so that observing the engine can never add a device sync or
+# a compilation.  Any jax/jnp import or use in a gauge-path file is a bug.
+def check_gauge_path_jax(path, tree, lines, tags):
+    if TAG_GAUGE_PATH not in tags:
+        return
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                root = alias.name.split(".")[0]
+                if root in ("jax", "jaxlib"):
+                    yield Finding(path, node.lineno, node.col_offset, "RPR003",
+                                  f"import {alias.name} in a gauge/sample path")
+        elif isinstance(node, ast.ImportFrom):
+            root = (node.module or "").split(".")[0]
+            if root in ("jax", "jaxlib"):
+                yield Finding(path, node.lineno, node.col_offset, "RPR003",
+                              f"from {node.module} import ... in a "
+                              "gauge/sample path")
+        elif isinstance(node, ast.Name) and node.id in ("jax", "jnp"):
+            yield Finding(path, node.lineno, node.col_offset, "RPR003",
+                          f"use of {node.id} in a gauge/sample path")
+
+
+# --------------------------------------------------------------------------
+# RPR004 — wall-clock inside jitted or span-measured regions
+# --------------------------------------------------------------------------
+# A wall-clock read inside a jitted function burns a trace-time constant
+# into the executable (recompile-or-stale bug); inside a `with ...span()`
+# block it pollutes the span's own measurement.  Timing belongs to the
+# tracer, outside measured regions.
+_CLOCK_FNS = ("time.time", "time.time_ns", "datetime.now", "datetime.utcnow",
+              "datetime.datetime.now", "datetime.datetime.utcnow")
+
+
+def _is_jit_decorated(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> bool:
+    for dec in fn.decorator_list:
+        for sub in ast.walk(dec):
+            if isinstance(sub, ast.Attribute) and sub.attr == "jit":
+                return True
+            if isinstance(sub, ast.Name) and sub.id == "jit":
+                return True
+    return False
+
+
+def _is_span_with(node: ast.AST) -> bool:
+    if not isinstance(node, ast.With):
+        return False
+    for item in node.items:
+        expr = item.context_expr
+        if isinstance(expr, ast.Call):
+            tail = _dotted(expr.func).split(".")[-1]
+            if tail == "span":
+                return True
+    return False
+
+
+def check_wall_clock(path, tree, lines, tags):
+    parents = _parents(tree)
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call) and _dotted(node.func) in _CLOCK_FNS):
+            continue
+        cur = parents.get(node)
+        region = None
+        while cur is not None:
+            if _is_span_with(cur):
+                region = "a span-measured region"
+                break
+            if (isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef))
+                    and _is_jit_decorated(cur)):
+                region = f"jitted function {cur.name!r}"
+                break
+            cur = parents.get(cur)
+        if region:
+            yield Finding(path, node.lineno, node.col_offset, "RPR004",
+                          f"wall-clock read inside {region}")
+
+
+# --------------------------------------------------------------------------
+# RPR005 — jax.jit in engine/ needs a donation/static audit
+# --------------------------------------------------------------------------
+# The engine's single-copy pool discipline means every jit in engine/ must
+# have made an explicit decision about donation and static arguments.  A
+# call carrying donate_argnums / static_argnums / static_argnames counts
+# as audited; anything else needs `# repro: allow[RPR005] <why not>`.
+_AUDIT_KWARGS = ("donate_argnums", "donate_argnames",
+                 "static_argnums", "static_argnames")
+
+
+def check_engine_jit_audit(path, tree, lines, tags):
+    norm = path.replace("\\", "/")
+    if "/engine/" not in norm and not norm.startswith("engine/"):
+        return
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        dotted = _dotted(node.func)
+        if dotted not in ("jax.jit", "jit"):
+            continue
+        kwargs = {kw.arg for kw in node.keywords}
+        if not kwargs.intersection(_AUDIT_KWARGS):
+            yield Finding(path, node.lineno, node.col_offset, "RPR005",
+                          "jax.jit without donate/static audit "
+                          "(single-copy pool discipline: decide donation "
+                          "explicitly or justify with an allow)")
+
+
+ALL_CHECKS = (
+    check_host_transfers,
+    check_block_step_fences,
+    check_gauge_path_jax,
+    check_wall_clock,
+    check_engine_jit_audit,
+)

@@ -1,0 +1,266 @@
+"""Runtime sanitizers for the engine's three load-bearing disciplines.
+
+- `compile_guard(budget)` — counts XLA executable builds inside the
+  region via `jax.monitoring`'s backend_compile duration event and
+  raises `CompileBudgetExceeded` when the region compiles more than its
+  declared budget.  A cached `jax.jit` call fires no event, so a steady
+  -state drain under `compile_guard(0)` proves the one-executable-per-
+  plan-signature property.
+
+- `sync_guard()` / `allowed_sync(reason)` — a host-sync sanitizer.
+  `jax.transfer_guard("disallow")` covers accelerator backends, but it
+  is inert on XLA:CPU (host buffers are zero-copy), so the guard also
+  intercepts the `ArrayImpl` dunders that force a host materialisation
+  (`__array__`, `__float__`, `__int__`, `__bool__`, `__index__`,
+  `.item()`, `.tolist()`) plus the `np.asarray`/`np.array` entry points
+  (which read the zero-copy CPU buffer through the C buffer protocol,
+  bypassing `__array__`).  Inside a guarded region, any such call
+  outside an `allowed_sync(reason)` block raises `HostSyncError`.
+  Designed sync points (harvest, snapshot) declare themselves with
+  `allowed_sync`, mirroring the static `# repro: allow[RPR001]`
+  annotations.
+
+- `assert_donated(leaves)` — the donation checker: walks buffers that
+  were donated to a dispatched computation and asserts every one is
+  deleted (`Array.is_deleted()`), i.e. the single-copy pool discipline
+  held and XLA did not silently fall back to a copy.
+
+All three are zero-overhead when unused: the monitoring listener is a
+counter bump, and the dunder patches are installed lazily on first
+`sync_guard()` entry and check a thread-local flag before doing work.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+
+class SanitizerError(AssertionError):
+    """Base class: an engine invariant was violated at runtime."""
+
+
+class CompileBudgetExceeded(SanitizerError):
+    pass
+
+
+class HostSyncError(SanitizerError):
+    pass
+
+
+class DonationError(SanitizerError):
+    pass
+
+
+# --------------------------------------------------------------------------
+# compile_guard
+# --------------------------------------------------------------------------
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+_compile_lock = threading.Lock()
+_compile_count = 0
+_listener_installed = False
+
+
+def _on_duration(event: str, duration: float, **kwargs) -> None:
+    global _compile_count
+    if event == _COMPILE_EVENT:
+        with _compile_lock:
+            _compile_count += 1
+
+
+def _install_listener() -> None:
+    global _listener_installed
+    with _compile_lock:
+        if _listener_installed:
+            return
+        _listener_installed = True
+    import jax.monitoring
+    jax.monitoring.register_event_duration_secs_listener(_on_duration)
+
+
+def compiles_so_far() -> int:
+    """Process-wide count of XLA executable builds seen by the listener."""
+    _install_listener()
+    return _compile_count
+
+
+class compile_guard:
+    """Context manager asserting a region builds at most `budget` executables.
+
+    >>> with compile_guard(budget=2, name="warmup") as g:
+    ...     engine.step(); engine.step()
+    >>> g.count   # executables actually built inside the region
+    """
+
+    def __init__(self, budget: int, name: str = "region"):
+        if budget < 0:
+            raise ValueError("budget must be >= 0")
+        self.budget = budget
+        self.name = name
+        self.count = 0
+        self._start = 0
+
+    def __enter__(self) -> "compile_guard":
+        _install_listener()
+        self._start = _compile_count
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.count = _compile_count - self._start
+        if exc_type is None and self.count > self.budget:
+            raise CompileBudgetExceeded(
+                f"compile_guard({self.name!r}): {self.count} executable(s) "
+                f"built, budget {self.budget} — an input shape, plan "
+                "signature, or closure constant is perturbing the cache")
+
+
+# --------------------------------------------------------------------------
+# sync_guard / allowed_sync
+# --------------------------------------------------------------------------
+_state = threading.local()
+_patch_lock = threading.Lock()
+_patched = False
+
+# ArrayImpl entry points that force a device->host materialisation.
+_SYNC_METHODS = ("__array__", "__float__", "__int__", "__bool__",
+                 "__index__", "item", "tolist")
+
+
+def _guard_depth() -> int:
+    return getattr(_state, "depth", 0)
+
+
+def _allowed_reason() -> str | None:
+    return getattr(_state, "allowed", None)
+
+
+def _install_patches() -> None:
+    global _patched
+    with _patch_lock:
+        if _patched:
+            return
+        _patched = True
+    import jax
+    import numpy as np
+
+    array_impl = type(jax.numpy.zeros(()))
+    for name in _SYNC_METHODS:
+        original = getattr(array_impl, name)
+
+        def wrapper(self, *args, _name=name, _original=original, **kwargs):
+            if _guard_depth() > 0 and _allowed_reason() is None:
+                raise HostSyncError(
+                    f"implicit host sync via Array.{_name} inside "
+                    "sync_guard — wrap designed sync points in "
+                    "allowed_sync(reason)")
+            return _original(self, *args, **kwargs)
+
+        wrapper.__name__ = name
+        wrapper.__qualname__ = f"{array_impl.__name__}.{name}"
+        setattr(array_impl, name, wrapper)
+
+    # np.asarray / np.array never hit __array__ on XLA:CPU — the zero-copy
+    # host buffer satisfies numpy's C-level buffer protocol directly, which
+    # cannot be intercepted from Python.  Wrap the numpy entry points too.
+    for fname in ("asarray", "array"):
+        original = getattr(np, fname)
+
+        def np_wrapper(a=None, *args, _fname=fname, _original=original,
+                       **kwargs):
+            if (_guard_depth() > 0 and _allowed_reason() is None
+                    and isinstance(a, array_impl)):
+                raise HostSyncError(
+                    f"implicit host sync via np.{_fname}(jax.Array) inside "
+                    "sync_guard — wrap designed sync points in "
+                    "allowed_sync(reason)")
+            return _original(a, *args, **kwargs)
+
+        np_wrapper.__name__ = fname
+        np_wrapper.__qualname__ = fname
+        setattr(np, fname, np_wrapper)
+
+
+@contextmanager
+def sync_guard():
+    """Fail on any implicit device->host sync inside the region.
+
+    Layered: `jax.transfer_guard("disallow")` handles accelerator
+    backends; the ArrayImpl dunder patches handle XLA:CPU where the
+    transfer guard is inert.  Reentrant; thread-local.
+    """
+    import jax
+
+    _install_patches()
+    _state.depth = _guard_depth() + 1
+    try:
+        # device->host only: host->device uploads (plan tables, refill
+        # constants) are part of normal stepping and stay legal
+        with jax.transfer_guard_device_to_host("disallow"):
+            yield
+    finally:
+        _state.depth -= 1
+
+
+@contextmanager
+def allowed_sync(reason: str):
+    """Declare a designed sync point inside a `sync_guard` region."""
+    if not reason:
+        raise ValueError("allowed_sync requires a reason string")
+    import jax
+
+    prev = _allowed_reason()
+    _state.allowed = reason
+    try:
+        # transfer_guard is also relaxed so accelerator backends mirror
+        # the CPU behaviour: designed sync points are permitted.
+        with jax.transfer_guard_device_to_host("allow"):
+            yield
+    finally:
+        _state.allowed = prev
+
+
+# --------------------------------------------------------------------------
+# donation checker
+# --------------------------------------------------------------------------
+def assert_donated(leaves, context: str = "donated input") -> int:
+    """Assert every jax array in `leaves` was consumed by donation.
+
+    Pass the *pre-dispatch* buffers of arguments handed to a
+    `donate_argnums` position after the call returns: dispatch is async
+    but donation is decided at dispatch time, so `.is_deleted()` is
+    already True for every buffer XLA actually reused.  A live buffer
+    means a silent copy — the single-copy pool discipline failed.
+
+    Returns the number of buffers checked.
+    """
+    checked = 0
+    alive = []
+    for leaf in _iter_leaves(leaves):
+        is_deleted = getattr(leaf, "is_deleted", None)
+        if is_deleted is None:
+            continue
+        checked += 1
+        if not is_deleted():
+            alive.append(leaf)
+    if alive:
+        shapes = ", ".join(
+            f"{getattr(a, 'shape', '?')}:{getattr(a, 'dtype', '?')}"
+            for a in alive[:4])
+        raise DonationError(
+            f"{context}: {len(alive)}/{checked} donated buffer(s) still "
+            f"alive ({shapes}{', ...' if len(alive) > 4 else ''}) — XLA "
+            "fell back to a copy; check aliasing-compatible shapes/dtypes "
+            "and that no other reference pins the buffer")
+    return checked
+
+
+def _iter_leaves(obj):
+    if obj is None:
+        return
+    if isinstance(obj, (list, tuple)):
+        for item in obj:
+            yield from _iter_leaves(item)
+    elif isinstance(obj, dict):
+        for item in obj.values():
+            yield from _iter_leaves(item)
+    else:
+        yield obj

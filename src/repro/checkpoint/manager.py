@@ -109,8 +109,8 @@ class CheckpointManager:
             "step": step,
             "treedef": str(treedef),
             "n_leaves": len(leaves),
-            "shapes": [list(l.shape) for l in leaves],
-            "dtypes": [str(l.dtype) for l in leaves],
+            "shapes": [list(leaf.shape) for leaf in leaves],
+            "dtypes": [str(leaf.dtype) for leaf in leaves],
             "committed": True,
         }
         if aux is not None:
@@ -169,7 +169,8 @@ class CheckpointManager:
         for got, want in zip(leaves, like_leaves):
             assert tuple(got.shape) == tuple(want.shape), \
                 (got.shape, want.shape)
-        leaves = [l.astype(w.dtype) for l, w in zip(leaves, like_leaves)]
+        leaves = [leaf.astype(w.dtype)
+                  for leaf, w in zip(leaves, like_leaves)]
         return jax.tree_util.tree_unflatten(treedef, leaves)
 
     def restore(self, step: int, like: Any, shardings: Any = None) -> Any:
@@ -182,10 +183,10 @@ class CheckpointManager:
         if shardings is not None:
             sh_leaves = jax.tree_util.tree_leaves(
                 shardings, is_leaf=lambda x: hasattr(x, "spec"))
-            leaves = [jax.device_put(l, s)
-                      for l, s in zip(leaves, sh_leaves)]
+            leaves = [jax.device_put(leaf, s)
+                      for leaf, s in zip(leaves, sh_leaves)]
         else:
-            leaves = [jax.numpy.asarray(l) for l in leaves]
+            leaves = [jax.numpy.asarray(leaf) for leaf in leaves]
         return jax.tree_util.tree_unflatten(treedef, leaves)
 
     # --------------------------------------------------------------- journal

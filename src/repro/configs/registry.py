@@ -11,7 +11,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig, SHAPES, ShapeCell, supported_shapes
+from repro.configs.base import ArchConfig, SHAPES, ShapeCell
 from repro.configs.recurrentgemma_2b import CONFIG as RECURRENTGEMMA_2B
 from repro.configs.qwen2_vl_7b import CONFIG as QWEN2_VL_7B
 from repro.configs.rwkv6_3b import CONFIG as RWKV6_3B

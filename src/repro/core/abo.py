@@ -16,6 +16,7 @@ against frozen aggregates), guarded so the committed objective never
 regresses. This is what makes the sweep a dense (B, m) tile — VPU/MXU-shaped
 on TPU (see kernels/coord_sweep) — instead of a scalar loop.
 """
+# repro: hot-path — the per-pass sweep; every host sync below is a designed one
 from __future__ import annotations
 
 import dataclasses
@@ -480,6 +481,8 @@ def abo_minimize(
     probe_tile = _default_probe_tile(obj)
     state, fun = _abo_jit(x, obj, n, cfg, probe_tile, bnds)
     fe = cfg.n_passes * cfg.samples_per_pass * n
+    # repro: allow[RPR001] solve is complete; returning fun to the caller is
+    # the designed end-of-run sync
     return ABOResult(x=state.x[:n], fun=float(fun), fe=fe, history=state.hist,
                      n=n, config=cfg)
 
@@ -531,5 +534,6 @@ def abo_minimize_blackbox(
         return jax.lax.fori_loop(0, cfg.n_passes, pass_body, (x, f0, hist))
 
     x, f, hist = run(x)
+    # repro: allow[RPR001] solve is complete; end-of-run sync (blackbox path)
     return ABOResult(x=x, fun=float(f), fe=cfg.n_passes * m * n,
                      history=hist, n=n, config=cfg)

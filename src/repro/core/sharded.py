@@ -14,7 +14,6 @@ view, and once globally per pass after the sync.
 """
 from __future__ import annotations
 
-import functools
 from typing import Sequence
 
 import jax

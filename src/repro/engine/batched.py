@@ -67,6 +67,7 @@ outside the vmap), pinning the probe math against XLA's per-partition
 respecialization. All state arguments are donated, sharded buffers
 included, so steady-state stepping updates every shard in place.
 """
+# repro: hot-path — fused pool sweep; zero host syncs by construction
 from __future__ import annotations
 
 import dataclasses
@@ -286,19 +287,44 @@ def resize_pool_state(state: PoolState, lanes: int, pages: int,
                  state.n_valid)
         return PoolState(*out)
 
-    pool = state.pool
-    if pages > p0:
-        pool = jnp.zeros((pages, pool.shape[1]), pool.dtype).at[:p0].set(pool)
-    elif pages < p0:
-        pool = pool[:pages]
-    state = dataclasses.replace(state, pool=pool)
-    if lanes != s0:
-        state = dataclasses.replace(
-            state, aggs=resize_slots(state.aggs),
-            hist=resize_slots(state.hist),
-            pass_idx=resize_slots(state.pass_idx),
-            n_valid=resize_slots(state.n_valid))
-    return state
+    # unsharded: same cached-jit policy as the sharded branch above. The
+    # old eager .at[].set()/slice path dispatched ~8 one-op executables
+    # per shape transition (each a fresh compile the first time a
+    # drain/regrow cycle hit that rung) and COPIED the pool instead of
+    # donating it — the sanitizers flagged both.
+    ck = (None, lanes, pages,
+          tuple((leaf.shape, str(leaf.dtype))
+                for leaf in (state.pool, state.aggs, state.hist,
+                             state.pass_idx, state.n_valid)))
+    fn = _RESIZE_CACHE.get(ck)
+    if fn is None:
+
+        def host_resize(pool, aggs, hist, pass_idx, n_valid):
+            if pages > p0:
+                pool = jnp.zeros((pages, pool.shape[1]),
+                                 pool.dtype).at[:p0].set(pool)
+            elif pages < p0:
+                pool = pool[:pages]
+            if lanes != s0:
+                aggs, hist = resize_slots(aggs), resize_slots(hist)
+                pass_idx, n_valid = (resize_slots(pass_idx),
+                                     resize_slots(n_valid))
+            return pool, aggs, hist, pass_idx, n_valid
+
+        # donate exactly the arguments whose shapes survive the
+        # transition: those alias in place; the rest can't alias anyway
+        # (XLA would warn and copy), and their old buffers die when the
+        # caller swaps in the new state
+        donate = []
+        if pages == p0:
+            donate.append(0)
+        if lanes == s0:
+            donate.extend((1, 2, 3, 4))
+        fn = jax.jit(host_resize, donate_argnums=tuple(donate))
+        _RESIZE_CACHE[ck] = fn
+    out = fn(state.pool, state.aggs, state.hist, state.pass_idx,
+             state.n_valid)
+    return PoolState(*out)
 
 
 class PoolOps:
@@ -642,6 +668,8 @@ class PoolOps:
                     xr, n)))(xrow, nv)
                 return f, xrow, state.hist[lanes]
 
+            # repro: allow[RPR005] finalize reads pool state the next step
+            # still owns — donating would free live pages; no static args
             fn = jax.jit(run)
         else:
             # sharded: finisher i's row in each output is computed by its
@@ -661,6 +689,8 @@ class PoolOps:
                         owner_select(state.hist[lanes], row_dev, my,
                                      "pool"))
 
+            # repro: allow[RPR005] sharded finalize: same read-only contract
+            # as the unsharded branch — state must stay live for stepping
             fn = jax.jit(shard_map(
                 run_local, mesh=self.mesh, check_rep=False,
                 in_specs=(_state_specs(), P(), P("pool", None),

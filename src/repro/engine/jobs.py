@@ -13,7 +13,6 @@ wire.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import numpy as np
 
@@ -54,7 +53,7 @@ class JobSpec:
             # reject early: a str/list here would otherwise surface as an
             # AttributeError deep inside the engine's step loop
             raise ValueError(
-                f"config must be an ABOConfig (or a dict via from_dict), "
+                "config must be an ABOConfig (or a dict via from_dict), "
                 f"got {type(self.config).__name__}")
         if self.n < 1:
             raise ValueError(f"n must be >= 1, got {self.n}")
@@ -92,7 +91,7 @@ class JobSpec:
                 raise ValueError(f"bad config: {e}") from e
         elif cfg is not None and not isinstance(cfg, ABOConfig):
             raise ValueError(
-                f"config must be a dict of ABOConfig fields, "
+                "config must be a dict of ABOConfig fields, "
                 f"got {type(cfg).__name__}")
         x0 = d.get("x0")
         return cls(objective=d["objective"], n=int(d["n"]),

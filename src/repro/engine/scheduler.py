@@ -70,8 +70,10 @@ bit-identical to the uninterrupted run while steady-state checkpoint I/O
 is O(client events), not O(job table). Each base snapshot truncates the
 journal segments it covers (compaction).
 """
+# repro: hot-path — engine step loop; harvest/snapshot are the designed sync points
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from collections import deque
@@ -82,6 +84,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
+from repro.analysis import sanitize as _sanitize
 from repro.checkpoint.manager import CheckpointManager
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.roofline import plan_pass_bytes
@@ -93,6 +96,10 @@ from repro.engine.jobs import (CANCELLED, DONE, J_CANCEL, J_FETCHED,
                                next_job_id)
 from repro.objectives import OBJECTIVES
 from repro.objectives.base import SeparableObjective
+
+# shared no-op context: sanitize-mode hooks cost one attribute check and
+# this reusable nullcontext when the mode is off — no allocation per step
+_NULL = contextlib.nullcontext()
 
 
 @dataclasses.dataclass
@@ -585,7 +592,8 @@ class SolveEngine:
                  retain_done: int | None = None,
                  pool_high_water: float | None = 2.0,
                  journal_every: int | None = None,
-                 devices: int | None = None):
+                 devices: int | None = None,
+                 sanitize: bool = False):
         if lanes < 1:
             raise ValueError(f"lanes must be >= 1, got {lanes}")
         if devices is not None and devices < 1:
@@ -596,8 +604,8 @@ class SolveEngine:
             if len(avail) < self.n_dev:
                 raise ValueError(
                     f"devices={self.n_dev} but only {len(avail)} JAX "
-                    f"device(s) are visible; on CPU, launch with "
-                    f"XLA_FLAGS=--xla_force_host_platform_device_count="
+                    "device(s) are visible; on CPU, launch with "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count="
                     f"{self.n_dev} (must be set before jax initializes)")
             self.mesh = Mesh(np.array(avail[:self.n_dev]), ("pool",))
         else:
@@ -607,7 +615,7 @@ class SolveEngine:
                 f"retain_done must be >= 0 or None, got {retain_done}")
         if pool_high_water is not None and pool_high_water < 1.0:
             raise ValueError(
-                f"pool_high_water must be >= 1 or None (never shrink), got "
+                "pool_high_water must be >= 1 or None (never shrink), got "
                 f"{pool_high_water}: shrinking below the rung actually "
                 "needed would thrash resize/recompile every admission")
         if journal_every is not None:
@@ -634,6 +642,12 @@ class SolveEngine:
         self.journal_every = journal_every
         # suppresses re-journaling while replaying journal records
         self._replaying = False
+        # runtime sanitizer mode (repro.analysis.sanitize): step() runs
+        # under sync_guard (any implicit device->host sync outside a
+        # declared point raises), harvest/snapshot declare themselves via
+        # allowed_sync, and every fused dispatch asserts its donated
+        # input buffers actually died (single-copy pool discipline)
+        self.sanitize = bool(sanitize)
         self.dtype = dtype
         self.objectives = dict(objectives or OBJECTIVES)
         self.jobs: dict[str, JobState] = {}
@@ -802,7 +816,24 @@ class SolveEngine:
         chunk — every width band of the sweep plan plus the end-of-pass
         lane sync, times r passes — is ONE async dispatch of the plan
         signature's fused-step executable.
+
+        In sanitize mode the whole step runs under
+        ``repro.analysis.sanitize.sync_guard``: any implicit
+        device->host sync outside the declared harvest/snapshot points
+        raises ``HostSyncError``, and each fused dispatch asserts its
+        donated pool buffers actually died.
         """
+        if self.sanitize:
+            with _sanitize.sync_guard():
+                return self._step_impl()
+        return self._step_impl()
+
+    def _allowed(self, reason: str):
+        """Context manager marking a designed sync point (no-op unless
+        sanitize mode is on)."""
+        return _sanitize.allowed_sync(reason) if self.sanitize else _NULL
+
+    def _step_impl(self) -> int:
         tr = self.tracer
         with tr.span("step", step=self.step_count) as step_sp:
             with tr.span("refill"):
@@ -842,8 +873,16 @@ class SolveEngine:
                 with tr.span("fused_sweep", family=pool.key[0], passes=r,
                              swept_rows=plan.swept_slots,
                              est_bytes=r * plan.pass_bytes):
+                    prev = pool.state if self.sanitize else None
                     pool.state = ops.fused_step(*plan.signature())(
                         pool.state, self._r_const(r), *plan.args)
+                    if self.sanitize:
+                        # donation is decided at (async) dispatch time:
+                        # a live buffer here means XLA silently copied
+                        # the pool instead of updating it in place
+                        _sanitize.assert_donated(
+                            jax.tree_util.tree_leaves(prev),
+                            f"fused_step state ({pool.key[0]})")
                 self.swept_slots += r * plan.swept_slots
                 self.swept_slots_live += r * plan.live_slots
                 self._c_passes.inc(r)
@@ -1043,6 +1082,8 @@ class SolveEngine:
                 pages_np = np.full((g,), batched.SCRATCH_PAGE, np.int32)
                 pages_np[: len(pages)] = pages
                 xrow = np.zeros((g * bsz,), jnp.dtype(self.dtype).name)
+                # repro: allow[RPR001] spec.x0 is client host data, not a
+                # device buffer; normalising dtype before device_put
                 xrow[: spec.n] = np.asarray(spec.x0, xrow.dtype)
                 pool.state = ops.place_x(g)(
                     pool.state, jnp.asarray(slot, jnp.int32),
@@ -1056,6 +1097,8 @@ class SolveEngine:
                 nv_np = np.zeros((D,), np.int32)
                 lane_np[dev] = slot
                 pages_np[dev, : len(pages)] = pages
+                # repro: allow[RPR001] spec.x0 is client host data (sharded
+                # placement path), same as above
                 xrow[dev, : spec.n] = np.asarray(spec.x0, xrow.dtype)
                 nv_np[dev] = spec.n
                 owner_np = np.zeros((pool.slots + 1,), np.int32)
@@ -1065,6 +1108,8 @@ class SolveEngine:
                     jnp.asarray(lane_np), jnp.asarray(pages_np),
                     jnp.asarray(xrow), jnp.asarray(nv_np))
 
+    # repro: allow[RPR001] harvest is THE designed sync point: finished
+    # lanes' fun/x/history are read back exactly once, off the hot loop
     def _harvest(self, pool: LanePool, ops: batched.PoolOps) -> int:
         cfg = batched.key_config(pool.key)
         fins = [(slot, self.jobs[jid])
@@ -1100,9 +1145,10 @@ class SolveEngine:
             f_all, x_all, hist_all = ops.finalize(g, v)(
                 pool.state, jnp.asarray(row_dev), jnp.asarray(lanes_np),
                 jnp.asarray(pages_np))
-        f_np = np.asarray(f_all)
-        x_np = np.asarray(x_all)
-        h_np = np.asarray(hist_all)
+        with self._allowed("harvest read-back"):
+            f_np = np.asarray(f_all)
+            x_np = np.asarray(x_all)
+            h_np = np.asarray(hist_all)
         now = time.time()
         for i, (slot, rec) in enumerate(fins):
             rec.fun = float(f_np[i])
@@ -1301,6 +1347,12 @@ class SolveEngine:
         self._snapshot()
 
     def _snapshot(self):
+        # the checkpoint writer reads every pool buffer back to the host:
+        # with harvest, the only other designed sync point in a step
+        with self._allowed("snapshot write-out"):
+            return self._snapshot_impl()
+
+    def _snapshot_impl(self):
         tree = {}
         pool_meta = []
         for i, pool in enumerate(self.pools.values()):
@@ -1360,6 +1412,7 @@ class SolveEngine:
                objectives: dict[str, SeparableObjective] | None = None,
                keep: int = 3, ckpt_every: int = 1,
                devices: int | None = None,
+               sanitize: bool = False,
                **fresh_kw) -> "SolveEngine":
         """Rebuild an engine (jobs, queue, and mid-solve pools with their
         page tables) from the newest committed checkpoint in
@@ -1377,10 +1430,12 @@ class SolveEngine:
         remapping every lane's pages onto the new shards host-side
         (reshard on load), and per-job results still match the
         uninterrupted run bit-for-bit, because per-lane math is placement-
-        invariant."""
+        invariant. ``sanitize`` is likewise observation, not semantics,
+        so it too may differ from the run that wrote the snapshot."""
         probe = CheckpointManager(checkpoint_dir, keep=keep)
         step = probe.latest_step()
         if step is None:
+            fresh_kw.setdefault("sanitize", sanitize)
             eng = cls(checkpoint_dir=checkpoint_dir, keep=keep,
                       ckpt_every=ckpt_every, objectives=objectives,
                       devices=devices, **fresh_kw)
@@ -1413,7 +1468,8 @@ class SolveEngine:
                   pool_high_water=aux.get("pool_high_water", 2.0),
                   journal_every=aux.get("journal_every"),
                   devices=(devices if devices is not None
-                           else aux.get("devices", 1)))
+                           else aux.get("devices", 1)),
+                  sanitize=sanitize)
         eng.step_count = aux["step_count"]
         eng.swept_slots = aux.get("swept_slots", 0)
         eng.swept_slots_live = aux.get("swept_slots_live", 0)
@@ -1443,6 +1499,8 @@ class SolveEngine:
             eng._replay_journal(aux.get("journal_seq") or 0)
         return eng
 
+    # repro: allow[RPR001] checkpoint-restore cold path: operates on host
+    # numpy state loaded from disk, never on live device buffers
     def _mount_pool(self, key, obj, p: dict, slots: int, host_state):
         """Attach one restored pool: remap its pages onto THIS engine's
         device count if the snapshot's differs (reshard on load), place
@@ -1482,6 +1540,8 @@ class SolveEngine:
         self.pools[key] = pool
         self.family_keys_seen.add(key)
 
+    # repro: allow[RPR001] resume-time resharding cold path: pure host
+    # numpy shuffle of the restored pool image
     def _reshard_pages(self, n_dev_old: int, capacity: int, page_table,
                        lane_dev, pool_np):
         """Host-side page remap for a device-count change: every live

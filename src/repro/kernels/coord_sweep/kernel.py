@@ -54,9 +54,10 @@ def _griewank_planes(idx, x):
     return x * x * (1.0 / 4000.0), log_abs, (c < 0).astype(dt)
 
 
-def _combine(s, l, k, lam):
+def _combine(s, log_abs, k, lam):
     positive = jnp.mod(k, 2.0) < 0.5
-    return jnp.where(positive, s - lam * jnp.expm1(l), s + lam * (jnp.exp(l) + 1.0))
+    return jnp.where(positive, s - lam * jnp.expm1(log_abs),
+                     s + lam * (jnp.exp(log_abs) + 1.0))
 
 
 def _sweep_kernel(x_ref, aggs_ref, x_out_ref, aggs_out_ref, aggs_sm, *,

@@ -8,7 +8,6 @@ re-evaluation — matches the jnp path.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 
 import jax

@@ -74,9 +74,9 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_sm, l_sm, acc_sm, *,
 
     @pl.when(ki == nk - 1)
     def _finalize():
-        l = l_sm[:, 0]
-        l = jnp.where(l == 0.0, 1.0, l)      # fully-masked rows -> zeros
-        o_ref[0, :, :] = (acc_sm[...] / l[:, None]).astype(o_ref.dtype)
+        lsum = l_sm[:, 0]
+        lsum = jnp.where(lsum == 0.0, 1.0, lsum)  # fully-masked rows -> zeros
+        o_ref[0, :, :] = (acc_sm[...] / lsum[:, None]).astype(o_ref.dtype)
 
 
 def flash_attention_kernel(

@@ -98,7 +98,7 @@ def attention_ref_chunked(
     init = (jnp.full(lead + (sq,), NEG_INF, jnp.float32),
             jnp.zeros(lead + (sq,), jnp.float32),
             jnp.zeros(lead + (sq, d), jnp.float32))
-    (m, l, acc), _ = jax.lax.scan(body, init,
-                                  (jnp.arange(n_blocks), kb, vb))
-    l = jnp.where(l == 0.0, 1.0, l)
-    return (acc / l[..., None]).astype(q.dtype)
+    (m, lsum, acc), _ = jax.lax.scan(body, init,
+                                     (jnp.arange(n_blocks), kb, vb))
+    lsum = jnp.where(lsum == 0.0, 1.0, lsum)
+    return (acc / lsum[..., None]).astype(q.dtype)

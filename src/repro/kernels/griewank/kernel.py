@@ -32,10 +32,10 @@ def _eval_kernel(x_ref, out_ref, acc_sm, *, chunk, n_valid):
 
     xc = x_ref[0, :]                                       # (C,)
     idx = i * chunk + jax.lax.broadcasted_iota(jnp.int32, (1, chunk), 1)[0]
-    s, l, k = _griewank_planes(idx, xc)
+    s, log_abs, k = _griewank_planes(idx, xc)
     mask = (idx < n_valid).astype(xc.dtype)
     acc_sm[0] += jnp.sum(s * mask)
-    acc_sm[1] += jnp.sum(l * mask)
+    acc_sm[1] += jnp.sum(log_abs * mask)
     acc_sm[2] += jnp.sum(k * mask)
 
     @pl.when(i == pl.num_programs(0) - 1)

@@ -170,7 +170,6 @@ def _with_sh(avals, shardings):
 
 def build_griewank_cell(mesh, n: int = 1_000_000_000):
     """The paper's own workload on the production mesh (one ABO pass)."""
-    from repro.core import ABOConfig
     from repro.core.sharded import make_sharded_abo, input_specs as gspecs
     from repro.objectives import GRIEWANK
     step, x_sh, a_sh, n_pad = make_sharded_abo(GRIEWANK, n, mesh)

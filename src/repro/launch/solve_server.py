@@ -55,6 +55,16 @@ a JSON 500 — never a raw traceback. ``--verbose`` turns on access
 logging: one structured JSON line per request (method, path, status,
 duration_ms) on stdout — without it the server is silent, as before.
 
+Guardrails: ``--sanitize`` runs the engine under the repro.analysis
+runtime sanitizers — every ``step()`` executes inside the host-sync
+guard (an implicit device->host sync anywhere but the designed
+harvest/snapshot points raises ``HostSyncError``) and every fused
+dispatch asserts its donated pool buffers actually died.
+``--compile-budget N`` additionally wraps the batch drain in
+``compile_guard(N)``: the run fails if more than N XLA executables are
+built, enforcing one-executable-per-plan-signature end to end. Results
+under the sanitizers stay bit-identical to standalone ``abo_minimize``.
+
 Telemetry: ``--trace PATH`` enables the engine's pass-level span tracer
 and exports Chrome-trace-event JSON to PATH when the run ends (batch
 mode) or the server shuts down (HTTP mode) — load it in
@@ -219,7 +229,7 @@ def _serve_http(service: SolveService, port: int, poll_s: float = 0.01,
     """Demo JSON-over-HTTP front-end; blocks until interrupted."""
     httpd, stepper_thread = _build_server(service, port, poll_s, verbose)
     stepper_thread.start()
-    print(f"[solve_server] listening on "
+    print("[solve_server] listening on "
           f"http://127.0.0.1:{httpd.server_address[1]}", flush=True)
     try:
         httpd.serve_forever()
@@ -284,6 +294,18 @@ def main(argv=None):
     ap.add_argument("--verbose", action="store_true",
                     help="HTTP access logging: one structured JSON line "
                          "per request (method, path, status, duration_ms)")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="run the engine under the repro.analysis runtime "
+                         "sanitizers: every step() under the host-sync "
+                         "guard (implicit device->host syncs outside the "
+                         "designed harvest/snapshot points raise) and "
+                         "every fused dispatch asserts its donated pool "
+                         "buffers died")
+    ap.add_argument("--compile-budget", type=int, default=None, metavar="N",
+                    help="batch mode: fail the run if draining the queue "
+                         "builds more than N XLA executables (counted via "
+                         "jax.monitoring) — enforces one-executable-per-"
+                         "plan-signature end to end")
     args = ap.parse_args(argv)
 
     if args.retain_done is not None and args.retain_done < 0:
@@ -298,7 +320,7 @@ def main(argv=None):
                  f"{args.pool_high_water}")
     if args.journal_every is not None:
         if args.journal_every < 1:
-            ap.error(f"--journal-every must be >= 1, got "
+            ap.error("--journal-every must be >= 1, got "
                      f"{args.journal_every}")
         if not args.ckpt_dir:
             ap.error("--journal-every requires --ckpt-dir (the journal is "
@@ -326,14 +348,16 @@ def main(argv=None):
                                     retain_done=args.retain_done,
                                     pool_high_water=high_water,
                                     journal_every=args.journal_every,
-                                    devices=args.devices)
+                                    devices=args.devices,
+                                    sanitize=args.sanitize)
     else:
         engine = SolveEngine(lanes=args.lanes, checkpoint_dir=args.ckpt_dir,
                              ckpt_every=args.ckpt_every,
                              retain_done=args.retain_done,
                              pool_high_water=high_water,
                              journal_every=args.journal_every,
-                             devices=args.devices)
+                             devices=args.devices,
+                             sanitize=args.sanitize)
     service = SolveService(engine)
     if args.trace:
         engine.trace(args.trace)
@@ -357,7 +381,14 @@ def main(argv=None):
             engine.snapshot()    # a kill during warmup can't lose the queue
     done_before = {j for j, r in engine.jobs.items() if r.status == "done"}
     t0 = time.time()
-    done = engine.run()
+    if args.compile_budget is not None:
+        from repro.analysis import compile_guard
+        with compile_guard(args.compile_budget, "solve_server drain") as cg:
+            done = engine.run()
+        print(f"[solve_server] compile_guard: {cg.count} executable(s) "
+              f"built (budget {args.compile_budget})", flush=True)
+    else:
+        done = engine.run()
     dt = max(time.time() - t0, 1e-9)
     if args.ckpt_dir:
         # a final base: in journal mode the last generation's results may
@@ -375,8 +406,11 @@ def main(argv=None):
              "jobs_per_s": done / dt, "fe_per_s": fe / dt,
              "families": len(engine.pools),
              "families_created": len(engine.family_keys_seen),
-             "devices": engine.n_dev,
+             "devices": engine.n_dev, "sanitize": engine.sanitize,
              "swept_waste": waste, **engine.memory_stats()}
+    if args.compile_budget is not None:
+        stats["compiles"] = cg.count
+        stats["compile_budget"] = args.compile_budget
     if engine.ckpt is not None and engine.journal_every is not None:
         stats["journal"] = engine.ckpt.journal_stats()
     print(f"[solve_server] {done} jobs in {dt:.2f}s over "
@@ -384,7 +418,7 @@ def main(argv=None):
           f"({stats['families_created']} executable families, "
           f"{0.0 if waste is None else waste:.1%} swept-row waste): "
           f"{stats['jobs_per_s']:.1f} jobs/s, {stats['fe_per_s']:.3g} "
-          f"probe-FE/s", flush=True)
+          "probe-FE/s", flush=True)
     if args.trace:
         print(f"[solve_server] trace -> {engine.trace_export()}",
               flush=True)

@@ -22,7 +22,6 @@ import sys
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import ARCHS, reduced as reduced_fn

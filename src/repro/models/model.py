@@ -123,7 +123,6 @@ class Model:
             positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
             if cfg.mrope:
                 positions = jnp.broadcast_to(positions[:, None], (b, 3, t))
-        cross_kv = None
         if cfg.encoder_layers > 0:
             assert frames is not None, "enc-dec arch needs frames"
             enc_out = self.encode(params, frames)

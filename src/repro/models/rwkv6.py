@@ -106,7 +106,8 @@ def rwkv6_apply(params, cfg, x):
     b = x.shape[0]
     S0 = jnp.zeros((b, cfg.rwkv_heads, cfg.rwkv_head_dim, cfg.rwkv_head_dim),
                    jnp.float32)
-    seq_first = lambda a: jnp.moveaxis(a, 1, 0)        # (t, b, h, hd)
+    def seq_first(a):
+        return jnp.moveaxis(a, 1, 0)                   # (t, b, h, hd)
     _, ys = jax.lax.scan(step, S0, tuple(map(seq_first, (r, k, v, logw))))
     y = jnp.moveaxis(ys, 0, 1).reshape(*x.shape)       # (b, t, d)
     y = _group_norm(params, y, cfg.rwkv_heads).astype(x.dtype) * g
@@ -131,7 +132,8 @@ def rwkv6_prefill(params, cfg, x):
     b = x.shape[0]
     S0 = jnp.zeros((b, cfg.rwkv_heads, cfg.rwkv_head_dim, cfg.rwkv_head_dim),
                    jnp.float32)
-    seq_first = lambda a: jnp.moveaxis(a, 1, 0)
+    def seq_first(a):
+        return jnp.moveaxis(a, 1, 0)
     S, ys = jax.lax.scan(step, S0, tuple(map(seq_first, (r, k, v, logw))))
     y = jnp.moveaxis(ys, 0, 1).reshape(*x.shape)
     y = _group_norm(params, y, cfg.rwkv_heads).astype(x.dtype) * g

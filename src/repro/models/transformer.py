@@ -16,7 +16,6 @@ Caches mirror the same layout so decode scans over stacked group caches.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

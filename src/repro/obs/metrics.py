@@ -15,6 +15,7 @@ flattens everything into one JSON-friendly dict — the canonical form
 ``SolveEngine.stats()`` / ``SolveService.stats()`` build on — and
 ``render_prometheus()`` emits the text exposition format.
 """
+# repro: gauge-path — stdlib-only by invariant: observing must never sync the device
 from __future__ import annotations
 
 import threading

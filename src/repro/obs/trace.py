@@ -19,6 +19,7 @@ viewer. The engine emits ``step`` as the parent span with the phase
 spans (``refill``, ``plan_build``, ``fused_sweep``, ``harvest``, ...)
 inside it, all on the stepping thread's ``tid``.
 """
+# repro: gauge-path — stdlib-only by invariant: observing must never sync the device
 from __future__ import annotations
 
 import json

@@ -11,7 +11,6 @@ the paper's "zero-RAM" thesis made measurable in memory_analysis().
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +29,8 @@ class AdamWConfig:
 
 def init_state(params):
     """fp32 master + moments (cast from bf16 params)."""
-    f32 = lambda p: p.astype(jnp.float32)
+    def f32(p):
+        return p.astype(jnp.float32)
     return {
         "step": jnp.zeros((), jnp.int32),
         "master": jax.tree.map(f32, params),

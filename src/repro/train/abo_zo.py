@@ -20,8 +20,7 @@ FE accounting matches the paper's semantics: m forward passes per step.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -15,8 +15,6 @@ Distributed-optimization features:
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -2,7 +2,6 @@
 structure), monotone-pass invariant, paper-pure vs continuation modes,
 black-box fallback, and the ABO-vs-Nelder-Mead comparison the paper makes."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

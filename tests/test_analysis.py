@@ -1,0 +1,352 @@
+"""Guardrails: the invariant lint (RPR001-RPR006) and the runtime
+sanitizers (compile_guard / sync_guard / assert_donated), plus the
+regression that resize_pool_state stays compile-free and donating on
+repeat transitions — the first bug the sanitizers caught."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import (CompileBudgetExceeded, DonationError,
+                            HostSyncError, allowed_sync, assert_donated,
+                            compile_guard, sync_guard)
+from repro.analysis.lint import lint_file, lint_paths, main as lint_main
+from repro.core import ABOConfig, abo_minimize
+from repro.engine import JobSpec, SolveEngine
+from repro.engine.batched import PoolState, resize_pool_state
+from repro.objectives import OBJECTIVES
+
+
+def _rules(findings):
+    return [f.rule for f in findings]
+
+
+# Fixture sources are assembled from these pieces so that the markers do
+# not appear literally in THIS file's lines — the linter scans raw lines
+# for tags/allows, and would otherwise treat the fixtures' markers as
+# ours (dogfooding hazard: this file is linted in CI too).
+_HOT = "# repro: " + "hot-path\n"
+_GAUGE = "# repro: " + "gauge-path\n"
+_ALLOW = "# repro: " + "allow"
+
+
+# --------------------------------------------------------------------------
+# RPR001 — host transfers in hot-path files
+# --------------------------------------------------------------------------
+def test_rpr001_fires_only_in_tagged_files():
+    src = "f = float(result)\na = np.asarray(x)\nv = x.item()\n"
+    assert _rules(lint_file("plain.py", src)) == []  # untagged: silent
+    tagged = _HOT + src
+    found = lint_file("hot.py", tagged)
+    assert _rules(found) == ["RPR001"] * 3
+    assert found[0].line == 2
+
+
+def test_rpr001_skips_host_side_idioms():
+    src = (_HOT
+           + "a = float('1.5')\n"      # literal: no device involved
+           + "b = int(n)\n"            # host plan arithmetic
+           + "c = np.array([1, 2])\n")  # host list -> ndarray
+    assert lint_file("hot.py", src) == []
+
+
+# --------------------------------------------------------------------------
+# RPR002 — _block_step fencing
+# --------------------------------------------------------------------------
+def test_rpr002_unfenced_block_step():
+    src = "out = _block_step(x, aggs)\n"
+    found = lint_file("core.py", src)
+    assert _rules(found) == ["RPR002"] and found[0].line == 1
+
+
+def test_rpr002_lexical_fence_passes():
+    src = "out = optimization_barrier(_block_step(x, aggs))\n"
+    assert lint_file("core.py", src) == []
+
+
+def test_rpr002_closure_fence_passes():
+    # the engine/batched.py form: _block_step inside a local def whose
+    # name is fenced at the call site
+    src = ("def sweep(x, aggs):\n"
+           "    return _block_step(x, aggs)\n"
+           "out = optimization_barrier(jax.vmap(sweep)(xs, ag))\n")
+    assert lint_file("core.py", src) == []
+
+
+# --------------------------------------------------------------------------
+# RPR003 — gauge paths stay jax-free
+# --------------------------------------------------------------------------
+def test_rpr003_gauge_path():
+    src = (_GAUGE
+           + "import jax\n"
+           + "from jax import numpy\n"
+           + "y = jnp.sum(x)\n")
+    assert _rules(lint_file("obs.py", src)) == ["RPR003"] * 3
+    # stdlib-only gauge file is clean
+    assert lint_file("obs.py", _GAUGE + "import time\n") == []
+
+
+# --------------------------------------------------------------------------
+# RPR004 — wall-clock in measured regions
+# --------------------------------------------------------------------------
+def test_rpr004_wall_clock_in_jit_and_span():
+    src = ("@jax.jit\n"
+           "def f(x):\n"
+           "    t = time.time()\n"
+           "    return x + t\n"
+           "with tracer.span('step'):\n"
+           "    t1 = time.time()\n")
+    found = lint_file("m.py", src)
+    assert _rules(found) == ["RPR004"] * 2
+    assert [f.line for f in found] == [3, 6]
+    # outside any measured region, wall-clock reads are the tracer's job
+    assert lint_file("m.py", "t0 = time.time()\n") == []
+
+
+# --------------------------------------------------------------------------
+# RPR005 — jit audit in engine/
+# --------------------------------------------------------------------------
+def test_rpr005_engine_jit_audit():
+    bare = "fn = jax.jit(run)\n"
+    audited = "fn = jax.jit(run, donate_argnums=(0,))\n"
+    static = "fn = jax.jit(run, static_argnames=('lanes',))\n"
+    assert _rules(lint_file("src/repro/engine/x.py", bare)) == ["RPR005"]
+    assert lint_file("src/repro/engine/x.py", audited) == []
+    assert lint_file("src/repro/engine/x.py", static) == []
+    assert lint_file("src/repro/core/x.py", bare) == []  # engine/ only
+
+
+# --------------------------------------------------------------------------
+# Suppression mechanics (incl. RPR006)
+# --------------------------------------------------------------------------
+def test_allow_with_justification_suppresses():
+    src = (_HOT
+           + f"f = float(result)  {_ALLOW}[RPR001] end-of-run sync\n")
+    assert lint_file("hot.py", src) == []
+
+
+def test_bare_allow_is_rpr006_and_suppresses_nothing():
+    src = _HOT + f"f = float(result)  {_ALLOW}[RPR001]\n"
+    assert sorted(_rules(lint_file("hot.py", src))) == ["RPR001", "RPR006"]
+
+
+def test_allow_unknown_rule_is_rpr006():
+    src = f"x = 1  {_ALLOW}[RPR999] because reasons\n"
+    found = lint_file("a.py", src)
+    assert _rules(found) == ["RPR006"] and "unknown rule" in found[0].message
+
+
+def test_comment_line_allow_covers_next_code_line():
+    src = (_HOT
+           + f"{_ALLOW}[RPR001] harvest is the designed sync point\n"
+           + "# (continuation of the comment)\n"
+           + "f = float(result)\n")
+    assert lint_file("hot.py", src) == []
+
+
+def test_def_line_allow_covers_whole_body():
+    src = (_HOT
+           + f"{_ALLOW}[RPR001] cold path: every transfer here intended\n"
+           + "def restore(x):\n"
+           + "    a = float(x)\n"
+           + "    return np.asarray(a)\n"
+           + "f = float(other)\n")  # outside the def: still flagged
+    found = lint_file("hot.py", src)
+    assert _rules(found) == ["RPR001"] and found[0].line == 6
+
+
+# --------------------------------------------------------------------------
+# Driver-level behaviour
+# --------------------------------------------------------------------------
+def test_repo_is_lint_clean():
+    assert lint_paths(["src"]) == []
+
+
+def test_list_rules_exits_zero(capsys):
+    assert lint_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rule in ("RPR001", "RPR006"):
+        assert rule in out
+
+
+def test_syntax_error_is_reported_not_raised():
+    found = lint_file("bad.py", "def f(:\n")
+    assert _rules(found) == ["RPR000"]
+
+
+# --------------------------------------------------------------------------
+# compile_guard
+# --------------------------------------------------------------------------
+def test_compile_guard_over_budget_raises():
+    # a closure constant makes the jit cache-unique to this test
+    salt = np.random.default_rng(0).standard_normal()
+
+    @jax.jit
+    def f(x):
+        return x * salt
+
+    x = jnp.arange(4.0)
+    with pytest.raises(CompileBudgetExceeded):
+        with compile_guard(0, "cold jit"):
+            f(x).block_until_ready()
+
+
+def test_compile_guard_warm_region_is_free():
+    salt = np.random.default_rng(1).standard_normal()
+
+    @jax.jit
+    def f(x):
+        return x + salt
+
+    x = jnp.arange(8.0)
+    f(x).block_until_ready()                      # warm outside the region
+    with compile_guard(0, "warm jit") as g:
+        f(x).block_until_ready()
+    assert g.count == 0
+
+
+def test_compile_guard_reports_count_on_success():
+    salt = np.random.default_rng(2).standard_normal()
+
+    @jax.jit
+    def f(x):
+        return x - salt
+
+    x = jnp.arange(6.0)
+    with compile_guard(4, "cold jit, generous budget") as g:
+        f(x).block_until_ready()
+    assert 1 <= g.count <= 4
+
+
+# --------------------------------------------------------------------------
+# sync_guard / allowed_sync
+# --------------------------------------------------------------------------
+def test_sync_guard_blocks_implicit_syncs():
+    x = jnp.arange(4.0)
+    jnp.sum(x).block_until_ready()
+    with sync_guard():
+        with pytest.raises(HostSyncError):
+            float(jnp.sum(x))
+        with pytest.raises(HostSyncError):
+            np.asarray(x)
+        with pytest.raises(HostSyncError):
+            x.tolist()
+        with pytest.raises(HostSyncError):
+            bool(jnp.all(x >= 0))
+
+
+def test_sync_guard_allows_declared_sync_points():
+    x = jnp.arange(4.0)
+    with sync_guard():
+        with allowed_sync("test read-back"):
+            assert np.asarray(x).shape == (4,)
+            assert float(jnp.sum(x)) == 6.0
+        # the allowance does not leak past its block
+        with pytest.raises(HostSyncError):
+            float(jnp.sum(x))
+
+
+def test_allowed_sync_requires_reason():
+    with pytest.raises(ValueError):
+        with allowed_sync(""):
+            pass
+
+
+def test_sync_guard_ignores_host_numpy_and_exits_cleanly():
+    h = np.arange(5.0)
+    x = jnp.arange(5.0)
+    with sync_guard():
+        assert float(h.sum()) == 10.0            # host arrays unaffected
+        assert np.asarray(h) is not None
+    assert float(jnp.sum(x)) == 10.0             # guard fully lifted
+
+
+# --------------------------------------------------------------------------
+# assert_donated
+# --------------------------------------------------------------------------
+def test_assert_donated_pass_and_fail():
+    @jax.jit
+    def bump(a):
+        return a + 1.0
+
+    donating = jax.jit(lambda a: a + 1.0, donate_argnums=(0,))
+    a = jnp.arange(16.0)
+    out = donating(a)
+    out.block_until_ready()
+    assert assert_donated([a], "donating call") == 1
+
+    b = jnp.arange(16.0)
+    out2 = bump(b)
+    out2.block_until_ready()
+    with pytest.raises(DonationError):
+        assert_donated([b], "non-donating call")
+
+
+def test_assert_donated_skips_non_arrays():
+    assert assert_donated([None, 3, "x", {"k": [2.5]}], "no arrays") == 0
+
+
+# --------------------------------------------------------------------------
+# Regression: resize_pool_state is cached-jit, not eager array surgery
+# --------------------------------------------------------------------------
+def _tiny_state(pages=8, lanes=4, block=16):
+    return PoolState(
+        pool=jnp.zeros((pages, block), jnp.float32),
+        aggs=jnp.zeros((lanes + 1, 4), jnp.float32),
+        hist=jnp.zeros((lanes + 1, 3), jnp.float32),
+        pass_idx=jnp.zeros((lanes + 1,), jnp.int32),
+        n_valid=jnp.zeros((lanes + 1,), jnp.int32),
+    )
+
+
+def test_resize_recompile_regression():
+    """The same shape transition twice must compile exactly once: the old
+    eager .at[].set() path dispatched fresh one-op executables per rung,
+    which engine steady-state drains then re-compiled forever."""
+    s1 = resize_pool_state(_tiny_state(), lanes=4, pages=12)  # grow pages
+    assert s1.pool.shape == (12, 16)
+    with compile_guard(0, "repeat resize transition"):
+        s2 = resize_pool_state(_tiny_state(), lanes=4, pages=12)
+        jax.block_until_ready(s2.pool)
+
+
+def test_resize_donates_surviving_shapes():
+    """Lane-preserving page growth must donate the per-slot scalars (their
+    shapes survive), and a pure page-grow cannot donate the pool."""
+    st = _tiny_state()
+    aggs0, hist0 = st.aggs, st.hist
+    out = resize_pool_state(st, lanes=4, pages=12)
+    jax.block_until_ready(out.pool)
+    assert assert_donated([aggs0, hist0], "resize slots") == 2
+
+
+# --------------------------------------------------------------------------
+# Sanitized engine end-to-end
+# --------------------------------------------------------------------------
+def test_engine_sanitized_run_is_bit_identical():
+    """A full sanitized drain raises on any undeclared sync or failed
+    donation, and the results stay bit-identical to abo_minimize."""
+    cfg = ABOConfig(samples_per_pass=12, n_passes=3)
+    specs = [JobSpec("griewank", 64, cfg, seed=7),
+             JobSpec("sphere", 96, cfg, seed=8)]
+    eng = SolveEngine(lanes=2, sanitize=True)
+    ids = eng.submit_many(specs)
+    assert eng.run() == len(specs)
+    for spec, jid in zip(specs, ids):
+        r = eng.result(jid)
+        solo = abo_minimize(OBJECTIVES[spec.objective], spec.n,
+                            config=spec.config, seed=spec.seed)
+        assert np.float32(r.fun).tobytes() == np.float32(solo.fun).tobytes()
+        assert np.asarray(r.x).tobytes() == np.asarray(solo.x).tobytes()
+
+
+def test_engine_sanitized_steady_state_compiles_nothing():
+    cfg = ABOConfig(samples_per_pass=12, n_passes=3)
+    eng = SolveEngine(lanes=2, sanitize=True)
+    eng.submit_many([JobSpec("griewank", 64, cfg, seed=i) for i in range(4)])
+    assert eng.run() == 4                         # warm: compiles here
+    eng2 = SolveEngine(lanes=2, sanitize=True)
+    eng2.submit_many([JobSpec("griewank", 64, cfg, seed=10 + i)
+                      for i in range(4)])
+    with compile_guard(0, "steady-state drain"):
+        assert eng2.run() == 4

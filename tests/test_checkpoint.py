@@ -1,8 +1,5 @@
 """Checkpoint manager: roundtrip, atomic commit, rotation, corruption
 fallback, async save, elastic restore, seed-redispatch (straggler policy)."""
-import json
-import pathlib
-import shutil
 
 import numpy as np
 import jax

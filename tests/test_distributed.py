@@ -1,13 +1,11 @@
 """Multi-device tests — run in SUBPROCESSES with their own XLA_FLAGS so this
 pytest process keeps its single CPU device (conftest guarantee)."""
-import json
 import os
 import pathlib
 import subprocess
 import sys
 import textwrap
 
-import pytest
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
 

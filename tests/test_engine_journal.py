@@ -11,7 +11,6 @@ bit-identical to standalone ``abo_minimize`` — the fixed-tile reduction
 reductions length-invariant, where the old width-keyed chunking diverged.
 """
 import numpy as np
-import pytest
 
 from repro.core import ABOConfig, abo_minimize
 from repro.engine import (CANCELLED, DONE, QUEUED, JobSpec, SolveEngine,

@@ -10,7 +10,7 @@ try:        # hypothesis is a [test] extra — property tests skip without it
 except ImportError:
     given = settings = st = None
 
-from repro.objectives import (GRIEWANK, OBJECTIVES, RASTRIGIN, SCHWEFEL_222,
+from repro.objectives import (GRIEWANK, RASTRIGIN, SCHWEFEL_222,
                               SHIFTED_SPHERE, SPHERE, griewank, griewank_naive)
 
 

@@ -1,7 +1,6 @@
 """Prefill-with-cache: prefill(prompt) + decode_step(continuation) must
 equal full forward over the concatenation — for every cache family
 (full attn, SWA ring incl. wrap-around, RG-LRU, RWKV6, MoE)."""
-import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest

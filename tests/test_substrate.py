@@ -14,7 +14,7 @@ except ImportError:
 
 from repro.configs import ARCHS, reduced
 from repro.data.synthetic import BigramStream, StreamConfig
-from repro.distributed.hints import hint, sharding_rules
+from repro.distributed.hints import hint
 from repro.models.model import Model
 from repro.optim.adamw import AdamWConfig, apply_update, init_state
 
