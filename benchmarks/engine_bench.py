@@ -525,6 +525,69 @@ def engine_sanitized():
                "bit_identical=True")
 
 
+# ---- faulted traffic: quarantine cost under injected poison ---------------
+# The mixed-n burst with ~10% of jobs deterministically poisoned at
+# objective_eval (NaN x0 lanes -> non-finite results quarantined to FAILED
+# at harvest). Measures what a realistic failure rate costs the healthy
+# jobs: FAILED lanes are evicted and their pages recycled at the same
+# harvest boundary as DONE ones, so throughput degradation should be
+# roughly the lost jobs' share of compute, not a stall.
+FAULT_SPEC = "objective_eval:every=10:seed=7"
+FAULT_EXPECTED = MIXED_JOBS // 10        # every=10 on 1-based job ordinals
+
+
+def engine_faulted():
+    import numpy as np
+
+    from repro.engine.jobs import FAILED
+
+    def faulted(specs):
+        eng = SolveEngine(lanes=MIXED_LANES, sanitize=SANITIZE,
+                          faults=FAULT_SPEC)
+        eng.submit_many(specs)
+        t0 = time.perf_counter()
+        eng.run()
+        return time.perf_counter() - t0, eng
+
+    _engine(_mixed_specs(0), MIXED_LANES)    # warm clean path
+    faulted(_mixed_specs(0))                 # warm place_x poison path too
+    dt_clean = _median(_engine(_mixed_specs(1000 + r), MIXED_LANES)[0]
+                       for r in range(REPEATS))
+    runs = sorted((faulted(_mixed_specs(1000 + r)) for r in range(REPEATS)),
+                  key=lambda t: t[0])
+    dt_fault, eng = runs[len(runs) // 2]
+    failed = sum(1 for rec in eng.jobs.values() if rec.status == FAILED)
+    if failed != FAULT_EXPECTED:
+        raise AssertionError(
+            f"deterministic fault plan drifted: {failed} FAILED, "
+            f"expected {FAULT_EXPECTED}")
+    # a surviving job must still match standalone abo_minimize bit-for-bit
+    rec0 = eng.jobs[min(eng.jobs)]           # job-000000: ordinal 1, clean
+    s0 = _mixed_specs(1000 + REPEATS - 1)[0]
+    ref = abo_minimize(OBJECTIVES[s0.objective], s0.n, config=s0.config,
+                       seed=s0.seed)
+    if not (rec0.fun == float(ref.fun)
+            and np.asarray(rec0.x).tobytes()
+            == np.asarray(ref.x).tobytes()):
+        raise AssertionError(
+            f"faulted-run survivor drifted from abo_minimize for {s0}: "
+            f"{rec0.fun!r} vs {ref.fun!r}")
+    survivors = MIXED_JOBS - failed
+    degradation = dt_fault / dt_clean - 1.0
+    _METRICS["engine_faulted"] = {
+        "jobs": MIXED_JOBS, "failed": failed,
+        "fault_spec": FAULT_SPEC,
+        "jobs_per_s_clean": MIXED_JOBS / dt_clean,
+        "survivor_jobs_per_s": survivors / dt_fault,
+        "degradation_frac": degradation,
+        "survivors_bit_identical": True,     # just proved it
+    }
+    yield (f"engine_faulted_k{MIXED_JOBS}", dt_fault / survivors * 1e6,
+           f"survivor_jobs_per_s={survivors / dt_fault:.1f} "
+           f"failed={failed} degradation={degradation:+.1%} "
+           "survivors_bit_identical=True")
+
+
 def write_artifact(path: str | pathlib.Path = ARTIFACT) -> pathlib.Path:
     """Append this run's metrics to the JSON perf trajectory (a list of
     run records, newest last). Partial runs append whatever scenarios
@@ -564,6 +627,8 @@ def main():
     for name, us, derived in engine_elastic():
         print(f"{name},{us:.1f},{derived}")
     for name, us, derived in engine_mixed_n():
+        print(f"{name},{us:.1f},{derived}")
+    for name, us, derived in engine_faulted():
         print(f"{name},{us:.1f},{derived}")
     for name, us, derived in engine_roofline():
         print(f"{name},{us:.1f},{derived}")

@@ -20,8 +20,8 @@ def main() -> None:
                     help="paper-scale sizes (up to 1e9 decision variables)")
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table2,table3,kernels,abo_zo,"
-                         "engine,engine_mixed,engine_roofline,"
-                         "engine_sharded")
+                         "engine,engine_mixed,engine_faulted,"
+                         "engine_roofline,engine_sharded")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -55,6 +55,12 @@ def main() -> None:
     if want("engine_mixed"):
         from benchmarks.engine_bench import engine_mixed_n
         rows += list(engine_mixed_n())
+    if want("engine_faulted"):
+        # quarantine economics: mixed-n burst with ~10% of jobs poisoned
+        # (deterministic fault plan); survivor throughput + degradation
+        # vs the clean lap -> BENCH_engine.json
+        from benchmarks.engine_bench import engine_faulted
+        rows += list(engine_faulted())
     if want("engine_roofline"):
         # achieved vs measured-peak DRAM bandwidth of the fused sweep
         # (analytic bytes/coordinate/pass + HLO cross-check)
@@ -67,8 +73,8 @@ def main() -> None:
         # digest-asserted) -> BENCH_engine.json
         from benchmarks.engine_bench import engine_sharded
         rows += list(engine_sharded())
-    if (want("engine") or want("engine_mixed") or want("engine_roofline")
-            or want("engine_sharded")):
+    if (want("engine") or want("engine_mixed") or want("engine_faulted")
+            or want("engine_roofline") or want("engine_sharded")):
         # machine-readable perf trajectory (jobs/s, speedup vs the
         # in-bench sequential lap, executable count, padded-compute waste)
         from benchmarks import engine_bench

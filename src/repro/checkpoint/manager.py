@@ -45,13 +45,22 @@ def _flatten(tree) -> tuple[list, Any]:
 
 class CheckpointManager:
     def __init__(self, directory: str | pathlib.Path, *, keep: int = 3,
-                 journal_segment_records: int = 1024, metrics=None):
+                 journal_segment_records: int = 1024, metrics=None,
+                 faults=None):
         """``metrics`` (an optional ``repro.obs.MetricsRegistry``) hooks
         snapshot/journal instrumentation in: write-duration histogram,
         snapshot and journal-record counters. Journal *gauges* (lag,
         segments, bytes) are sampled by the owner at scrape time —
-        they cost file stats, which don't belong on the save path."""
+        they cost file stats, which don't belong on the save path.
+
+        ``faults`` (an optional ``repro.engine.faults.FaultRegistry``)
+        arms the durable-state failpoints: ``snapshot_write`` fires
+        after the leaves land but before the manifest commit (the
+        window a real crash tears a snapshot in), ``journal_append``
+        fires mid-record (a kill there leaves a genuinely torn tail).
+        None (the default) costs nothing."""
         self.dir = pathlib.Path(directory)
+        self._faults = faults
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self.journal_segment_records = max(journal_segment_records, 1)
@@ -105,6 +114,10 @@ class CheckpointManager:
         tmp.mkdir(parents=True)
         for i, leaf in enumerate(leaves):
             np.save(tmp / f"leaf_{i:05d}.npy", leaf)
+        if self._faults is not None:
+            # failpoint: leaves are on disk, manifest is not — a kill
+            # here is exactly the torn .tmp snapshot latest_step() skips
+            self._faults.trip("snapshot_write")
         manifest = {
             "step": step,
             "treedef": str(treedef),
@@ -269,7 +282,20 @@ class CheckpointManager:
                     count = 0
                 if fh is None:       # one open per segment, not per record
                     fh = open_seg.open("a")
-                fh.write(json.dumps({"seq": seq, **rec}) + "\n")
+                line = json.dumps({"seq": seq, **rec}) + "\n"
+                if self._faults is not None:
+                    f = self._faults.check("journal_append")
+                    if f is not None:
+                        if f.kind == "kill":
+                            # a kill mid-append leaves a torn tail: land
+                            # the front half of the record, then die —
+                            # what a real crash between write and flush
+                            # produces (replay/fsck truncate it)
+                            fh.write(line[: max(len(line) // 2, 1)])
+                            fh.flush()
+                        f.execute()  # kill exits the process; raise
+                        #              propagates with nothing written
+                fh.write(line)
                 count += 1
         finally:
             if fh is not None:

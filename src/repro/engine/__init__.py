@@ -12,10 +12,25 @@ client-input journal between rare base snapshots, replayed on resume).
 With ``devices=D`` the page pools shard across a device mesh (lanes
 place whole per device; one owner-psum per pass; donated zero-copy
 stepping) and results remain bit-identical at every device count —
-snapshots reshard on load when resumed under a different D."""
-from repro.engine.jobs import CANCELLED, DONE, QUEUED, RUNNING, JobSpec, JobState
-from repro.engine.scheduler import LanePool, SolveEngine
+snapshots reshard on load when resumed under a different D.
+
+Failure handling (``faults``/``max_queue``/``memory_budget_bytes``):
+non-finite per-lane results quarantine to a terminal FAILED status at
+the harvest boundary (siblings stay bit-identical), admission control
+rejects with typed errors under queue/memory pressure, and the
+deterministic fault-injection registry (repro.engine.faults) arms
+failpoints for chaos testing — off by default, null-singleton cheap."""
+from repro.engine.faults import (Fault, FaultRegistry, InjectedFault,
+                                 NULL_FAULTS, parse_fault_spec)
+from repro.engine.jobs import (CANCELLED, DONE, FAILED, QUEUED, RUNNING,
+                               JobSpec, JobState)
+from repro.engine.scheduler import (AdmissionError, LanePool,
+                                    MemoryBudgetError, QueueFullError,
+                                    SolveEngine)
 from repro.engine.service import SolveService
 
 __all__ = ["JobSpec", "JobState", "LanePool", "SolveEngine", "SolveService",
-           "QUEUED", "RUNNING", "DONE", "CANCELLED"]
+           "QUEUED", "RUNNING", "DONE", "CANCELLED", "FAILED",
+           "AdmissionError", "QueueFullError", "MemoryBudgetError",
+           "Fault", "FaultRegistry", "InjectedFault", "NULL_FAULTS",
+           "parse_fault_spec"]

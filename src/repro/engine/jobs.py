@@ -22,7 +22,8 @@ QUEUED = "queued"
 RUNNING = "running"
 DONE = "done"
 CANCELLED = "cancelled"
-STATUSES = (QUEUED, RUNNING, DONE, CANCELLED)
+FAILED = "failed"       # terminal: non-finite fun/x quarantined, or TTL expiry
+STATUSES = (QUEUED, RUNNING, DONE, CANCELLED, FAILED)
 
 # Journal record kinds (the append-only checkpoint journal, see
 # scheduler.SolveEngine). The journal is an *intent log* of client inputs
@@ -32,9 +33,13 @@ STATUSES = (QUEUED, RUNNING, DONE, CANCELLED)
 #   submit  {"job_id", "spec": JobSpec.to_dict()}
 #   cancel  {"job_id"}
 #   fetched {"job_id"}   # result delivered -> snapshots may drop x / GC
+#   expire  {"job_id"}   # TTL/deadline passed while queued — wall-clock
+#                          decisions are journaled so replay re-derives the
+#                          same FAILED set without re-reading the clock
 J_SUBMIT = "submit"
 J_CANCEL = "cancel"
 J_FETCHED = "fetched"
+J_EXPIRE = "expire"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +52,9 @@ class JobSpec:
     seed: int | None = None          # random feasible start
     x0: tuple[float, ...] | None = None   # explicit start (overrides seed)
     tag: str = ""                    # free-form client label
+    ttl_s: float | None = None       # queue-time budget: a job still QUEUED
+    #                                  this many seconds after submit is
+    #                                  expired (FAILED) instead of placed
 
     def __post_init__(self):
         if not isinstance(self.config, ABOConfig):
@@ -71,6 +79,8 @@ class JobSpec:
         if self.x0 is not None and len(self.x0) != self.n:
             raise ValueError(
                 f"x0 has {len(self.x0)} entries for an n={self.n} job")
+        if self.ttl_s is not None and not self.ttl_s > 0:
+            raise ValueError(f"ttl_s must be > 0, got {self.ttl_s}")
 
     def to_dict(self) -> dict:
         d = {"objective": self.objective, "n": self.n,
@@ -79,6 +89,8 @@ class JobSpec:
             d["seed"] = int(self.seed)   # np.integer seeds aren't JSON
         if self.x0 is not None:
             d["x0"] = list(self.x0)
+        if self.ttl_s is not None:
+            d["ttl_s"] = float(self.ttl_s)
         return d
 
     @classmethod
@@ -98,7 +110,7 @@ class JobSpec:
                    config=cfg or ABOConfig(),
                    seed=d.get("seed"),
                    x0=tuple(float(v) for v in x0) if x0 is not None else None,
-                   tag=d.get("tag", ""))
+                   tag=d.get("tag", ""), ttl_s=d.get("ttl_s"))
 
 
 @dataclasses.dataclass
@@ -112,6 +124,7 @@ class JobState:
     history: list[float] = dataclasses.field(default_factory=list)
     fun: float | None = None
     x: np.ndarray | None = None      # final solution (DONE only)
+    error: str | None = None         # FAILED detail (quarantine/TTL reason)
     fetched: bool = False            # result() delivered at least once —
     #                                  snapshots stop carrying x (GC)
     done_seq: int | None = None      # engine-wide finish order (DONE or
@@ -138,6 +151,8 @@ class JobState:
              "tag": self.spec.tag}
         if self.fun is not None:
             d["fun"] = self.fun
+        if self.error is not None:
+            d["error"] = self.error
         return d
 
     def result(self) -> ABOResult:
@@ -168,6 +183,8 @@ class JobState:
              "history": [float(v) for v in self.history]}
         if self.fun is not None:
             d["fun"] = self.fun
+        if self.error is not None:
+            d["error"] = self.error
         if self.done_seq is not None:
             d["done_seq"] = self.done_seq
         for k in ("t_submit", "t_place", "t_done", "t_fetch"):
@@ -189,6 +206,7 @@ class JobState:
         return cls(job_id=d["job_id"], spec=JobSpec.from_dict(d["spec"]),
                    status=d["status"], passes_done=d.get("passes_done", 0),
                    history=list(d.get("history", [])), fun=d.get("fun"),
+                   error=d.get("error"),
                    x=x, fetched=d.get("fetched", False),
                    done_seq=d.get("done_seq"),
                    t_submit=d.get("t_submit"), t_place=d.get("t_place"),

@@ -91,15 +91,31 @@ from repro.obs.roofline import plan_pass_bytes
 from repro.obs.trace import Tracer
 from repro.core.abo import ABOConfig
 from repro.engine import batched
-from repro.engine.jobs import (CANCELLED, DONE, J_CANCEL, J_FETCHED,
-                               J_SUBMIT, QUEUED, RUNNING, JobSpec, JobState,
-                               next_job_id)
+from repro.engine.faults import resolve_faults
+from repro.engine.jobs import (CANCELLED, DONE, FAILED, J_CANCEL, J_EXPIRE,
+                               J_FETCHED, J_SUBMIT, QUEUED, RUNNING, JobSpec,
+                               JobState, next_job_id)
 from repro.objectives import OBJECTIVES
 from repro.objectives.base import SeparableObjective
 
 # shared no-op context: sanitize-mode hooks cost one attribute check and
 # this reusable nullcontext when the mode is off — no allocation per step
 _NULL = contextlib.nullcontext()
+
+
+class AdmissionError(RuntimeError):
+    """Typed submit() rejection (backpressure, not malformed input — a
+    RuntimeError subclass so wire front-ends can keep mapping ValueError
+    to 400 while these map to 429/503)."""
+
+
+class QueueFullError(AdmissionError):
+    """submit() rejected: the bounded queue is at max_queue."""
+
+
+class MemoryBudgetError(AdmissionError):
+    """submit() rejected: admitting the job would push projected pool
+    device bytes past memory_budget_bytes."""
 
 
 @dataclasses.dataclass
@@ -593,9 +609,17 @@ class SolveEngine:
                  pool_high_water: float | None = 2.0,
                  journal_every: int | None = None,
                  devices: int | None = None,
-                 sanitize: bool = False):
+                 sanitize: bool = False,
+                 faults=None,
+                 max_queue: int | None = None,
+                 memory_budget_bytes: int | None = None):
         if lanes < 1:
             raise ValueError(f"lanes must be >= 1, got {lanes}")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        if memory_budget_bytes is not None and memory_budget_bytes < 1:
+            raise ValueError("memory_budget_bytes must be >= 1, got "
+                             f"{memory_budget_bytes}")
         if devices is not None and devices < 1:
             raise ValueError(f"devices must be >= 1, got {devices}")
         self.n_dev = int(devices or 1)
@@ -648,6 +672,18 @@ class SolveEngine:
         # allowed_sync, and every fused dispatch asserts its donated
         # input buffers actually died (single-copy pool discipline)
         self.sanitize = bool(sanitize)
+        # fault injection (repro.engine.faults): off by default, the null
+        # registry — every failpoint costs one dict .get miss, same
+        # zero-overhead-when-disabled discipline as the obs tracer
+        self.faults = resolve_faults(faults)
+        # admission control: bounded queue + projected-memory shedding
+        # (None = unbounded, the pre-admission behavior)
+        self.max_queue = max_queue
+        self.memory_budget_bytes = memory_budget_bytes
+        # projected per-job pool bytes, cached by (family key, pages) —
+        # jax.eval_shape is host-only but not free, and admission runs
+        # per submit
+        self._job_bytes_cache: dict[tuple, int] = {}
         self.dtype = dtype
         self.objectives = dict(objectives or OBJECTIVES)
         self.jobs: dict[str, JobState] = {}
@@ -684,6 +720,15 @@ class SolveEngine:
             "engine_jobs_done_total", "jobs finished")
         self._c_cancelled = m.counter(
             "engine_jobs_cancelled_total", "jobs cancelled")
+        self._c_failed = m.counter(
+            "engine_jobs_failed_total", "jobs terminally FAILED "
+            "(quarantined non-finite results, TTL expiry)")
+        self._c_rej_queue = m.counter(
+            "engine_admission_rejected_total", "submissions rejected by "
+            "admission control", reason="queue_full")
+        self._c_rej_mem = m.counter(
+            "engine_admission_rejected_total", "submissions rejected by "
+            "admission control", reason="memory_budget")
         self._c_plan_builds = m.counter(
             "engine_plan_builds_total", "sweep-plan rebuilds (occupancy "
             "changes)")
@@ -706,8 +751,10 @@ class SolveEngine:
             "engine_job_total_seconds", "submit -> done")
         self._h_fetch = m.histogram(
             "engine_job_fetch_seconds", "done -> first result fetch")
+        self.faults.bind_metrics(self.metrics)
         self.ckpt = (CheckpointManager(checkpoint_dir, keep=keep,
-                                       metrics=self.metrics)
+                                       metrics=self.metrics,
+                                       faults=self.faults)
                      if checkpoint_dir else None)
         self.ckpt_every = max(ckpt_every, 1)
 
@@ -721,11 +768,64 @@ class SolveEngine:
             self.ckpt.journal_append([{"t": kind, "job_id": job_id,
                                        **fields}])
 
+    def _projected_job_bytes(self, spec: JobSpec) -> int:
+        """Device bytes one lane of this spec adds to its family pool
+        (pages + one slot row), from abstract shapes only — admission
+        must not allocate or compile anything."""
+        key = batched.family_key(spec.objective, spec.n, spec.config,
+                                 self.dtype)
+        cfg = batched.key_config(key)
+        pages = batched.pages_for(spec.n, cfg.block_size)
+        ck = (key, pages)
+        cached = self._job_bytes_cache.get(ck)
+        if cached is None:
+            obj = self.objectives[spec.objective]
+            with_lane = jax.eval_shape(
+                lambda: batched.zeros_pool_state(obj, key, 1, pages + 1))
+            empty = jax.eval_shape(
+                lambda: batched.zeros_pool_state(obj, key, 0, 1))
+            size = sum(int(np.prod(x.shape)) * x.dtype.itemsize
+                       for x in jax.tree_util.tree_leaves(with_lane))
+            base = sum(int(np.prod(x.shape)) * x.dtype.itemsize
+                       for x in jax.tree_util.tree_leaves(empty))
+            cached = self._job_bytes_cache[ck] = max(size - base, 0)
+        return cached
+
+    def _admit(self, spec: JobSpec):
+        """Backpressure gate: raises a typed AdmissionError instead of
+        letting an overloaded engine queue without bound. QUEUED depth is
+        counted like the engine_queue_depth gauge (stale ids in the deque
+        don't count against clients)."""
+        if self.max_queue is not None:
+            depth = sum(j in self.jobs and self.jobs[j].status == QUEUED
+                        for j in self.queue)
+            if depth >= self.max_queue:
+                self._c_rej_queue.inc()
+                raise QueueFullError(
+                    f"queue full: {depth} queued jobs >= max_queue="
+                    f"{self.max_queue}")
+        if self.memory_budget_bytes is not None:
+            # project the whole admitted-but-unplaced backlog, not just
+            # the live pools: admission is the only gate — by refill time
+            # the work is already accepted
+            projected = self.memory_stats()["pool_device_bytes"]
+            for j in self.queue:
+                rec = self.jobs.get(j)
+                if rec is not None and rec.status == QUEUED:
+                    projected += self._projected_job_bytes(rec.spec)
+            projected += self._projected_job_bytes(spec)
+            if projected > self.memory_budget_bytes:
+                self._c_rej_mem.inc()
+                raise MemoryBudgetError(
+                    f"memory budget: projected pool bytes {projected} > "
+                    f"memory_budget_bytes={self.memory_budget_bytes}")
+
     def submit(self, spec: JobSpec) -> str:
         if spec.objective not in self.objectives:
             raise KeyError(
                 f"unknown objective {spec.objective!r}; registered: "
                 f"{sorted(self.objectives)}")
+        self._admit(spec)
         job_id = next_job_id(self._next)
         self._next += 1
         self.jobs[job_id] = JobState(job_id=job_id, spec=spec,
@@ -865,6 +965,9 @@ class SolveEngine:
                         pool.plan = pool.build_plan()
                     self._c_plan_builds.inc()
                 plan = pool.plan
+                # failpoint: a fault armed here raises/kills BEFORE the
+                # dispatch, so pool state is never half-stepped
+                self.faults.trip("fused_step")
                 # plan.args and the r constant are device-resident and
                 # cached: steady-state stepping is one async dispatch
                 # re-sending the same buffers — no per-step host wrap,
@@ -913,10 +1016,16 @@ class SolveEngine:
             step_sp.set(finished=finished)
         return finished
 
-    def run(self, max_steps: int | None = None) -> int:
-        """Drain the queue. Returns total jobs completed."""
+    def run(self, max_steps: int | None = None, stop=None) -> int:
+        """Drain the queue. Returns total jobs completed (DONE + FAILED
+        finishers). ``stop`` is an optional zero-arg callable polled
+        between steps — a signal handler sets it truthy and the drain
+        returns at the next step boundary (state consistent, snapshot
+        safe)."""
         done = 0
         while self.pending():
+            if stop is not None and stop():
+                break
             done += self.step()
             if max_steps is not None and self.step_count >= max_steps:
                 break
@@ -968,6 +1077,10 @@ class SolveEngine:
             rec = self.jobs.get(job_id)
             if rec is None or rec.status != QUEUED:  # cancelled / GC'd
                 continue
+            if rec.spec.ttl_s is not None and rec.t_submit is not None \
+                    and time.time() - rec.t_submit > rec.spec.ttl_s:
+                self._expire(rec)        # deadline passed while queued
+                continue
             spec = rec.spec
             key = batched.family_key(spec.objective, spec.n, spec.config,
                                      self.dtype)
@@ -998,6 +1111,9 @@ class SolveEngine:
             staged.setdefault(key, []).append((slot, rec))
         for key, placed in staged.items():
             pool = self.pools[key]
+            # failpoint: fires before materialize so a kill here leaves
+            # the pool un-grown — exactly a crash inside a resize window
+            self.faults.trip("pool_resize")
             with self.tracer.span("resize", family=key[0]) as sp:
                 resized = pool.materialize()
                 sp.set(resized=resized)
@@ -1006,6 +1122,71 @@ class SolveEngine:
             ops = batched.get_pool_ops(pool.obj, key, pool.slots,
                                        pool.capacity, pool.mesh)
             self._place(pool, ops, placed)
+            if self.faults:
+                # objective_eval poison: decided per JOB (hashed/stepped
+                # off the job id, not a process-local hit counter) so a
+                # kill/resume replays to the identical FAILED set
+                poisoned = []
+                for slot, rec in placed:
+                    f = self.faults.check("objective_eval", key=rec.job_id)
+                    if f is not None:
+                        f.execute(rec.job_id)   # returns for kind=poison
+                        poisoned.append((slot, rec))
+                if poisoned:
+                    self._poison(pool, ops, poisoned)
+
+    def _expire(self, rec: JobState):
+        """TTL expiry: terminal FAILED. Wall-clock decided, so the
+        verdict is journaled (J_EXPIRE) — replay re-applies it instead
+        of re-reading a clock that has moved."""
+        rec.status = FAILED
+        rec.error = f"ttl expired: queued longer than {rec.spec.ttl_s}s"
+        rec.done_seq = self._next_done_seq()
+        rec.t_done = time.time()
+        self._c_failed.inc()
+        self._journal(J_EXPIRE, rec.job_id, error=rec.error)
+
+    def _poison(self, pool: LanePool, ops: batched.PoolOps,
+                poisoned: list[tuple[int, JobState]]):
+        """Overwrite each chosen lane's fresh iterate with NaN through
+        the same place_x executable explicit-x0 placement uses — the
+        injected fault is indistinguishable from a user objective going
+        non-finite on its first evaluation, and no new executable family
+        or plan signature is introduced."""
+        bsz = batched.key_config(pool.key).block_size
+        for slot, rec in poisoned:
+            pages = pool.page_table[slot]
+            g = batched.pad_ladder(len(pages), 1)
+            n = rec.spec.n
+            if pool.mesh is None:
+                pages_np = np.full((g,), batched.SCRATCH_PAGE, np.int32)
+                pages_np[: len(pages)] = pages
+                # NaN only the lane's TRUE coordinates: columns past n
+                # stay zero, exactly like the x0 path, so ladder-padding
+                # writes keep the shared scratch page exactly zero —
+                # sibling bit-identity depends on it
+                xrow = np.zeros((g * bsz,), jnp.dtype(self.dtype).name)
+                xrow[:n] = np.nan
+                pool.state = ops.place_x(g)(
+                    pool.state, jnp.asarray(slot, jnp.int32),
+                    jnp.asarray(pages_np), jnp.asarray(xrow),
+                    jnp.asarray(n, jnp.int32))
+            else:
+                D, dev = pool.n_dev, pool.lane_dev[slot]
+                lane_np = np.full((D,), pool.slots, np.int32)
+                pages_np = np.full((D, g), batched.SCRATCH_PAGE, np.int32)
+                xrow = np.zeros((D, g * bsz), jnp.dtype(self.dtype).name)
+                nv_np = np.zeros((D,), np.int32)
+                lane_np[dev] = slot
+                pages_np[dev, : len(pages)] = pages
+                xrow[dev, :n] = np.nan
+                nv_np[dev] = n
+                owner_np = np.zeros((pool.slots + 1,), np.int32)
+                owner_np[slot] = dev
+                pool.state = ops.place_x(g)(
+                    pool.state, jnp.asarray(owner_np),
+                    jnp.asarray(lane_np), jnp.asarray(pages_np),
+                    jnp.asarray(xrow), jnp.asarray(nv_np))
 
     def _place(self, pool: LanePool, ops: batched.PoolOps,
                placed: list[tuple[int, JobState]]):
@@ -1150,11 +1331,29 @@ class SolveEngine:
             x_np = np.asarray(x_all)
             h_np = np.asarray(hist_all)
         now = time.time()
+        n_done = 0
         for i, (slot, rec) in enumerate(fins):
-            rec.fun = float(f_np[i])
-            rec.x = x_np[i, : rec.spec.n].copy()
-            rec.history = [float(vv) for vv in h_np[i]]
-            rec.status = DONE
+            fun = float(f_np[i])
+            x = x_np[i, : rec.spec.n]
+            # quarantine: a non-finite fun/x is terminal FAILED, decided
+            # on the buffers the harvest already read back — no extra
+            # host sync. The lane is evicted and its pages recycled like
+            # any finisher; sibling lanes never see the poison (their
+            # pages, plans, and executables are untouched)
+            if not (np.isfinite(fun) and np.isfinite(x).all()):
+                rec.status = FAILED
+                rec.error = ("non-finite result quarantined at harvest "
+                             f"(fun={fun!r})")
+                rec.fun = None
+                rec.x = None
+                rec.history = []
+                self._c_failed.inc()
+            else:
+                rec.fun = fun
+                rec.x = x.copy()
+                rec.history = [float(vv) for vv in h_np[i]]
+                rec.status = DONE
+                n_done += 1
             rec.done_seq = self._next_done_seq()
             rec.t_done = now
             if rec.t_place is not None:
@@ -1162,7 +1361,7 @@ class SolveEngine:
             if rec.t_submit is not None:
                 self._h_total.observe(now - rec.t_submit)
             self._release_lane(pool, slot)       # refilled next step
-        self._c_done.inc(len(fins))
+        self._c_done.inc(n_done)
         if not self.queue:               # a true drain, not inter-generation
             if pool.shrink_to_fit():     # turnover mid-burst (phase-aligned
                 self._c_resizes.inc()    # lanes all finish together; the
@@ -1171,13 +1370,14 @@ class SolveEngine:
     def _gc_jobs(self):
         """Whole-record job-table GC: keep only the ``retain_done`` most
         recently finished records among those the client is done with
-        (fetched DONE results, cancellations). Live work — queued,
-        running, and undelivered DONE jobs — is never evicted, so results
-        can't be lost; evicted ids simply answer "unknown job"."""
+        (fetched DONE results, cancellations, failures). Live work —
+        queued, running, and undelivered DONE jobs — is never evicted,
+        so results can't be lost; evicted ids simply answer "unknown
+        job"."""
         if self.retain_done is None:
             return
         evictable = [rec for rec in self.jobs.values()
-                     if rec.status == CANCELLED
+                     if rec.status in (CANCELLED, FAILED)
                      or (rec.status == DONE and rec.fetched)]
         excess = len(evictable) - self.retain_done
         if excess <= 0:
@@ -1384,6 +1584,8 @@ class SolveEngine:
             "retain_done": self.retain_done,
             "pool_high_water": self.pool_high_water,
             "journal_every": self.journal_every,
+            "max_queue": self.max_queue,
+            "memory_budget_bytes": self.memory_budget_bytes,
             "journal_seq": journal_seq,
             "dtype": jnp.dtype(self.dtype).name,
             "step_count": self.step_count,
@@ -1413,6 +1615,7 @@ class SolveEngine:
                keep: int = 3, ckpt_every: int = 1,
                devices: int | None = None,
                sanitize: bool = False,
+               faults=None,
                **fresh_kw) -> "SolveEngine":
         """Rebuild an engine (jobs, queue, and mid-solve pools with their
         page tables) from the newest committed checkpoint in
@@ -1431,11 +1634,14 @@ class SolveEngine:
         (reshard on load), and per-job results still match the
         uninterrupted run bit-for-bit, because per-lane math is placement-
         invariant. ``sanitize`` is likewise observation, not semantics,
-        so it too may differ from the run that wrote the snapshot."""
+        so it too may differ from the run that wrote the snapshot — and
+        so is ``faults``: injection config is never persisted, a resumed
+        life re-arms (or drops) its failpoints explicitly."""
         probe = CheckpointManager(checkpoint_dir, keep=keep)
         step = probe.latest_step()
         if step is None:
             fresh_kw.setdefault("sanitize", sanitize)
+            fresh_kw.setdefault("faults", faults)
             eng = cls(checkpoint_dir=checkpoint_dir, keep=keep,
                       ckpt_every=ckpt_every, objectives=objectives,
                       devices=devices, **fresh_kw)
@@ -1467,9 +1673,11 @@ class SolveEngine:
                   # default applies); null means shrinking was disabled
                   pool_high_water=aux.get("pool_high_water", 2.0),
                   journal_every=aux.get("journal_every"),
+                  max_queue=aux.get("max_queue"),
+                  memory_budget_bytes=aux.get("memory_budget_bytes"),
                   devices=(devices if devices is not None
                            else aux.get("devices", 1)),
-                  sanitize=sanitize)
+                  sanitize=sanitize, faults=faults)
         eng.step_count = aux["step_count"]
         eng.swept_slots = aux.get("swept_slots", 0)
         eng.swept_slots_live = aux.get("swept_slots_live", 0)
@@ -1599,6 +1807,19 @@ class SolveEngine:
                     if jid in self.jobs and self.jobs[jid].status in (
                             QUEUED, RUNNING):
                         self.cancel(jid)
+                elif kind == J_EXPIRE:
+                    # the pre-kill life saw the deadline pass; re-apply
+                    # the verdict rather than re-reading a moved clock
+                    r = self.jobs.get(jid)
+                    if r is not None and r.status == QUEUED:
+                        r.status = FAILED
+                        r.error = rec.get("error", "ttl expired")
+                        r.done_seq = self._next_done_seq()
+                        self._c_failed.inc()
+                        try:
+                            self.queue.remove(jid)
+                        except ValueError:
+                            pass
                 elif kind == J_FETCHED:
                     r = self.jobs.get(jid)
                     if r is not None:

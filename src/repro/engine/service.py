@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.engine.jobs import CANCELLED, DONE, JobSpec
+from repro.engine.jobs import CANCELLED, DONE, FAILED, JobSpec
 from repro.engine.scheduler import SolveEngine
 
 
@@ -38,6 +38,12 @@ class SolveService:
         if job_id not in self.engine.jobs:
             return {"job_id": job_id, "error": "unknown job"}
         rec = self.engine.jobs[job_id]
+        if rec.status in (CANCELLED, FAILED):
+            # terminal-without-result: the status payload IS the answer
+            # (the HTTP front-end maps this to 409, not a generic error)
+            out = {"job_id": job_id, "status": rec.status,
+                   "error": rec.error or f"job {rec.status}, no result"}
+            return out
         if rec.status != DONE:
             return {"job_id": job_id, "status": rec.status,
                     "error": "not done"}

@@ -48,12 +48,30 @@ no auth; hardening is a ROADMAP item). Endpoints:
     GET  /result?job_id=job-000000
     POST /cancel   {"job_id": "job-000000"}
     GET  /stats
+    GET  /healthz          # liveness: 200 {"status": "ok"}
     GET  /metrics          # Prometheus text exposition of the registry
 
 Unknown job ids answer 404, malformed requests 400, and handler failures
-a JSON 500 — never a raw traceback. ``--verbose`` turns on access
-logging: one structured JSON line per request (method, path, status,
-duration_ms) on stdout — without it the server is silent, as before.
+a JSON 500 — never a raw traceback. ``result`` on a CANCELLED/FAILED
+job answers 409 with the status payload (the job is terminal but has no
+result to give). Admission rejections map to backpressure codes:
+``--max-queue`` overflow answers 429, ``--memory-budget`` shedding 503.
+``--verbose`` turns on access logging: one structured JSON line per
+request (method, path, status, duration_ms) on stdout — without it the
+server is silent, as before.
+
+Shutdown: SIGTERM/SIGINT cut a final snapshot (with ``--ckpt-dir``),
+flush the journal, and exit 0 — in both batch and HTTP modes. A kill
+that lands anyway is recoverable: ``python -m repro.checkpoint.fsck``
+validates/repairs the base+journal chain and ``--resume`` replays it.
+
+Chaos: ``--inject SPEC`` arms the deterministic fault-injection
+registry (repro.engine.faults) — e.g.
+``--inject "objective_eval:every=4:seed=7"`` poisons every 4th job's
+lane with NaN (quarantined to FAILED at harvest, siblings unharmed),
+``--inject "snapshot_write:nth=2:kind=kill"`` kills the process inside
+the 2nd snapshot's commit window. Off by default; fault counts surface
+as ``engine_faults_injected_total{site=...}``.
 
 Guardrails: ``--sanitize`` runs the engine under the repro.analysis
 runtime sanitizers — every ``step()`` executes inside the host-sync
@@ -76,12 +94,14 @@ from __future__ import annotations
 
 import argparse
 import json
+import signal
 import threading
 import time
 
 from repro.core.abo import ABOConfig
-from repro.engine.jobs import JobSpec
-from repro.engine.scheduler import SolveEngine
+from repro.engine.jobs import CANCELLED, FAILED, JobSpec
+from repro.engine.scheduler import (MemoryBudgetError, QueueFullError,
+                                    SolveEngine)
 from repro.engine.service import SolveService
 
 
@@ -168,6 +188,12 @@ def _build_server(service: SolveService, port: int, poll_s: float = 0.01,
             internals and breaks JSON-speaking clients."""
             try:
                 fn()
+            except QueueFullError as e:
+                # backpressure, not client error: retry later
+                self._reply({"error": str(e)}, 429)
+            except MemoryBudgetError as e:
+                # shedding under memory pressure: service unavailable
+                self._reply({"error": str(e)}, 503)
             except (KeyError, TypeError, ValueError) as e:
                 self._reply({"error": str(e)}, 400)
             except Exception as e:      # noqa: BLE001 — wire boundary
@@ -188,11 +214,21 @@ def _build_server(service: SolveService, port: int, poll_s: float = 0.01,
                         # fetch — a broken pipe here must not let snapshots
                         # evict a solution the client never received
                         out = service.result(job_id, mark_fetched=False)
-                        self._reply(out)
-                        if out.get("status") == "done":
-                            service.mark_fetched(job_id)
+                        if out.get("status") in (CANCELLED, FAILED):
+                            # terminal but result-less: conflict, with
+                            # the status payload (unknown ids keep 404)
+                            self._reply(out, 409)
+                        else:
+                            self._reply(out)
+                            if out.get("status") == "done":
+                                service.mark_fetched(job_id)
                     elif url.path == "/stats":
                         self._reply(service.stats())
+                    elif url.path == "/healthz":
+                        eng = service.engine
+                        self._reply({"status": "ok",
+                                     "steps": eng.step_count,
+                                     "active_lanes": eng.active_lanes})
                     elif url.path == "/metrics":
                         self._reply_text(service.prometheus())
                     else:
@@ -220,24 +256,58 @@ def _build_server(service: SolveService, port: int, poll_s: float = 0.01,
             self._guarded(run)
 
     httpd = ThreadingHTTPServer(("127.0.0.1", port), Handler)
+    httpd._engine_lock = lock            # graceful shutdown snapshots
+    #                                      under the same lock the
+    #                                      stepper and handlers use
     stepper_thread = threading.Thread(target=stepper, daemon=True)
     return httpd, stepper_thread
 
 
+def _install_signal_handlers(on_signal):
+    """SIGTERM/SIGINT -> ``on_signal(signum)``; returns the previous
+    handlers (signal.signal only works from the main thread — tests
+    driving servers from worker threads skip this and kill a subprocess
+    instead)."""
+    if threading.current_thread() is not threading.main_thread():
+        return {}                        # in-process test harness thread
+    prev = {}
+    for sig in (signal.SIGTERM, signal.SIGINT):
+        prev[sig] = signal.signal(
+            sig, lambda signum, frame: on_signal(signum))
+    return prev
+
+
 def _serve_http(service: SolveService, port: int, poll_s: float = 0.01,
                 verbose: bool = False):
-    """Demo JSON-over-HTTP front-end; blocks until interrupted."""
+    """Demo JSON-over-HTTP front-end; blocks until SIGTERM/SIGINT, then
+    cuts a final snapshot (when checkpointing is on) and returns for a
+    clean exit 0."""
     httpd, stepper_thread = _build_server(service, port, poll_s, verbose)
     stepper_thread.start()
+
+    def on_signal(signum):
+        print(f"[solve_server] signal {signum}: shutting down", flush=True)
+        # shutdown() blocks until serve_forever exits; calling it from
+        # the serving thread (where this handler runs) would deadlock
+        threading.Thread(target=httpd.shutdown, daemon=True).start()
+
+    _install_signal_handlers(on_signal)
     print("[solve_server] listening on "
           f"http://127.0.0.1:{httpd.server_address[1]}", flush=True)
     try:
         httpd.serve_forever()
     finally:
+        engine = service.engine
+        if engine.ckpt is not None:
+            # the lock excludes a mid-step stepper: the snapshot is a
+            # step-boundary-consistent image, journal flushed by append
+            with httpd._engine_lock:
+                engine.snapshot()
+            print("[solve_server] final snapshot cut", flush=True)
         # a --trace run must not lose its spans to Ctrl-C
-        tracer = service.engine.tracer
+        tracer = engine.tracer
         if tracer.enabled and tracer.default_path:
-            print(f"[solve_server] trace -> {service.engine.trace_export()}",
+            print(f"[solve_server] trace -> {engine.trace_export()}",
                   flush=True)
 
 
@@ -306,6 +376,21 @@ def main(argv=None):
                          "builds more than N XLA executables (counted via "
                          "jax.monitoring) — enforces one-executable-per-"
                          "plan-signature end to end")
+    ap.add_argument("--inject", default=None, metavar="SPEC",
+                    help="arm deterministic fault injection: "
+                         "site[:key=val]*[;site...] with sites "
+                         "snapshot_write/journal_append/pool_resize/"
+                         "fused_step/objective_eval and schedules nth=N, "
+                         "every=K, prob=P:seed=S (e.g. "
+                         "'objective_eval:every=4:seed=7')")
+    ap.add_argument("--max-queue", type=int, default=None, metavar="N",
+                    help="bounded admission: reject submissions (HTTP "
+                         "429) once N jobs are queued awaiting a lane")
+    ap.add_argument("--memory-budget", type=int, default=None,
+                    metavar="BYTES",
+                    help="shed load (HTTP 503) when projected pool device "
+                         "bytes for live + queued + incoming work would "
+                         "exceed BYTES")
     args = ap.parse_args(argv)
 
     if args.retain_done is not None and args.retain_done < 0:
@@ -336,28 +421,46 @@ def main(argv=None):
                      f"{len(jax.devices())} JAX device(s) are visible; "
                      "launch with XLA_FLAGS=--xla_force_host_platform_"
                      f"device_count={args.devices}")
+    if args.max_queue is not None and args.max_queue < 1:
+        ap.error(f"--max-queue must be >= 1, got {args.max_queue}")
+    if args.memory_budget is not None and args.memory_budget < 1:
+        ap.error(f"--memory-budget must be >= 1, got {args.memory_budget}")
+    faults = None
+    if args.inject:
+        from repro.engine.faults import parse_fault_spec
+        try:
+            faults = parse_fault_spec(args.inject)
+        except ValueError as e:
+            ap.error(f"--inject: {e}")
     if args.resume:
         if not args.ckpt_dir:
             ap.error("--resume requires --ckpt-dir (without it there is no "
                      "checkpoint to resume from and nothing would be saved)")
         # flags only shape a FRESH engine (empty ckpt dir); a found
         # checkpoint's recorded lanes/retain_done win so the resumed run
-        # can't diverge from the uninterrupted one
+        # can't diverge from the uninterrupted one (faults/sanitize are
+        # observation, re-armed per life)
         engine = SolveEngine.resume(args.ckpt_dir, ckpt_every=args.ckpt_every,
                                     lanes=args.lanes,
                                     retain_done=args.retain_done,
                                     pool_high_water=high_water,
                                     journal_every=args.journal_every,
+                                    max_queue=args.max_queue,
+                                    memory_budget_bytes=args.memory_budget,
                                     devices=args.devices,
-                                    sanitize=args.sanitize)
+                                    sanitize=args.sanitize,
+                                    faults=faults)
     else:
         engine = SolveEngine(lanes=args.lanes, checkpoint_dir=args.ckpt_dir,
                              ckpt_every=args.ckpt_every,
                              retain_done=args.retain_done,
                              pool_high_water=high_water,
                              journal_every=args.journal_every,
+                             max_queue=args.max_queue,
+                             memory_budget_bytes=args.memory_budget,
                              devices=args.devices,
-                             sanitize=args.sanitize)
+                             sanitize=args.sanitize,
+                             faults=faults)
     service = SolveService(engine)
     if args.trace:
         engine.trace(args.trace)
@@ -380,15 +483,26 @@ def main(argv=None):
         if args.ckpt_dir:
             engine.snapshot()    # a kill during warmup can't lose the queue
     done_before = {j for j, r in engine.jobs.items() if r.status == "done"}
+    # SIGTERM/SIGINT stop the drain at the next step boundary; the final
+    # snapshot below then lands a consistent image and we exit 0 — a
+    # KeyboardInterrupt traceback would skip it and lose the tail
+    stop_flag = threading.Event()
+
+    def on_signal(signum):
+        print(f"[solve_server] signal {signum}: stopping after this step",
+              flush=True)
+        stop_flag.set()
+
+    _install_signal_handlers(on_signal)
     t0 = time.time()
     if args.compile_budget is not None:
         from repro.analysis import compile_guard
         with compile_guard(args.compile_budget, "solve_server drain") as cg:
-            done = engine.run()
+            done = engine.run(stop=stop_flag.is_set)
         print(f"[solve_server] compile_guard: {cg.count} executable(s) "
               f"built (budget {args.compile_budget})", flush=True)
     else:
-        done = engine.run()
+        done = engine.run(stop=stop_flag.is_set)
     dt = max(time.time() - t0, 1e-9)
     if args.ckpt_dir:
         # a final base: in journal mode the last generation's results may
@@ -411,6 +525,8 @@ def main(argv=None):
     if args.compile_budget is not None:
         stats["compiles"] = cg.count
         stats["compile_budget"] = args.compile_budget
+    if stop_flag.is_set():
+        stats["interrupted"] = True      # drained partially, snapshot cut
     if engine.ckpt is not None and engine.journal_every is not None:
         stats["journal"] = engine.ckpt.journal_stats()
     print(f"[solve_server] {done} jobs in {dt:.2f}s over "

@@ -1,0 +1,572 @@
+"""Fault-tolerant engine: deterministic fault injection, poison-job
+quarantine, admission control, TTL expiry, crash-safe shutdown, and
+checkpoint fsck.
+
+Kill-kind failpoints ``os._exit(137)`` with no cleanup (the torn state a
+real crash produces), so the kill-matrix tests spawn children and run
+fsck + resume in the parent — same recipe operators follow after a real
+crash. Everything else runs in-process on the tier-1 small shapes.
+"""
+import json
+import os
+import pathlib
+import signal
+import subprocess
+import sys
+import textwrap
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import ABOConfig, abo_minimize
+from repro.engine import (DONE, FAILED, QUEUED, AdmissionError, Fault,
+                          FaultRegistry, InjectedFault, JobSpec,
+                          MemoryBudgetError, NULL_FAULTS, QueueFullError,
+                          SolveEngine, SolveService, parse_fault_spec)
+from repro.engine.faults import resolve_faults
+from repro.checkpoint.fsck import fsck
+from repro.objectives import OBJECTIVES
+
+CFG = ABOConfig(samples_per_pass=12, n_passes=3)
+SHAPES = [("griewank", 64), ("sphere", 96), ("rastrigin", 80)]
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _mixed_specs(count, seed0=0):
+    return [JobSpec(*SHAPES[i % len(SHAPES)], CFG, seed=seed0 + i)
+            for i in range(count)]
+
+
+def _ref_bytes(spec):
+    r = abo_minimize(OBJECTIVES[spec.objective], spec.n,
+                     config=spec.config, seed=spec.seed)
+    return float(r.fun), np.asarray(r.x).tobytes()
+
+
+def _run_child(script: str, env_extra=None, check=True, timeout=600):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env.update(env_extra or {})
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout)
+    if check:
+        assert out.returncode == 0, out.stderr[-3000:]
+    return out
+
+
+# ------------------------------------------------------------ registry unit
+def test_parse_fault_spec():
+    reg = parse_fault_spec("objective_eval:every=4:seed=7")
+    f = reg._by_site["objective_eval"]
+    assert (f.kind, f.every, f.seed) == ("poison", 4, 7)  # poison default
+
+    reg = parse_fault_spec("snapshot_write:kind=kill:nth=2")
+    f = reg._by_site["snapshot_write"]
+    assert (f.kind, f.nth) == ("kill", 2)
+
+    # bare site: raise-kind, nth=1 (except objective_eval -> poison)
+    f = parse_fault_spec("journal_append")._by_site["journal_append"]
+    assert (f.kind, f.nth) == ("raise", 1)
+
+    reg = parse_fault_spec("fused_step:nth=3; pool_resize:nth=1")
+    assert set(reg._by_site) == {"fused_step", "pool_resize"}
+
+    with pytest.raises(ValueError, match="unknown failpoint site"):
+        parse_fault_spec("no_such_site:nth=1")
+    with pytest.raises(ValueError, match="unknown fault key"):
+        parse_fault_spec("fused_step:bogus=1")
+    with pytest.raises(ValueError, match="exactly one"):
+        Fault("fused_step", nth=1, every=2)
+    with pytest.raises(ValueError, match="poison"):
+        Fault("fused_step", kind="poison", nth=1)
+    with pytest.raises(ValueError, match="duplicate"):
+        FaultRegistry([Fault("fused_step", nth=1),
+                       Fault("fused_step", nth=2)])
+
+
+def test_fault_schedules_deterministic():
+    # every=K keyed by job id: the submit ordinal (tail + 1) decides, so
+    # a replayed engine re-derives the same poison set
+    f = Fault("objective_eval", kind="poison", every=4)
+    fired = [jid for jid in (f"job-{i:06d}" for i in range(12))
+             if f.should_fire(jid)]
+    assert fired == ["job-000003", "job-000007", "job-000011"]
+
+    # nth=N: process-local hit counter (durable-state kill sites)
+    f = Fault("snapshot_write", kind="kill", nth=2)
+    assert [f.should_fire() for _ in range(4)] == \
+        [False, True, False, False]
+
+    # prob: per-key Bernoulli — hit-order independent and replayable
+    keys = [f"job-{i:06d}" for i in range(2000)]
+    a, b = (Fault("objective_eval", kind="poison", prob=0.1, seed=3)
+            for _ in range(2))
+    picks = {k for k in keys if a.should_fire(k)}
+    assert picks == {k for k in reversed(keys) if b.should_fire(k)}
+    assert 120 < len(picks) < 280            # ~10% of 2000
+    c = Fault("objective_eval", kind="poison", prob=0.1, seed=4)
+    assert picks != {k for k in keys if c.should_fire(k)}
+
+
+def test_null_faults_and_resolve(monkeypatch):
+    assert not NULL_FAULTS and not NULL_FAULTS.enabled
+    assert NULL_FAULTS.check("fused_step") is None
+    NULL_FAULTS.trip("fused_step")           # no-op, no raise
+
+    reg = parse_fault_spec("fused_step:nth=1")
+    assert resolve_faults(reg) is reg
+    assert resolve_faults("fused_step:nth=1")
+    with pytest.raises(TypeError):
+        resolve_faults(42)
+
+    monkeypatch.delenv("REPRO_INJECT_FAULTS", raising=False)
+    assert resolve_faults(None) is NULL_FAULTS
+    monkeypatch.setenv("REPRO_INJECT_FAULTS", "fused_step:nth=1")
+    assert resolve_faults(None).enabled
+
+    eng = SolveEngine(lanes=1)               # env armed via monkeypatch
+    eng.submit(_mixed_specs(1)[0])
+    with pytest.raises(InjectedFault, match="fused_step"):
+        eng.step()
+
+
+def test_raise_kind_surfaces_site():
+    err = InjectedFault("journal_append", detail="x")
+    assert err.site == "journal_append" and "journal_append" in str(err)
+
+
+# --------------------------------------------------------------- quarantine
+def test_poison_quarantine_bit_identity():
+    """Poisoned jobs land terminal FAILED with an error detail; their
+    lane siblings stay bit-identical to standalone abo_minimize; pages
+    recycle so the engine drains fully."""
+    specs = _mixed_specs(6)
+    eng = SolveEngine(lanes=3, faults="objective_eval:every=3:seed=1")
+    ids = eng.submit_many(specs)
+    eng.run()
+    status = [eng.jobs[j].status for j in ids]
+    assert status == [DONE, DONE, FAILED, DONE, DONE, FAILED]
+    for spec, jid in zip(specs, ids):
+        rec = eng.jobs[jid]
+        if rec.status == FAILED:
+            assert "non-finite" in rec.error
+            assert rec.fun is None and rec.x is None
+            assert rec.poll_dict()["error"] == rec.error
+            with pytest.raises(RuntimeError):
+                eng.result(jid)
+        else:
+            fun, xb = _ref_bytes(spec)
+            assert rec.fun == fun
+            assert np.asarray(rec.x).tobytes() == xb
+    snap = eng.stats()
+    assert snap["engine_jobs_failed_total"] == 2
+    assert snap['engine_faults_injected_total{site="objective_eval"}'] == 2
+    assert eng.active_lanes == 0 and not eng.pending()
+
+
+def test_poison_quarantine_sanitized_steady_state():
+    """Quarantine rides the existing harvest gather: a warmed faulted
+    engine steps under the host-sync/donation sanitizers with ZERO new
+    executables (compile_guard(0)) — poisoning reuses place_x, no new
+    plan signature."""
+    from repro.analysis import compile_guard
+
+    spec = "objective_eval:every=3:seed=1"
+    eng = SolveEngine(lanes=3, faults=spec)  # warm every family + place_x
+    eng.submit_many(_mixed_specs(6))
+    eng.run()
+    eng2 = SolveEngine(lanes=3, faults=spec, sanitize=True)
+    eng2.submit_many(_mixed_specs(6))
+    with compile_guard(0, "faulted steady-state lap"):
+        eng2.run()
+    assert sum(r.status == FAILED for r in eng2.jobs.values()) == 2
+
+
+def test_poison_quarantine_sharded_d2():
+    """Same quarantine claims on D=2 sharded pools: FAILED set identical,
+    survivors bit-identical to abo_minimize."""
+    _run_child("""
+        import numpy as np
+        from repro.core import ABOConfig, abo_minimize
+        from repro.engine import FAILED, JobSpec, SolveEngine
+        from repro.objectives import OBJECTIVES
+
+        CFG = ABOConfig(samples_per_pass=12, n_passes=3)
+        shapes = [("griewank", 64), ("sphere", 96),
+                  ("rastrigin", 80), ("sphere", 64)]
+        specs = [JobSpec(o, n, CFG, seed=i)
+                 for i, (o, n) in enumerate(shapes)]
+        eng = SolveEngine(lanes=2, devices=2,
+                          faults="objective_eval:every=2:seed=1")
+        ids = eng.submit_many(specs)
+        eng.run()
+        status = [eng.jobs[j].status for j in ids]
+        assert status == ["done", "failed", "done", "failed"], status
+        for spec, jid in zip(specs, ids):
+            rec = eng.jobs[jid]
+            if rec.status == FAILED:
+                assert "non-finite" in rec.error
+                continue
+            ref = abo_minimize(OBJECTIVES[spec.objective], spec.n,
+                               config=spec.config, seed=spec.seed)
+            assert rec.fun == float(ref.fun)
+            assert (np.asarray(rec.x).tobytes()
+                    == np.asarray(ref.x).tobytes())
+        print("OK")
+        """, env_extra={
+        "XLA_FLAGS": "--xla_force_host_platform_device_count=2"})
+
+
+def test_failed_survives_snapshot_and_resume(tmp_path):
+    """FAILED is terminal and durable: status + error round-trip the
+    snapshot, and a resumed engine (injection never persists — the new
+    life re-arms explicitly, here it doesn't) keeps them FAILED."""
+    ck = tmp_path / "ck"
+    eng = SolveEngine(lanes=2, checkpoint_dir=str(ck),
+                      faults="objective_eval:every=2:seed=1")
+    ids = eng.submit_many(_mixed_specs(4))
+    eng.run()
+    eng.snapshot()
+    failed = [j for j in ids if eng.jobs[j].status == FAILED]
+    assert len(failed) == 2
+
+    res = SolveEngine.resume(str(ck))
+    assert not res.faults.enabled            # faults never persisted
+    for jid in ids:
+        assert res.jobs[jid].status == eng.jobs[jid].status
+    for jid in failed:
+        assert "non-finite" in res.jobs[jid].error
+    assert not res.pending()                 # terminal: nothing re-queues
+
+
+def test_failed_set_rederived_on_journal_replay(tmp_path):
+    """Journal-only resume (kill before any base) re-RUNS replayed
+    submissions; poison decisions key off the job id, so re-arming the
+    same fault spec re-derives the exact same FAILED set."""
+    ck = tmp_path / "ck"
+    spec = "objective_eval:every=2:seed=1"
+    eng = SolveEngine(lanes=2, checkpoint_dir=str(ck), journal_every=50,
+                      faults=spec)
+    ids = eng.submit_many(_mixed_specs(4))
+    eng.run()
+    before = {j: eng.jobs[j].status for j in ids}
+    assert sorted(before.values()) == [DONE, DONE, FAILED, FAILED]
+
+    res = SolveEngine.resume(str(ck), journal_every=50, faults=spec)
+    res.run()
+    assert {j: res.jobs[j].status for j in ids} == before
+
+
+# ---------------------------------------------------- admission control/TTL
+def test_admission_queue_full():
+    eng = SolveEngine(lanes=2, max_queue=2)
+    specs = _mixed_specs(3)
+    eng.submit(specs[0])
+    eng.submit(specs[1])
+    with pytest.raises(QueueFullError) as ei:
+        eng.submit(specs[2])
+    assert isinstance(ei.value, AdmissionError)
+    assert not isinstance(ei.value, ValueError)   # 429, not 400
+    snap = eng.stats()
+    assert snap['engine_admission_rejected_total{reason="queue_full"}'] == 1
+    eng.run()                                # drain -> depth 0 -> admits
+    eng.submit(specs[2])
+    eng.run()
+    assert all(r.status == DONE for r in eng.jobs.values())
+
+
+def test_admission_memory_budget():
+    eng = SolveEngine(lanes=2, memory_budget_bytes=1)
+    with pytest.raises(MemoryBudgetError):
+        eng.submit(_mixed_specs(1)[0])
+    snap = eng.stats()
+    assert snap[
+        'engine_admission_rejected_total{reason="memory_budget"}'] == 1
+    # a sane budget admits the same job
+    eng = SolveEngine(lanes=2, memory_budget_bytes=1 << 30)
+    eng.submit(_mixed_specs(1)[0])
+    eng.run()
+
+
+def test_ttl_expiry_and_replay(tmp_path):
+    """A job queued past its ttl_s expires to FAILED at the refill
+    boundary; the wall-clock verdict is journaled (J_EXPIRE) so a
+    journal-only resume re-applies it instead of re-reading a clock."""
+    ck = tmp_path / "ck"
+    eng = SolveEngine(lanes=2, checkpoint_dir=str(ck), journal_every=50)
+    spec = _mixed_specs(2)
+    jid_ttl = eng.submit(JobSpec(spec[0].objective, spec[0].n, CFG,
+                                 seed=7, ttl_s=0.01))
+    jid_ok = eng.submit(spec[1])
+    time.sleep(0.05)
+    eng.run()
+    rec = eng.jobs[jid_ttl]
+    assert rec.status == FAILED and "ttl expired" in rec.error
+    assert eng.jobs[jid_ok].status == DONE
+    assert eng.stats()["engine_jobs_failed_total"] == 1
+
+    # journal-only resume (no base cut): J_SUBMIT re-queues, J_EXPIRE
+    # re-applies the recorded verdict — no sleep needed on replay
+    res = SolveEngine.resume(str(ck), journal_every=50)
+    assert res.jobs[jid_ttl].status == FAILED
+    assert "ttl expired" in res.jobs[jid_ttl].error
+    assert res.jobs[jid_ok].status == QUEUED  # re-queued, re-runs
+    res.run()
+    assert res.jobs[jid_ok].status == DONE
+
+
+def test_jobspec_ttl_roundtrip():
+    spec = JobSpec("sphere", 64, CFG, seed=1, ttl_s=5.0)
+    assert JobSpec.from_dict(spec.to_dict()).ttl_s == 5.0
+    assert JobSpec.from_dict(_mixed_specs(1)[0].to_dict()).ttl_s is None
+    with pytest.raises(ValueError, match="ttl_s"):
+        JobSpec("sphere", 64, CFG, ttl_s=0)
+
+
+# ------------------------------------------------------- kill matrix + fsck
+_KILL_CHILD = """
+    import numpy as np
+    from repro.core import ABOConfig
+    from repro.engine import JobSpec, SolveEngine
+
+    CFG = ABOConfig(samples_per_pass=12, n_passes=3)
+    shapes = [("griewank", 64), ("sphere", 96), ("rastrigin", 80)]
+    specs = [JobSpec(o, n, CFG, seed=i) for i, (o, n) in enumerate(shapes)]
+    eng = SolveEngine(lanes=2, checkpoint_dir={ck!r}, {engine_kw}
+                      faults={faults!r})
+    for s in specs:
+        eng.submit(s)
+    eng.run()
+    raise SystemExit("fault never fired")   # the kill should preempt this
+"""
+
+
+def _reference_results():
+    # seeds must match the kill children: seed=i over SHAPES
+    specs = [JobSpec(o, n, CFG, seed=i)
+             for i, (o, n) in enumerate(SHAPES)]
+    return {i: _ref_bytes(s) for i, s in enumerate(specs)}
+
+
+def test_kill_matrix_snapshot_write(tmp_path):
+    """kill at snapshot_write (leaves landed, manifest not committed) ->
+    rc 137 -> fsck reports the torn .tmp dir -> --repair -> resume ->
+    results bit-identical to the uninterrupted run."""
+    ck = str(tmp_path / "ck")
+    out = _run_child(_KILL_CHILD.format(
+        ck=ck, engine_kw="",
+        faults="snapshot_write:kind=kill:nth=2"), check=False)
+    assert out.returncode == 137, (out.returncode, out.stderr[-2000:])
+
+    report = fsck(ck)
+    assert not report["ok"]
+    assert {f["kind"] for f in report["findings"]} == {"tmp_snapshot"}
+    assert fsck(ck, repair=True)["ok"]
+    assert fsck(ck)["ok"] and not fsck(ck)["findings"]
+
+    res = SolveEngine.resume(ck)
+    assert res.pending()                     # killed mid-flight: work left
+    res.run()
+    for i, (fun, xb) in _reference_results().items():
+        rec = res.jobs[f"job-{i:06d}"]
+        assert rec.status == DONE
+        assert rec.fun == fun
+        assert np.asarray(rec.x).tobytes() == xb
+
+
+def test_kill_matrix_journal_append(tmp_path):
+    """kill mid-append (torn half-record, no newline) -> fsck torn_tail
+    -> --repair truncates at the last whole record -> journal-only
+    resume replays the durable prefix bit-exactly."""
+    ck = str(tmp_path / "ck")
+    out = _run_child(_KILL_CHILD.format(
+        ck=ck, engine_kw="journal_every=50,",
+        faults="journal_append:kind=kill:nth=3"), check=False)
+    assert out.returncode == 137, (out.returncode, out.stderr[-2000:])
+
+    report = fsck(ck)
+    kinds = {f["kind"] for f in report["findings"]}
+    assert kinds == {"torn_tail"}, report
+    assert fsck(ck, repair=True)["ok"]
+
+    # fresh-engine resume path: no base was ever cut, so runtime knobs
+    # come from fresh_kw — operators pass the same flags they launched
+    # with (here journal_every turns replay on)
+    res = SolveEngine.resume(ck, journal_every=50)
+    replayed = sorted(res.jobs)
+    # 3rd append was the torn record: correctly not durable
+    assert replayed == ["job-000000", "job-000001"]
+    res.run()
+    refs = _reference_results()
+    for i, jid in enumerate(replayed):
+        rec = res.jobs[jid]
+        assert rec.status == DONE
+        assert rec.fun == refs[i][0]
+        assert np.asarray(rec.x).tobytes() == refs[i][1]
+
+
+def test_fsck_journal_repairs(tmp_path):
+    jdir = tmp_path / "journal"
+    jdir.mkdir()
+
+    def rec(seq):
+        return json.dumps({"seq": seq, "kind": "submit",
+                           "job_id": f"job-{seq:06d}"}) + "\n"
+
+    seg0 = jdir / "seg_00000000.jsonl"
+    seg1 = jdir / "seg_00000001.jsonl"
+    seg0.write_text(rec(1) + rec(2) + rec(3))
+    seg1.write_text(rec(4) + rec(5)[: len(rec(5)) // 2])  # torn tail
+    (jdir / "SEQ").write_text("not-a-number")
+
+    report = fsck(tmp_path)
+    assert {f["kind"] for f in report["findings"]} == \
+        {"torn_tail", "bad_seq_floor"}
+    assert not report["ok"]
+    assert fsck(tmp_path, repair=True)["ok"]
+    assert seg1.read_text() == rec(4)        # truncated at last newline
+    assert (jdir / "SEQ").read_text() == "4"  # floor from max surviving seq
+    assert fsck(tmp_path)["ok"]
+
+    # seq gap mid-chain: truncate at the gap, drop the suffix, and every
+    # LATER segment goes with it (replay must be a strict prefix)
+    seg0.write_text(rec(1) + rec(2) + rec(9) + rec(10))
+    seg1.write_text(rec(11))
+    report = fsck(tmp_path, repair=True)
+    assert {f["kind"] for f in report["findings"]} == {"seq_gap"}
+    assert report["dropped_records"] == 2    # seq 9, 10
+    assert seg0.read_text() == rec(1) + rec(2)
+    assert not seg1.exists()                 # followed a broken chain
+    assert fsck(tmp_path)["ok"]
+
+
+def test_fsck_base_repairs_and_exit_codes(tmp_path, capsys):
+    from repro.checkpoint.fsck import main
+
+    tmp = tmp_path / "step_000004.tmp"
+    tmp.mkdir()
+    (tmp / "leaf_00000.npy").write_bytes(b"partial")
+    torn = tmp_path / "step_000002"
+    torn.mkdir()
+    (torn / "manifest.json").write_text("{not json")
+
+    assert main([str(tmp_path)]) == 1        # findings, no repair
+    report = json.loads(capsys.readouterr().out)
+    assert {f["kind"] for f in report["findings"]} == \
+        {"tmp_snapshot", "torn_base"}
+    assert main([str(tmp_path), "--repair"]) == 0
+    capsys.readouterr()
+    assert not tmp.exists() and not torn.exists()
+    assert main([str(tmp_path)]) == 0        # clean now
+
+
+def test_fsck_accepts_committed_snapshot(tmp_path):
+    """A real engine checkpoint passes fsck untouched."""
+    eng = SolveEngine(lanes=2, checkpoint_dir=str(tmp_path),
+                      journal_every=50)
+    eng.submit_many(_mixed_specs(2))
+    eng.run()
+    eng.snapshot()
+    report = fsck(tmp_path)
+    assert report["ok"] and not report["findings"]
+
+
+# ------------------------------------------------------------ shutdown path
+def test_sigterm_batch_mode_clean_shutdown(tmp_path):
+    """SIGTERM to a batch solve_server stops at the next step boundary,
+    cuts a final snapshot, and exits 0; the directory resumes."""
+    ck = str(tmp_path / "ck")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.solve_server",
+         "--jobs", "16", "--lanes", "2", "--n", "900,1100",
+         "--samples", "40", "--passes", "6",
+         "--ckpt-dir", ck, "--journal-every", "4"],
+        env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True)
+    time.sleep(6)                            # into the drain (compile + run)
+    proc.send_signal(signal.SIGTERM)
+    out, err = proc.communicate(timeout=600)
+    assert proc.returncode == 0, err[-3000:]
+    assert fsck(ck)["ok"], fsck(ck)          # crash-safe: nothing torn
+    res = SolveEngine.resume(ck, journal_every=4)
+    assert res.jobs                          # submissions were durable
+    if "stopping after this step" in (out + err):
+        assert res.pending()                 # interrupted mid-drain
+
+
+# -------------------------------------------------------------- HTTP status
+def test_http_terminal_admission_and_healthz():
+    """Wire mapping: FAILED/CANCELLED results -> 409 with the status
+    payload, queue-full -> 429, memory-budget -> 503, /healthz -> 200;
+    unknown ids stay 404."""
+    import http.client
+    import threading
+
+    from repro.launch.solve_server import _build_server
+
+    def serve(svc):
+        httpd, _ = _build_server(svc, 0)     # ephemeral port, no stepper
+        t = threading.Thread(target=httpd.serve_forever, daemon=True)
+        t.start()
+        return httpd
+
+    def req(port, method, path, body=None):
+        conn = http.client.HTTPConnection("127.0.0.1", port, timeout=30)
+        conn.request(method, path, body=body)
+        resp = conn.getresponse()
+        payload = json.loads(resp.read().decode())
+        conn.close()
+        return resp.status, payload
+
+    def submit_body(seed=0):
+        return json.dumps({"objective": "sphere", "n": 64, "seed": seed,
+                           "config": {"samples_per_pass": 12,
+                                      "n_passes": 3}})
+
+    svc = SolveService(lanes=1, max_queue=2,
+                       faults="objective_eval:nth=1")
+    httpd = serve(svc)
+    port = httpd.server_address[1]
+    try:
+        status, out = req(port, "GET", "/healthz")
+        assert status == 200 and out["status"] == "ok"
+
+        _, a = req(port, "POST", "/submit", submit_body(0))
+        _, b = req(port, "POST", "/submit", submit_body(1))
+        status, out = req(port, "POST", "/submit", submit_body(2))
+        assert status == 429 and "queue full" in out["error"]
+
+        status, _ = req(port, "POST", "/cancel", json.dumps(
+            {"job_id": b["job_id"]}))
+        assert status == 200
+        status, out = req(port, "GET", f"/result?job_id={b['job_id']}")
+        assert status == 409 and out["status"] == "cancelled"
+
+        svc.drain()                          # nth=1 poisons the first job
+        status, out = req(port, "GET", f"/result?job_id={a['job_id']}")
+        assert status == 409 and out["status"] == FAILED
+        assert "non-finite" in out["error"]
+        # 409 is not delivery: the record must survive for re-inspection
+        assert req(port, "GET", f"/result?job_id={a['job_id']}")[0] == 409
+
+        assert req(port, "GET", "/result?job_id=nope")[0] == 404
+        status, out = req(port, "GET", "/stats")
+        assert status == 200 and out["jobs"].get(FAILED) == 1
+    finally:
+        httpd.shutdown()
+        httpd.server_close()
+
+    svc = SolveService(lanes=1, memory_budget_bytes=1)
+    httpd = serve(svc)
+    try:
+        status, out = req(httpd.server_address[1], "POST", "/submit",
+                          submit_body(0))
+        assert status == 503 and "memory budget" in out["error"]
+    finally:
+        httpd.shutdown()
+        httpd.server_close()
