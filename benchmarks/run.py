@@ -21,7 +21,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table2,table3,kernels,abo_zo,"
                          "engine,engine_mixed,engine_faulted,"
-                         "engine_roofline,engine_sharded")
+                         "engine_roofline,engine_sharded,engine_spanning")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -73,8 +73,17 @@ def main() -> None:
         # digest-asserted) -> BENCH_engine.json
         from benchmarks.engine_bench import engine_sharded
         rows += list(engine_sharded())
+    if want("engine_spanning"):
+        # one job striped across the mesh (spanning lanes): D=1/2/4
+        # children, digest-asserted bit-identity + a kill/resume reshard,
+        # and the extrapolated time/RAM line against the paper's
+        # 64,485 s / 7.6 GB 1e9-variable headline -> BENCH_engine.json
+        # (the speedup_k1 floor rides the `engine` section's K sweep)
+        from benchmarks.engine_bench import engine_spanning
+        rows += list(engine_spanning())
     if (want("engine") or want("engine_mixed") or want("engine_faulted")
-            or want("engine_roofline") or want("engine_sharded")):
+            or want("engine_roofline") or want("engine_sharded")
+            or want("engine_spanning")):
         # machine-readable perf trajectory (jobs/s, speedup vs the
         # in-bench sequential lap, executable count, padded-compute waste)
         from benchmarks import engine_bench

@@ -15,6 +15,15 @@ finding                 repair
                         no committed flag, or missing/truncated leaf
                         files — removed (``latest_step()`` already skips
                         it; removing reclaims disk and un-confuses "ls")
+``bad_device_map``      a committed base whose aux (v2/v3) lane→page
+                        placement is inconsistent — an orphaned page
+                        claim (page/device id out of range, device-map
+                        length != page count) or a duplicate claim (two
+                        lanes, or one lane twice, owning the same
+                        (device, page)) — removed, truncating the chain
+                        to the last consistent base; resuming from a
+                        base whose page claims overlap would silently
+                        alias two jobs' coordinates
 ``torn_tail``           a partial final line in the newest journal
                         segment (kill mid-append) — truncated in place
                         at the last newline, exactly what the engine's
@@ -79,6 +88,62 @@ def _check_base(ckpt: pathlib.Path) -> str | None:
     return None
 
 
+def _check_device_maps(ckpt: pathlib.Path) -> str | None:
+    """None when the base's aux lane→(device, page) claims are
+    consistent, else a defect string.
+
+    Engine aux v3 allows a ``lane_dev`` entry to be a per-page device
+    list (a striped spanning lane) instead of one int (whole lane);
+    either way every live page claim must name an in-range device and an
+    in-range non-scratch local page, the device map must cover exactly
+    the lane's pages, and no (device, page) may be claimed twice — a
+    resume over overlapping claims would alias two jobs' coordinates.
+    Legacy/absent aux (pre-v2) has no placement metadata to check.
+    """
+    try:
+        aux = json.loads((ckpt / "manifest.json").read_text()).get("aux")
+    except (OSError, json.JSONDecodeError):
+        return None                      # _check_base already vetted these
+    if not isinstance(aux, dict) or aux.get("version") not in (2, 3):
+        return None
+    for pi, p in enumerate(aux.get("pools", [])):
+        try:
+            n_dev = int(p.get("n_dev", 1))
+            capacity = int(p["capacity"])
+            page_table = list(p["page_table"])
+            lane_dev = list(p["lane_dev"])
+        except (KeyError, TypeError, ValueError):
+            return f"pool {pi}: malformed placement metadata"
+        if n_dev < 1 or capacity % n_dev:
+            return (f"pool {pi}: capacity {capacity} not divisible by "
+                    f"n_dev {n_dev}")
+        if len(lane_dev) != len(page_table):
+            return (f"pool {pi}: lane_dev covers {len(lane_dev)} slots, "
+                    f"page_table {len(page_table)}")
+        cap_loc = capacity // n_dev      # local page 0 = per-device scratch
+        claimed: set[tuple[int, int]] = set()
+        for slot, (pt, dev) in enumerate(zip(page_table, lane_dev)):
+            if pt is None:
+                continue
+            devs = dev if isinstance(dev, list) else [dev] * len(pt)
+            if len(devs) != len(pt):
+                return (f"pool {pi} slot {slot}: device map length "
+                        f"{len(devs)} != page count {len(pt)}")
+            for pg, d in zip(pt, devs):
+                if not isinstance(d, int) or not 0 <= d < n_dev:
+                    return (f"pool {pi} slot {slot}: orphaned claim — "
+                            f"device {d!r} of {n_dev}")
+                if not isinstance(pg, int) or not 1 <= pg < cap_loc:
+                    return (f"pool {pi} slot {slot}: orphaned claim — "
+                            f"page {pg!r} outside local range "
+                            f"[1, {cap_loc})")
+                if (d, pg) in claimed:
+                    return (f"pool {pi} slot {slot}: duplicate claim of "
+                            f"device {d} page {pg}")
+                claimed.add((d, pg))
+    return None
+
+
 def _scan_segment(seg: pathlib.Path) -> tuple[list[tuple[int, int]], int]:
     """Parse one journal segment leniently.
 
@@ -134,6 +199,14 @@ def fsck(directory: str | pathlib.Path, repair: bool = False) -> dict:
             if repair:
                 shutil.rmtree(ckpt)
             note("torn_base", ckpt, defect, repair)
+            continue
+        defect = _check_device_maps(ckpt)
+        if defect is not None:
+            # removal truncates the chain to the last consistent base —
+            # latest_step() then resumes from it, same as torn_base
+            if repair:
+                shutil.rmtree(ckpt)
+            note("bad_device_map", ckpt, defect, repair)
 
     # ---- journal ---------------------------------------------------------
     jdir = root / "journal"

@@ -43,6 +43,25 @@ def _flatten(tree) -> tuple[list, Any]:
     return leaves, treedef
 
 
+def _host_copy(x) -> np.ndarray:
+    """Device -> host read that never populates ``ArrayImpl._npy_value``.
+
+    ``np.asarray`` on a fully-replicated multi-device CPU array caches a
+    ZERO-COPY view of shard 0 on the jax array itself; that external
+    reference outlives the save and permanently pins the buffer, so
+    every later donation of it silently falls back to a copy (the solve
+    engine's sanitizer flags exactly this on the first step after a
+    snapshot). Reading one shard's single-device view and copying it
+    leaves the source array's cache untouched. Cross-shard assembly
+    (genuinely sharded leaves) already materializes a fresh host copy,
+    and plain numpy/scalars have no cache to poison.
+    """
+    shards = getattr(x, "addressable_shards", None)
+    if shards and (len(shards) == 1 or x.is_fully_replicated):
+        return np.array(shards[0].data, copy=True)
+    return np.asarray(x)
+
+
 class CheckpointManager:
     def __init__(self, directory: str | pathlib.Path, *, keep: int = 3,
                  journal_segment_records: int = 1024, metrics=None,
@@ -91,7 +110,7 @@ class CheckpointManager:
         skew after a crash."""
         self.wait()               # at most one writer — never race a .tmp dir
         leaves, treedef = _flatten(tree)
-        host_leaves = [np.asarray(x) for x in leaves]   # device -> host copy
+        host_leaves = [_host_copy(x) for x in leaves]   # device -> host copy
         if blocking:
             self._write(step, host_leaves, treedef, aux)
         else:

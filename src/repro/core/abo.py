@@ -41,6 +41,17 @@ class ABOConfig:
     safety: float = 2.0          # window covers ± safety × previous grid spacing
     guard_commits: bool = True   # reject a block commit that worsens f (monotone)
     use_kernel: bool = False     # route the probe tile through the Pallas kernel
+    # Spanning decomposition: when set, the lane is divided into fixed
+    # contiguous shards of ``span_coords`` coordinates. Blocks run
+    # Gauss-Seidel WITHIN a shard (carried aggregates, as always) but
+    # Jacobi ACROSS shards: at each shard's first block the carried
+    # aggregates reset to the pass-entry snapshot, so every shard sweeps
+    # against the same frozen cross-shard state. This is a *math* knob —
+    # it changes the trajectory deterministically and applies identically
+    # at every device count — which is exactly what lets the engine stripe
+    # one lane's pages across the mesh and still match the dense solver
+    # bit-for-bit (see engine/DESIGN.md § Spanning lanes).
+    span_coords: int | None = None
     # "linear": anneal the cross-coordinate coupling weight λ from 0 to 1
     # over passes (continuation; escapes paired local minima — DESIGN.md §2).
     # "none": the paper-pure exact objective in every pass.
@@ -61,6 +72,16 @@ class ABOConfig:
             raise ValueError(
                 f"block_size must be >= 1, got {self.block_size}: each Jacobi "
                 "tile must hold at least one coordinate")
+        if self.span_coords is not None:
+            if self.span_coords < 1:
+                raise ValueError(
+                    f"span_coords must be >= 1, got {self.span_coords}")
+            if self.span_coords % self.block_size != 0:
+                raise ValueError(
+                    f"span_coords ({self.span_coords}) must be a multiple of "
+                    f"block_size ({self.block_size}): a shard boundary inside "
+                    "a Jacobi tile would split one block commit across two "
+                    "aggregate snapshots")
 
     def resolved_shrink(self) -> float:
         if self.shrink is not None:
@@ -209,9 +230,24 @@ def _sweep_pass(obj, x, aggs, n_valid, half_width, pass_idx, lam, cfg,
     bsz = cfg.block_size
     n_blocks = n_pad // bsz
     first = pass_idx == 0
+    # Spanning decomposition: shards of span_coords coordinates run
+    # Gauss-Seidel within, Jacobi across — at every shard's first block the
+    # carried aggregates reset to the pass-entry snapshot ``aggs0``, so each
+    # shard's sweep sees only the previous pass's cross-shard state. The
+    # reset makes shard sweeps within a pass provably independent (another
+    # shard's current-pass x enters a block step only through the carried
+    # aggregates), which is what lets the engine run them device-parallel
+    # and still reproduce THIS dense scan bit-for-bit. Codegen is emitted
+    # only when span_coords is set: the span-free program is untouched.
+    rows_per_shard = (cfg.span_coords // bsz
+                      if cfg.span_coords is not None else None)
+    aggs0 = aggs
 
     def block_body(carry, blk):
         x, aggs = carry
+        if rows_per_shard is not None:
+            # At blk == 0 this is a bitwise no-op (carried == pass-entry).
+            aggs = jnp.where(blk % rows_per_shard == 0, aggs0, aggs)
         start = blk * bsz
         xb = jax.lax.dynamic_slice(x, (start,), (bsz,))
         idx = start + jnp.arange(bsz)
@@ -290,6 +326,11 @@ def effective_config(cfg: ABOConfig, n: int) -> ABOConfig:
     bsz = 1 if n <= 128 else cfg.block_size
     if bsz != cfg.block_size:
         cfg = dataclasses.replace(cfg, block_size=bsz)
+    # A span covering the whole problem is exactly the span-free program
+    # (the reset fires only at block 0, where it is a bitwise no-op) —
+    # normalize it away so family keys, plan signatures and codegen agree.
+    if cfg.span_coords is not None and cfg.span_coords >= n:
+        cfg = dataclasses.replace(cfg, span_coords=None)
     return cfg
 
 
@@ -340,6 +381,18 @@ def seeded_start(seed, n_pad, dtype, lo, hi, chunk=1 << 20):
         lambda c: draw(c * chunk + jnp.arange(chunk, dtype=jnp.uint32)),
         jnp.arange(n_chunks, dtype=jnp.uint32))
     return out.reshape(n_chunks * chunk)[:n_pad]
+
+
+def seeded_at(seed, idx, dtype, lo, hi):
+    """:func:`seeded_start`'s per-coordinate draw at arbitrary global
+    indices: the identical ``(seed, i) -> value`` map (same fold_in, same
+    uniform), exposed for layouts holding a non-contiguous coordinate
+    subset — the engine's striped spanning pages, where each device seeds
+    only the coordinates of the pages it owns. ``idx`` is a (k,) uint32
+    array of global coordinate indices."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.vmap(lambda i: jax.random.fold_in(key, i))(idx)
+    return jax.vmap(lambda k: jax.random.uniform(k, (), dtype, lo, hi))(ks)
 
 
 def _init_x(obj, n, n_pad, x0, dtype, seed, bounds):
@@ -475,6 +528,12 @@ def abo_minimize(
             raise NotImplementedError(
                 "use_kernel supports the uniform-bounds Griewank benchmark; "
                 "use the jnp path for other objectives")
+        if cfg.span_coords is not None:
+            raise NotImplementedError(
+                "use_kernel does not implement the spanning decomposition "
+                "(span_coords): the kernel carries aggregates in SMEM across "
+                "the whole pass with no shard-boundary reset; use the jnp "
+                "path for spanning solves")
         from repro.kernels.coord_sweep.ops import abo_minimize_kernel
         return abo_minimize_kernel(n, config=cfg, x0=x0, dtype=dtype)
 

@@ -53,11 +53,14 @@ def owner_select(x: jnp.ndarray, owner: jnp.ndarray, my, axis: str):
     disjoint nonzeros == bitwise OR == exact transfer), and cast back.
     NaN payloads, signed zeros, and denormals all round-trip untouched.
 
-    ``owner`` is ``(rows,)`` int32; ``x`` is ``(rows, ...)`` of any fixed-
-    width dtype; ``my`` is this device's :func:`axis_linear_index`.
+    ``owner`` is int32 of any shape that is a leading prefix of ``x``'s —
+    ``(rows,)`` against ``(rows, ...)`` per-slot tables, or ``(v, g)``
+    against the ``(v, g, block)`` page gather of a striped spanning lane
+    (engine harvest); ``x`` is any fixed-width dtype; ``my`` is this
+    device's :func:`axis_linear_index`.
     """
     mask = owner == my
-    mask = mask.reshape(mask.shape + (1,) * (x.ndim - 1))
+    mask = mask.reshape(mask.shape + (1,) * (x.ndim - mask.ndim))
     if jnp.issubdtype(x.dtype, jnp.integer):
         picked = jnp.where(mask, x, jnp.zeros_like(x))
         return jax.lax.psum(picked, axis)

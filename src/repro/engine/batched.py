@@ -79,7 +79,8 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.abo import (ABOConfig, _block_step, _default_probe_tile,
-                            effective_config, pass_schedule, seeded_start)
+                            effective_config, pass_schedule, seeded_at,
+                            seeded_start)
 from repro.core.sharded import axis_linear_index, owner_select
 from repro.objectives.base import SeparableObjective, _default_agg_dtype
 
@@ -103,6 +104,14 @@ DEFAULT_MAX_PAD_WASTE = 0.35
 # shard-by-shard); the shared scratch lane-slot row is owned by device 0
 # for replication purposes.
 SCRATCH_PAGE = 0
+
+# Sentinel rows-per-shard for lanes WITHOUT a spanning decomposition: the
+# shard-boundary aggregate reset in the band body fires at rows where
+# ``row % shard_rows[slot] == 0`` — with this sentinel that is only row 0,
+# where the reset is a bitwise no-op (the carried aggregates equal the
+# pass-entry snapshot before a lane's first row), so span-free lanes sweep
+# the identical trajectory as before.
+SPAN_NONE_ROWS = 1 << 30
 
 
 def pad_ladder(n: int, block: int,
@@ -371,7 +380,8 @@ class PoolOps:
         return len(self._cache)
 
     # ----------------------------------------------------- traced sub-steps
-    def _band_body(self, state: PoolState, lanes, pages, rows, n_rows):
+    def _band_body(self, state: PoolState, lanes, pages, rows, n_rows,
+                   shard_rows, aggs0):
         """Sweep one width band: rows [0, n_rows) of the (r_cap, w) plan
         arrays, in order. Each row gathers the w lanes' blocks, runs the
         shared (w, block, m) probe tile — the identical per-lane schedule
@@ -386,7 +396,15 @@ class PoolOps:
         program's dynamic loops (different FMA/vectorization choices than
         the dense scan) and argmin picks flip wherever candidates probe
         within an ulp — the reason per-lane bits are identical to
-        abo_minimize at any layout."""
+        abo_minimize at any layout.
+
+        ``shard_rows`` is the (slots+1,) per-slot spanning decomposition
+        (rows per shard; SPAN_NONE_ROWS for span-free lanes) and ``aggs0``
+        the pass-entry aggregate snapshot: at a shard's first row the
+        gathered aggregates reset to ``aggs0`` — core.abo._sweep_pass's
+        Jacobi-across-shards reset, expressed per gathered entry so every
+        device sweeps its resident shards against the same frozen
+        cross-shard state."""
         obj, cfg, probe_tile = self.obj, self.cfg, self.probe_tile
         bsz = cfg.block_size
 
@@ -402,8 +420,11 @@ class PoolOps:
             half_width, lam = pass_schedule(cfg, p, aggs.dtype)
             idx = rw[:, None] * bsz + jnp.arange(bsz)[None, :]
             valid = idx < state.n_valid[ln][:, None]
+            # shard-boundary Jacobi reset (bitwise no-op at a lane's row 0)
+            ag = jnp.where((rw % shard_rows[ln] == 0)[:, None],
+                           aggs0[ln], aggs[ln])
             args = jax.lax.optimization_barrier(
-                (pool[pg], aggs[ln], idx, valid, half_width, p == 0, lam))
+                (pool[pg], ag, idx, valid, half_width, p == 0, lam))
             xb2, ag2 = jax.lax.optimization_barrier(
                 jax.vmap(core_step)(*args))
             return pool.at[pg].set(xb2), aggs.at[ln].set(ag2)
@@ -446,43 +467,122 @@ class PoolOps:
             pass_idx=state.pass_idx.at[lanes].add(1),
         )
 
+    def _span_partial_aggs(self, st: PoolState, vs: int, t_pad: int,
+                           sp_lanes, sp_ntiles, tile_slot, tile_idx,
+                           tile_pages, tile_off):
+        """(vs, n_aggs) exact aggregates for striped lanes, reconstructed
+        from per-device fixed-origin tile partials: masked ``tile_partial``
+        per owned tile, disjoint scatter into a zeros table, ONE
+        bit-pattern psum (exactly-one-writer cells, so the integer sum IS
+        the bit transfer), replicated in-order fold."""
+        obj = self.obj
+        agg_dt = st.aggs.dtype
+        # (vs+1,) n_valid per table row; the dump row masks to zero terms
+        nv_rows = jnp.concatenate(
+            [st.n_valid[sp_lanes], jnp.zeros((1,), jnp.int32)])
+
+        def one_tile(slot, t, pgs, off):
+            xr = st.pool[pgs].reshape(-1)            # (ppt*block,)
+            xc = jax.lax.dynamic_slice(
+                xr, (off,), (obj.REDUCE_TILE,))
+            return obj.tile_partial(xc, t, nv_rows[slot], agg_dtype=agg_dt)
+
+        parts = jax.vmap(one_tile)(tile_slot, tile_idx, tile_pages,
+                                   tile_off)          # (ts, n_aggs)
+        table = jnp.zeros((vs + 1, t_pad + 1, obj.n_aggs),
+                          agg_dt).at[tile_slot, tile_idx].set(parts)
+        bits_dt = jnp.dtype(f"uint{table.dtype.itemsize * 8}")
+        table = jax.lax.bitcast_convert_type(
+            jax.lax.psum(jax.lax.bitcast_convert_type(table, bits_dt),
+                         "pool"), table.dtype)
+        return jax.vmap(lambda pr, nt: obj.fold_tile_partials(
+            pr, nt, agg_dtype=agg_dt))(table[:vs], sp_ntiles)
+
+    def _span_sync(self, st: PoolState, vs: int, t_pad: int,
+                   sp_lanes, sp_ntiles, tile_slot, tile_idx, tile_pages,
+                   tile_off):
+        """End-of-pass re-sync for STRIPED spanning lanes: the distributed
+        reconstruction of ``obj.aggregates`` over a lane whose pages live
+        on several devices.
+
+        Each device computes the masked fixed-origin partial of every
+        REDUCE_TILE tile it owns (``obj.tile_partial`` — the identical ops
+        as the tile reduce inside ``aggregates``), scatters them into a
+        zeros ``(vs+1, t_pad+1, n_aggs)`` table (row vs / column t_pad are
+        the dump targets for ladder padding), and the tables are combined
+        by ONE bit-pattern psum: tile ownership is disjoint, so every cell
+        has exactly one non-zero writer and the integer sum transfers its
+        bit pattern exactly — no owner map needed. The replicated fold
+        (``obj.fold_tile_partials``) then accumulates the partials in
+        global tile order, add-for-add the sequence ``aggregates`` runs —
+        so the synced aggregates are bit-identical to the dense solver's
+        exact re-sync at every device count."""
+        obj, cfg = self.obj, self.cfg
+        aggs = self._span_partial_aggs(st, vs, t_pad, sp_lanes, sp_ntiles,
+                                       tile_slot, tile_idx, tile_pages,
+                                       tile_off)
+        f = jax.vmap(obj.combine)(aggs)
+        p = st.pass_idx[sp_lanes]
+        p_hist = jnp.minimum(p, cfg.n_passes - 1)
+        return dataclasses.replace(
+            st,
+            aggs=st.aggs.at[sp_lanes].set(aggs.astype(st.aggs.dtype)),
+            hist=st.hist.at[sp_lanes, p_hist].set(
+                f.astype(st.hist.dtype)),
+            pass_idx=st.pass_idx.at[sp_lanes].add(1),
+        )
+
     # ----------------------------------------------------------- fused step
-    def fused_step(self, bands: tuple, sync: tuple) -> Callable:
+    def fused_step(self, bands: tuple, sync: tuple,
+                   span: tuple | None = None) -> Callable:
         """One executable for a whole sweep-plan step.
 
         ``bands`` is the plan signature ``((w, r_cap), ...)`` and ``sync``
         the lane-sync shape ``(g, v)``. The returned callable takes
-        ``(state, n_fused, lanes_0, pages_0, rows_0, n_rows_0, ...,
-        sync_lanes, sync_pages)`` and runs ``n_fused`` complete passes —
-        every band in ascending-row order (preserving per-lane
-        Gauss-Seidel block ordering), then the per-lane re-sync — inside
-        one dynamic fori_loop. Both the pass count and the per-band row
-        counts are traced scalars, so one compiled program serves any
-        fuse depth and any partial band fill of the same signature.
+        ``(state, n_fused, shard_rows, lanes_0, pages_0, rows_0,
+        n_rows_0, ..., sync_lanes, sync_pages)`` and runs ``n_fused``
+        complete passes — every band in ascending-row order (preserving
+        per-lane Gauss-Seidel block ordering), then the per-lane re-sync —
+        inside one dynamic fori_loop. ``shard_rows`` is the (slots+1,)
+        spanning decomposition (SPAN_NONE_ROWS for span-free lanes). Both
+        the pass count and the per-band row counts are traced scalars, so
+        one compiled program serves any fuse depth and any partial band
+        fill of the same signature.
 
-        Sharded pools take ``(state, n_fused, owner, *per_device_arrs)``
-        where every table carries a leading device axis (band lanes/pages/
-        rows ``(D, r_cap, w)``, band row counts ``(D,)``, sync tables
-        ``(D, v)`` / ``(D, v, g)``) and ``owner`` maps slot→device. Each
-        device runs ITS band schedule and lane sync per pass, then the
-        slot arrays are re-replicated by one owner-selected psum — the
-        pass-end Jacobi exchange of ``core.sharded``, n_aggs scalars per
-        slot from its one writer.
+        Sharded pools take ``(state, n_fused, owner, shard_rows,
+        *per_device_arrs)`` where every table carries a leading device
+        axis (band lanes/pages/rows ``(D, r_cap, w)``, band row counts
+        ``(D,)``, sync tables ``(D, v)`` / ``(D, v, g)``) and ``owner``
+        maps slot→device. Each device runs ITS band schedule and lane sync
+        per pass, then the slot arrays are re-replicated by one
+        owner-selected psum — the pass-end Jacobi exchange of
+        ``core.sharded``, n_aggs scalars per slot from its one writer.
+
+        ``span`` (sharded only) is the striped-lane signature
+        ``(vs, t_pad, ts, ppt)``; when set, six extra tables follow the
+        sync tables — ``sp_lanes (vs,)`` / ``sp_ntiles (vs,)``
+        (replicated) and per-device ``tile_slot/tile_idx/tile_off
+        (D, ts)`` / ``tile_pages (D, ts, ppt)`` — and each pass ends with
+        the distributed span re-sync (:meth:`_span_sync`) before the
+        owner psum. Striped slots carry owner 0: their scalars are already
+        replica-identical after the span sync, so the select is a no-op.
         """
-        ck = ("step", bands, sync)
+        ck = ("step", bands, sync, span)
         fn = self._cache.get(ck)
         if fn is not None:
             return fn
         n_bands = len(bands)
         if self.mesh is None:
+            assert span is None, "striped spanning lanes need a mesh"
 
-            def run(state: PoolState, n_fused, *arrs):
+            def run(state: PoolState, n_fused, shard_rows, *arrs):
                 band_args = [arrs[4 * i: 4 * i + 4] for i in range(n_bands)]
                 sync_args = arrs[4 * n_bands: 4 * n_bands + 2]
 
                 def one_pass(_, st):
+                    aggs0 = st.aggs
                     for ba in band_args:
-                        st = self._band_body(st, *ba)
+                        st = self._band_body(st, *ba, shard_rows, aggs0)
                     return self._sync_body(st, *sync_args)
 
                 return jax.lax.fori_loop(0, n_fused, one_pass, state)
@@ -490,19 +590,33 @@ class PoolOps:
             fn = jax.jit(run, donate_argnums=(0,))
         else:
 
-            def run_local(state: PoolState, n_fused, owner, *arrs):
+            def run_local(state: PoolState, n_fused, owner, shard_rows,
+                          *arrs):
                 my = axis_linear_index(("pool",))
                 band_args = [tuple(a[0] for a in arrs[4 * i: 4 * i + 3])
                              + (arrs[4 * i + 3][0],) for i in range(n_bands)]
                 sync_args = tuple(a[0] for a in
                                   arrs[4 * n_bands: 4 * n_bands + 2])
+                if span is not None:
+                    vs, t_pad, _, _ = span
+                    base = 4 * n_bands + 2
+                    sp_lanes, sp_ntiles = arrs[base], arrs[base + 1]
+                    tile_slot, tile_idx = (arrs[base + 2][0],
+                                           arrs[base + 3][0])
+                    tile_pages, tile_off = (arrs[base + 4][0],
+                                            arrs[base + 5][0])
 
                 def one_pass(_, st):
+                    aggs0 = st.aggs
                     for ba in band_args:
-                        st = self._band_body(st, *ba)
+                        st = self._band_body(st, *ba, shard_rows, aggs0)
                     st = self._sync_body(st, *sync_args)
-                    # ONE psum per pass: every slot's scalars from their
-                    # single writer (bit patterns, not float sums)
+                    if span is not None:
+                        st = self._span_sync(st, vs, t_pad, sp_lanes,
+                                             sp_ntiles, tile_slot, tile_idx,
+                                             tile_pages, tile_off)
+                    # ONE exchange per pass: every slot's scalars from
+                    # their single writer (bit patterns, not float sums)
                     return dataclasses.replace(
                         st,
                         aggs=owner_select(st.aggs, owner, my, "pool"),
@@ -513,11 +627,15 @@ class PoolOps:
                 return jax.lax.fori_loop(0, n_fused, one_pass, state)
 
             band_specs = (P("pool", None, None),) * 3 + (P("pool"),)
+            span_specs = () if span is None else (
+                P(), P(), P("pool", None), P("pool", None),
+                P("pool", None, None), P("pool", None))
             fn = jax.jit(shard_map(
                 run_local, mesh=self.mesh, check_rep=False,
-                in_specs=(_state_specs(), P(), P())
+                in_specs=(_state_specs(), P(), P(), P())
                 + band_specs * n_bands
-                + (P("pool", None), P("pool", None, None)),
+                + (P("pool", None), P("pool", None, None))
+                + span_specs,
                 out_specs=_state_specs()), donate_argnums=(0,))
         self._cache[ck] = fn
         return fn
@@ -630,6 +748,86 @@ class PoolOps:
         self._cache[ck] = fn
         return fn
 
+    def place_span(self, gl: int, ts: int, ppt: int, t_pad: int) -> Callable:
+        """Placement for ONE striped spanning lane (sharded pools only).
+
+        ``(state, lane (), n_valid (), seed (), seeded (), poison (),
+        n_tiles (), pg_tbl (D, gl), gpage_tbl (D, gl), tile_idx (D, ts),
+        tile_pages (D, ts, ppt), tile_off (D, ts)) -> state``.
+
+        Each device writes only its resident pages: page entry j holds the
+        LOCAL page id and the lane's GLOBAL page index (padding entries are
+        local scratch 0 / gpage -1 and write exact zeros). Seeded starts
+        use the per-coordinate counter draw (``core.abo.seeded_at``) so a
+        striped lane starts from bit-identical coordinates as the dense
+        solver's ``seeded_start``; golden starts are the same constant.
+        ``poison`` NaNs global coordinate 0 on whichever device owns page
+        0 (the engine's fault-injection hook). Init aggregates come from
+        the same tile-partial psum + in-order fold as the span re-sync, so
+        they are bit-identical to ``obj.aggregates`` over the dense start
+        vector. All slot scalars land replica-identical — no owner psum
+        needed."""
+        ck = ("place_span", gl, ts, ppt, t_pad)
+        fn = self._cache.get(ck)
+        if fn is not None:
+            return fn
+        assert self.mesh is not None, "place_span requires a sharded pool"
+        obj, cfg, dt = self.obj, self.cfg, self.dtype
+        bsz = cfg.block_size
+
+        def run_local(state: PoolState, lane, n_valid, seed, seeded,
+                      poison, n_tiles, pg_tbl, gpage_tbl, tile_idx,
+                      tile_pages, tile_off):
+            lane, n_valid = lane[0], n_valid[0]
+            seed, seeded, poison = seed[0], seeded[0], poison[0]
+            n_tiles = n_tiles[0]
+            pg_tbl, gpage_tbl = pg_tbl[0], gpage_tbl[0]
+            tile_idx = tile_idx[0]
+            tile_pages, tile_off = tile_pages[0], tile_off[0]
+
+            def write_one(gpage):
+                idx = gpage * bsz + jnp.arange(bsz)
+                xs = seeded_at(seed, idx.astype(jnp.uint32), dt,
+                               obj.lower, obj.upper)
+                xg = jnp.full((bsz,), obj.lower + 0.6180339887
+                              * (obj.upper - obj.lower), dt)
+                xr = jnp.where(seeded, xs, xg)
+                xr = jnp.where(poison & (idx == 0),
+                               jnp.full((), jnp.nan, dt), xr)
+                ok = (gpage >= 0) & (idx < n_valid)
+                return jnp.where(ok, xr, jnp.zeros((), dt))
+
+            vals = jax.vmap(write_one)(gpage_tbl)     # (gl, block)
+            st = dataclasses.replace(
+                state, pool=state.pool.at[pg_tbl].set(vals))
+            st = dataclasses.replace(
+                st,
+                hist=st.hist.at[lane].set(
+                    jnp.zeros((cfg.n_passes,), st.hist.dtype)),
+                pass_idx=st.pass_idx.at[lane].set(
+                    jnp.zeros((), jnp.int32)),
+                n_valid=st.n_valid.at[lane].set(
+                    n_valid.astype(jnp.int32)),
+            )
+            # row 0 is the one real lane; dump tiles (idx == t_pad) route
+            # to the dump row
+            tile_slot = jnp.where(tile_idx < t_pad, 0, 1).astype(jnp.int32)
+            ag = self._span_partial_aggs(
+                st, 1, t_pad, lane[None], n_tiles[None], tile_slot,
+                tile_idx, tile_pages, tile_off)
+            return dataclasses.replace(
+                st, aggs=st.aggs.at[lane].set(ag[0].astype(st.aggs.dtype)))
+
+        fn = jax.jit(shard_map(
+            run_local, mesh=self.mesh, check_rep=False,
+            in_specs=(_state_specs(), P(), P(), P(), P(), P(), P(),
+                      P("pool", None), P("pool", None),
+                      P("pool", None), P("pool", None, None),
+                      P("pool", None)),
+            out_specs=_state_specs()), donate_argnums=(0,))
+        self._cache[ck] = fn
+        return fn
+
     def _write_lanes(self, state, lanes, pages, xrow, aggs, n_valid):
         v, g = pages.shape
         bsz = self.cfg.block_size
@@ -696,6 +894,44 @@ class PoolOps:
                 in_specs=(_state_specs(), P(), P("pool", None),
                           P("pool", None, None)),
                 out_specs=(P(), P(), P())))
+        self._cache[ck] = fn
+        return fn
+
+    def finalize_span(self, g: int, v: int) -> Callable:
+        """Harvest for STRIPED spanning lanes (sharded pools only).
+
+        ``(state, page_dev (v, g), lanes (v,), pages (D, v, g)) ->
+        (f (v,), x (v, g*block), hist (v, n_passes))``. No single device
+        holds a striped lane's row view, so the gather is selected
+        per-PAGE: device d gathers its local pages (scratch elsewhere) and
+        one owner_select over the (v, g) page→device map stitches the
+        global view. ``f`` comes from ``combine(state.aggs[lane])`` — at
+        harvest the lane's last action was its span re-sync, whose
+        aggregates are bit-identical to the exact re-eval the unsharded
+        finalize computes (and to ``abo_minimize``'s final ``f_exact``)."""
+        ck = ("final_span", g, v)
+        fn = self._cache.get(ck)
+        if fn is not None:
+            return fn
+        assert self.mesh is not None, "finalize_span requires a sharded pool"
+        obj, bsz = self.obj, self.cfg.block_size
+
+        def run_local(state: PoolState, page_dev, lanes, pages):
+            my = axis_linear_index(("pool",))
+            pages = pages[0]                          # (v, g) local ids
+            xpg = state.pool[pages]                   # (v, g, block)
+            xpg = owner_select(xpg, page_dev, my, "pool")
+            xrow = xpg.reshape(v, g * bsz)
+            f = jax.vmap(obj.combine)(state.aggs[lanes])
+            return f, xrow, state.hist[lanes]
+
+        # repro: allow[RPR005] read-only like finalize: the pool must stay
+        # live for stepping, so no donation
+        fn = jax.jit(shard_map(
+            run_local, mesh=self.mesh, check_rep=False,
+            in_specs=(_state_specs(), P(), P(),
+                      P("pool", None, None)),
+            out_specs=(P(), P(), P())))
         self._cache[ck] = fn
         return fn
 

@@ -164,12 +164,20 @@ class _Plan:
     # computed once from plan shapes at build time, accumulated into
     # engine_est_bytes_moved_total per dispatch — never a device read
     pass_bytes: int = 0
+    # striped-spanning-lane signature (vs, t_pad, ts, ppt) — None when no
+    # lane in this plan stripes across the mesh (see _build_plan_sharded)
+    span: tuple | None = None
+    # analytic bytes the per-pass span re-sync moves (tile gathers + the
+    # bit-pattern psum of the partial table); obs.roofline adds this term
+    # to pass_bytes
+    span_psum_bytes: int = 0
 
     def signature(self) -> tuple:
-        """The compiled shape of this plan: band + sync rungs only. Plans
-        sharing a signature share one fused-step executable."""
+        """The compiled shape of this plan: band + sync + span rungs
+        only. Plans sharing a signature share one fused-step
+        executable."""
         return (tuple((r.w, r.r_cap) for r in self.runs),
-                (self.sync.g, self.sync.v))
+                (self.sync.g, self.sync.v), self.span)
 
 
 def _gather_tables(entries: list[tuple[int, list[int]]], scratch_lane: int):
@@ -282,8 +290,31 @@ class LanePool:
         for jid, pt, dev in zip(self.job_ids, self.page_table,
                                 self.lane_dev):
             if jid is not None and pt:
-                live[dev] += len(pt)
+                if isinstance(dev, list):    # striped: count page-wise
+                    for d in dev:
+                        live[d] += 1
+                else:
+                    live[dev] += len(pt)
         return min(range(self.n_dev), key=lambda d: (live[d], d))
+
+    # repro: allow[RPR001] striped page allocation is host bookkeeping:
+    # numpy over host free lists, never live device buffers
+    def alloc_span_pages(self, count: int, rps_pages: int
+                         ) -> tuple[list[int], list[int]]:
+        """Striped allocation for one spanning lane: ``count`` pages in
+        fixed contiguous shards of ``rps_pages``, shard k resident on
+        device ``k % n_dev`` (round-robin — re-derivable at any device
+        count, which is what lets kill/resume reshard a striped lane
+        deterministically). Returns the per-page (LOCAL id, device)
+        columns of the lane's page table in global page order."""
+        shard_of = ((np.arange(count) // rps_pages)
+                    % self.n_dev).astype(np.int64)
+        locs = np.zeros((count,), np.int64)
+        for d in range(self.n_dev):
+            idx = np.flatnonzero(shard_of == d)
+            if len(idx):
+                locs[idx] = self.alloc_pages(len(idx), d)
+        return locs.tolist(), shard_of.tolist()
 
     def alloc_pages(self, count: int, dev: int = 0) -> list[int]:
         """Take ``count`` LOCAL page ids on device ``dev``, growing the
@@ -386,13 +417,23 @@ class LanePool:
 
     # ------------------------------------------------------------- planning
     @staticmethod
-    def _bands_np(active: list[tuple[int, list[int]]], scratch: int):
+    def _bands_np(active, scratch: int):
         """Numpy band tables for one device's (or the unsharded pool's)
         active lanes: a list of ``{w, nb, lanes, pages, rows, live}``
         dicts with ``(nb, w)`` arrays, width already on its rung, rows
         NOT yet padded to a row-count rung (callers pad — the unsharded
         plan to each band's own rung, the sharded plan to the rung
         unified across devices).
+
+        ``active`` entries are ``(slot, pages, rows)``: ``rows`` holds
+        each page's GLOBAL block-row number inside its lane — ``None``
+        means the contiguous ``0..len(pages)-1`` of a whole lane, while a
+        striped spanning lane's per-device entry carries just its
+        resident shards' pages with their true global rows, so the probe
+        index math and the shard-boundary Jacobi reset see the same
+        coordinates at every device count. Entries' rows must ascend:
+        the band loop executes entry position r before r+1, which is the
+        Gauss-Seidel order within each (shard of a) lane.
 
         Construction is array-at-once: lanes sort by depth (descending,
         slot-ascending ties), so the lanes occupying row r are exactly the
@@ -406,16 +447,19 @@ class LanePool:
         if not active:
             return []
         n_act = len(active)
-        depths = np.fromiter((len(pt) for _, pt in active), np.int64, n_act)
+        depths = np.fromiter((len(e[1]) for e in active), np.int64, n_act)
         order = np.lexsort((np.arange(n_act), -depths))
-        slots_arr = np.fromiter((s for s, _ in active), np.int32,
+        slots_arr = np.fromiter((e[0] for e in active), np.int32,
                                 n_act)[order]
         max_rows = int(depths.max())
         pages_mat = np.full((n_act, max_rows), batched.SCRATCH_PAGE,
                             np.int32)
+        rows_mat = np.zeros((n_act, max_rows), np.int32)
         for i, oi in enumerate(order):
-            pt = active[oi][1]
+            _, pt, rws = active[oi]
             pages_mat[i, : len(pt)] = pt
+            rows_mat[i, : len(pt)] = (np.arange(len(pt), dtype=np.int32)
+                                      if rws is None else rws)
 
         # lanes occupying row r (non-increasing), its width rung, and the
         # maximal contiguous runs of equal rung = the bands
@@ -443,7 +487,7 @@ class LanePool:
                 colmask, slots_arr[None, :cmax], scratch)
             pages_np[:, :cmax] = np.where(
                 colmask, pages_mat[:cmax, r0:r1].T, batched.SCRATCH_PAGE)
-            rows_np[:, :cmax] = np.where(colmask, rows_idx[r0:r1, None], 0)
+            rows_np[:, :cmax] = np.where(colmask, rows_mat[:cmax, r0:r1].T, 0)
             bands.append({"w": w_rung, "nb": nb, "lanes": lanes_np,
                           "pages": pages_np, "rows": rows_np,
                           "live": int(counts[r0:r1].sum())})
@@ -474,10 +518,22 @@ class LanePool:
         if not active:
             return _Plan([], None, 0, 0)
         scratch = self.slots
+        # per-slot spanning decomposition (rows per shard): uniform over
+        # a pool — span_coords is part of the family config — so every
+        # active slot carries the same value; SPAN_NONE_ROWS elsewhere
+        # makes the in-sweep reset fire only at row 0 (a bitwise no-op)
+        cfg = batched.key_config(self.key)
+        rps = (cfg.span_coords // cfg.block_size
+               if cfg.span_coords is not None else batched.SPAN_NONE_ROWS)
+        shard_rows = np.full((self.slots + 1,), batched.SPAN_NONE_ROWS,
+                             np.int32)
+        for slot, _ in active:
+            shard_rows[slot] = rps
         if self.mesh is None:
             runs = []
             live = swept = 0
-            for b in self._bands_np(active, scratch):
+            for b in self._bands_np([(s, pt, None) for s, pt in active],
+                                    scratch):
                 nb, w_rung = b["nb"], b["w"]
                 r_cap = batched.pad_ladder(nb, 1)
 
@@ -505,6 +561,7 @@ class LanePool:
             sync = _SyncGroup(g=g, v=v, lanes=jnp.asarray(lanes_np),
                               pages=jnp.asarray(pages_np))
             plan = _Plan(runs, sync, live, swept)
+            plan.args = [jnp.asarray(shard_rows)]
             for r in plan.runs:
                 plan.args += [r.lanes, r.pages, r.rows, r.n_rows]
             plan.args += [sync.lanes, sync.pages]
@@ -512,14 +569,36 @@ class LanePool:
                 plan, batched.key_config(self.key).block_size,
                 jnp.dtype(self.key[2]).itemsize)
             return plan
-        return self._build_plan_sharded(active, scratch)
+        return self._build_plan_sharded(active, scratch, shard_rows)
 
-    def _build_plan_sharded(self, active, scratch) -> _Plan:
+    # repro: allow[RPR001] plan building is host metadata work: numpy
+    # over host page tables / device maps, never live device buffers
+    def _build_plan_sharded(self, active, scratch, shard_rows) -> _Plan:
         D = self.n_dev
         mesh = self.mesh
-        per_dev = [[(s, pt) for s, pt in active if self.lane_dev[s] == d]
+        cfg = batched.key_config(self.key)
+        bsz = cfg.block_size
+        whole = [(s, pt) for s, pt in active
+                 if not isinstance(self.lane_dev[s], list)]
+        span = [(s, pt) for s, pt in active
+                if isinstance(self.lane_dev[s], list)]
+        per_dev = [[(s, pt) for s, pt in whole if self.lane_dev[s] == d]
                    for d in range(D)]
-        bands_d = [self._bands_np(act, scratch) for act in per_dev]
+        # band schedules: whole lanes contribute their full contiguous
+        # runs; a striped lane contributes, per device, just its resident
+        # shards' pages with TRUE global rows (ascending, so the device
+        # sweeps its shards in Gauss-Seidel order and the shard-boundary
+        # reset in _band_body fires exactly at each shard's first row)
+        band_dev = [[(s, pt, None) for s, pt in act] for act in per_dev]
+        for s, pt in span:
+            devs = np.asarray(self.lane_dev[s], np.int32)
+            pt_np = np.asarray(pt, np.int32)
+            rows = np.arange(len(pt), dtype=np.int32)
+            for d in range(D):
+                m = devs == d
+                if m.any():
+                    band_dev[d].append((s, pt_np[m], rows[m]))
+        bands_d = [self._bands_np(act, scratch) for act in band_dev]
         n_bands = max(len(b) for b in bands_d)
         sh_tab = NamedSharding(mesh, PartitionSpec("pool", None, None))
         sh_vec = NamedSharding(mesh, PartitionSpec("pool"))
@@ -560,11 +639,13 @@ class LanePool:
                 live_slots=band_live,
                 swept_slots=band_swept))
 
-        # per-device lane sync at rungs unified across devices
-        g = max(batched.pad_ladder(max(len(pt) for _, pt in act), 1)
-                for act in per_dev if act)
-        v = max(batched.pad_ladder(len(act), 1)
-                for act in per_dev if act)
+        # per-device lane sync at rungs unified across devices — WHOLE
+        # lanes only: a striped lane has no single-device row view, its
+        # re-sync is the distributed span sync below
+        g = max((batched.pad_ladder(max(len(pt) for _, pt in act), 1)
+                 for act in per_dev if act), default=1)
+        v = max((batched.pad_ladder(len(act), 1)
+                 for act in per_dev if act), default=1)
         lanes_np = np.full((D, v), scratch, np.int32)
         pages_np = np.full((D, v, g), batched.SCRATCH_PAGE, np.int32)
         for d, act in enumerate(per_dev):
@@ -576,18 +657,103 @@ class LanePool:
             lanes=jax.device_put(jnp.asarray(lanes_np), sh_mat),
             pages=jax.device_put(jnp.asarray(pages_np), sh_tab))
 
+        # striped slots keep owner 0: after the span sync their scalars
+        # are replica-identical, so the owner select is a no-op for them
         owner_np = np.zeros((self.slots + 1,), np.int32)
-        for slot, _ in active:
+        for slot, _ in whole:
             owner_np[slot] = self.lane_dev[slot]
-        plan = _Plan(runs, sync, live, swept)
-        plan.args = [jax.device_put(jnp.asarray(owner_np), sh_rep)]
+
+        span_sig = None
+        span_args: list = []
+        span_bytes = 0
+        if span:
+            span_sig, span_args, span_bytes = self._span_tables(
+                span, scratch, sh_rep, sh_mat, sh_tab)
+        plan = _Plan(runs, sync, live, swept, span=span_sig,
+                     span_psum_bytes=span_bytes)
+        plan.args = [jax.device_put(jnp.asarray(owner_np), sh_rep),
+                     jax.device_put(jnp.asarray(shard_rows), sh_rep)]
         for r in plan.runs:
             plan.args += [r.lanes, r.pages, r.rows, r.n_rows]
         plan.args += [sync.lanes, sync.pages]
+        plan.args += span_args
         plan.pass_bytes = plan_pass_bytes(
             plan, batched.key_config(self.key).block_size,
             jnp.dtype(self.key[2]).itemsize)
         return plan
+
+    # repro: allow[RPR001] plan building is host metadata work: numpy
+    # over host page tables / device maps, never live device buffers
+    def _span_tables(self, span, scratch, sh_rep, sh_mat, sh_tab):
+        """Plan tables for the per-pass distributed span re-sync: for
+        every striped lane, each device's owned fixed-origin REDUCE_TILE
+        tiles — (table row, global tile, gather pages, in-window offset)
+        — plus the replicated (lane, tile-count) vectors. All numpy
+        array-at-once: a paper-scale lane (1e9 coords ≈ 244k tiles)
+        builds in well under a second, no pool state touched."""
+        D = self.n_dev
+        cfg = batched.key_config(self.key)
+        bsz = cfg.block_size
+        tile = self.obj.REDUCE_TILE
+        ppt = (tile + bsz - 1) // bsz + 1
+        vs = batched.pad_ladder(len(span), 1)
+        ntiles = [(len(pt) * bsz + tile - 1) // tile for _, pt in span]
+        t_pad = batched.pad_ladder(max(ntiles), 1)
+        sp_lanes_np = np.full((vs,), scratch, np.int32)
+        sp_ntiles_np = np.zeros((vs,), np.int32)
+        per_d: list[list[tuple]] = [[] for _ in range(D)]
+        for i, (s, pt) in enumerate(span):
+            sp_lanes_np[i] = s
+            sp_ntiles_np[i] = ntiles[i]
+            tt = np.arange(ntiles[i], dtype=np.int64)
+            dev = ((tt * tile) // cfg.span_coords) % D
+            p0 = (tt * tile) // bsz
+            off = (tt * tile - p0 * bsz).astype(np.int32)
+            pt_np = np.asarray(pt, np.int32)
+            for d in range(D):
+                m = dev == d
+                if m.any():
+                    per_d[d].append((i, tt[m], p0[m], off[m], pt_np))
+        ts = batched.pad_ladder(
+            max((sum(len(e[1]) for e in lst) for lst in per_d if lst),
+                default=1), 1)
+        tile_slot_np = np.full((D, ts), vs, np.int32)       # dump row
+        tile_idx_np = np.full((D, ts), t_pad, np.int32)     # dump col
+        tile_pages_np = np.zeros((D, ts, ppt), np.int32)    # local scratch
+        tile_off_np = np.zeros((D, ts), np.int32)
+        for d in range(D):
+            j = 0
+            for i, tt, p0, off, pt_np in per_d[d]:
+                k = len(tt)
+                tile_slot_np[d, j:j + k] = i
+                tile_idx_np[d, j:j + k] = tt
+                tile_off_np[d, j:j + k] = off
+                for q in range(ppt):
+                    pg = p0 + q
+                    # only pages intersecting the tile gather real rows;
+                    # the conservative window's trailing page and pages
+                    # past the lane's last ride the local scratch zeros
+                    ok = (pg < len(pt_np)) & (pg * bsz < (tt + 1) * tile)
+                    tile_pages_np[d, j:j + k, q] = np.where(
+                        ok, pt_np[np.minimum(pg, len(pt_np) - 1)],
+                        batched.SCRATCH_PAGE)
+                j += k
+        span_args = [
+            jax.device_put(jnp.asarray(sp_lanes_np), sh_rep),
+            jax.device_put(jnp.asarray(sp_ntiles_np), sh_rep),
+            jax.device_put(jnp.asarray(tile_slot_np), sh_mat),
+            jax.device_put(jnp.asarray(tile_idx_np), sh_mat),
+            jax.device_put(jnp.asarray(tile_pages_np), sh_tab),
+            jax.device_put(jnp.asarray(tile_off_np), sh_mat)]
+        # psum term: the (vs+1, t_pad+1, n_aggs) partial table crosses
+        # the mesh once per pass (read + write per device), plus the
+        # owned-tile page gathers feeding it
+        agg_item = 8 if jax.config.jax_enable_x64 else 4
+        itemsize = jnp.dtype(self.key[2]).itemsize
+        span_bytes = (2 * D * (vs + 1) * (t_pad + 1)
+                      * self.obj.n_aggs * agg_item
+                      + D * ts * ppt * bsz * itemsize)
+        return (vs, t_pad, ts, ppt), span_args, span_bytes
 
 
 class SolveEngine:
@@ -612,9 +778,13 @@ class SolveEngine:
                  sanitize: bool = False,
                  faults=None,
                  max_queue: int | None = None,
-                 memory_budget_bytes: int | None = None):
+                 memory_budget_bytes: int | None = None,
+                 span_pages: int | None = None):
         if lanes < 1:
             raise ValueError(f"lanes must be >= 1, got {lanes}")
+        if span_pages is not None and span_pages < 1:
+            raise ValueError(
+                f"span_pages must be >= 1, got {span_pages}")
         if max_queue is not None and max_queue < 1:
             raise ValueError(f"max_queue must be >= 1, got {max_queue}")
         if memory_budget_bytes is not None and memory_budget_bytes < 1:
@@ -680,6 +850,12 @@ class SolveEngine:
         # (None = unbounded, the pre-admission behavior)
         self.max_queue = max_queue
         self.memory_budget_bytes = memory_budget_bytes
+        # per-device page budget for spanning: a submitted job needing
+        # more pages than this derives a span_coords decomposition at
+        # submit time and its lane stripes across the mesh (None = every
+        # lane places whole, the pre-spanning behavior; ignored on
+        # single-device engines)
+        self.span_pages = span_pages
         # projected per-job pool bytes, cached by (family key, pages) —
         # jax.eval_shape is host-only but not free, and admission runs
         # per submit
@@ -820,11 +996,46 @@ class SolveEngine:
                     f"memory budget: projected pool bytes {projected} > "
                     f"memory_budget_bytes={self.memory_budget_bytes}")
 
+    def _derive_span(self, spec: JobSpec) -> JobSpec:
+        """Attach a derived spanning decomposition to a job that exceeds
+        the per-device page budget: span_coords = the largest
+        lcm(block, REDUCE_TILE)-aligned width within ``span_pages``
+        pages (alignment keeps every fixed-origin reduction tile whole
+        inside one shard, so the distributed re-sync owns tiles
+        disjointly). The derived config replaces the spec BEFORE
+        admission and journaling — J_SUBMIT carries it, so a replayed
+        life re-derives nothing and solves the identical family."""
+        if (self.span_pages is None or self.n_dev == 1
+                or spec.config.span_coords is not None
+                or spec.x0 is not None):
+            return spec                  # user span_coords / x0 win;
+        #                                  x0 lanes place whole (the
+        #                                  explicit-x0 row is host data)
+        cfg = spec.config
+        if batched.pages_for(spec.n, cfg.block_size) <= self.span_pages:
+            return spec
+        chunk = int(np.lcm(cfg.block_size,
+                           SeparableObjective.REDUCE_TILE))
+        derived = max(chunk,
+                      self.span_pages * cfg.block_size // chunk * chunk)
+        if derived >= spec.n:
+            return spec                  # one aligned shard covers it
+        return dataclasses.replace(
+            spec, config=dataclasses.replace(cfg, span_coords=derived))
+
     def submit(self, spec: JobSpec) -> str:
         if spec.objective not in self.objectives:
             raise KeyError(
                 f"unknown objective {spec.objective!r}; registered: "
                 f"{sorted(self.objectives)}")
+        if spec.config.use_kernel:
+            raise ValueError(
+                "use_kernel=True is not supported by the engine: lane "
+                "pools sweep through the jnp fused-step path only (the "
+                "Pallas kernel carries SMEM-resident aggregates that "
+                "cannot follow paged pool lanes); run kernel configs "
+                "through abo_minimize directly")
+        spec = self._derive_span(spec)
         self._admit(spec)
         job_id = next_job_id(self._next)
         self._next += 1
@@ -1055,8 +1266,15 @@ class SolveEngine:
         pool.job_ids[slot] = None
         if pool.page_table[slot]:
             self._c_pages_freed.inc(len(pool.page_table[slot]))
-            pool.release_pages(pool.page_table[slot],
-                               pool.lane_dev[slot] or 0)
+            dev = pool.lane_dev[slot]
+            if isinstance(dev, list):    # striped: per-device returns
+                for d in range(pool.n_dev):
+                    pgs = [p for p, pd in zip(pool.page_table[slot], dev)
+                           if pd == d]
+                    if pgs:
+                        pool.release_pages(pgs, d)
+            else:
+                pool.release_pages(pool.page_table[slot], dev or 0)
         pool.page_table[slot] = None
         pool.lane_dev[slot] = None
         pool.plan = None
@@ -1096,11 +1314,20 @@ class SolveEngine:
             #                              whole-burst refill grows it in
             #                              one hop (device resize is staged)
             cfg = batched.key_config(key)
-            dev = pool.pick_device()     # whole lane on one device
+            n_pages = batched.pages_for(spec.n, cfg.block_size)
             pool.job_ids[slot] = rec.job_id
-            pool.lane_dev[slot] = dev
-            pool.page_table[slot] = pool.alloc_pages(
-                batched.pages_for(spec.n, cfg.block_size), dev)
+            if self._stripes(pool, cfg, spec):
+                # spanning lane: fixed contiguous shards round-robin
+                # across the mesh; lane_dev becomes the per-page device
+                # map (page tables stay LOCAL ids, in global page order)
+                pt, devs = pool.alloc_span_pages(
+                    n_pages, cfg.span_coords // cfg.block_size)
+                pool.page_table[slot] = pt
+                pool.lane_dev[slot] = devs
+            else:
+                dev = pool.pick_device()     # whole lane on one device
+                pool.lane_dev[slot] = dev
+                pool.page_table[slot] = pool.alloc_pages(n_pages, dev)
             self._c_pages_alloc.inc(len(pool.page_table[slot]))
             pool.plan = None
             rec.passes_done = 0
@@ -1135,6 +1362,19 @@ class SolveEngine:
                 if poisoned:
                     self._poison(pool, ops, poisoned)
 
+    @staticmethod
+    def _stripes(pool: LanePool, cfg: ABOConfig, spec: JobSpec) -> bool:
+        """Whether this lane stripes across the mesh: spanning math
+        (span_coords) is config semantics and applies on any topology,
+        but STRIPING the pages additionally needs a mesh, shards that
+        keep every REDUCE_TILE whole (span_coords % tile == 0 — the
+        block multiple is already enforced by ABOConfig), and a
+        non-explicit start (x0 rows are host data placed whole)."""
+        return (pool.mesh is not None
+                and cfg.span_coords is not None
+                and cfg.span_coords % pool.obj.REDUCE_TILE == 0
+                and spec.x0 is None)
+
     def _expire(self, rec: JobState):
         """TTL expiry: terminal FAILED. Wall-clock decided, so the
         verdict is journaled (J_EXPIRE) — replay re-applies it instead
@@ -1155,6 +1395,12 @@ class SolveEngine:
         or plan signature is introduced."""
         bsz = batched.key_config(pool.key).block_size
         for slot, rec in poisoned:
+            if isinstance(pool.lane_dev[slot], list):
+                # striped lane: re-place through place_span with the
+                # poison flag (NaNs global coordinate 0 on its owning
+                # device; the init-aggregate psum propagates it)
+                self._place_span_one(pool, ops, slot, rec, poison=True)
+                continue
             pages = pool.page_table[slot]
             g = batched.pad_ladder(len(pages), 1)
             n = rec.spec.n
@@ -1188,10 +1434,86 @@ class SolveEngine:
                     jnp.asarray(lane_np), jnp.asarray(pages_np),
                     jnp.asarray(xrow), jnp.asarray(nv_np))
 
+    # repro: allow[RPR001] placement planning over host page tables /
+    # device maps (the device write is the single place_x dispatch)
+    def _place_span_one(self, pool: LanePool, ops: batched.PoolOps,
+                        slot: int, rec: JobState, poison: bool = False):
+        """One striped spanning lane's placement dispatch: per-device
+        page-write tables (each device writes only its resident pages,
+        seeded starts via the per-coordinate counter draw) plus the
+        owned-tile gather tables feeding the init-aggregate psum — the
+        same fixed-origin tiling the per-pass span re-sync uses, so the
+        initial aggregates are bit-identical to ``obj.aggregates`` over
+        the dense start vector."""
+        cfg = batched.key_config(pool.key)
+        bsz = cfg.block_size
+        tile = pool.obj.REDUCE_TILE
+        D = pool.n_dev
+        pt = np.asarray(pool.page_table[slot], np.int32)
+        devs = np.asarray(pool.lane_dev[slot], np.int32)
+        n_pages = len(pt)
+        counts = np.bincount(devs, minlength=D)
+        gl = batched.pad_ladder(int(counts.max()), 1)
+        pg_tbl = np.full((D, gl), batched.SCRATCH_PAGE, np.int32)
+        gpage_tbl = np.full((D, gl), -1, np.int32)
+        gpages = np.arange(n_pages, dtype=np.int32)
+        for d in range(D):
+            m = devs == d
+            k = int(m.sum())
+            if k:
+                pg_tbl[d, :k] = pt[m]
+                gpage_tbl[d, :k] = gpages[m]
+        n_tiles = (n_pages * bsz + tile - 1) // tile
+        t_pad = batched.pad_ladder(n_tiles, 1)
+        ppt = (tile + bsz - 1) // bsz + 1
+        tt = np.arange(n_tiles, dtype=np.int64)
+        tdev = ((tt * tile) // cfg.span_coords) % D
+        p0 = (tt * tile) // bsz
+        off = (tt * tile - p0 * bsz).astype(np.int32)
+        ts = batched.pad_ladder(
+            int(np.bincount(tdev, minlength=D).max()), 1)
+        tile_idx = np.full((D, ts), t_pad, np.int32)
+        tile_pages = np.zeros((D, ts, ppt), np.int32)
+        tile_off = np.zeros((D, ts), np.int32)
+        for d in range(D):
+            m = tdev == d
+            k = int(m.sum())
+            if not k:
+                continue
+            tile_idx[d, :k] = tt[m]
+            tile_off[d, :k] = off[m]
+            for q in range(ppt):
+                pg = p0[m] + q
+                ok = (pg < n_pages) & (pg * bsz < (tt[m] + 1) * tile)
+                tile_pages[d, :k, q] = np.where(
+                    ok, pt[np.minimum(pg, n_pages - 1)],
+                    batched.SCRATCH_PAGE)
+        x64 = bool(jax.config.jax_enable_x64)
+        seed_dt = np.uint64 if x64 else np.uint32
+        seed_mask = 0xFFFFFFFFFFFFFFFF if x64 else 0xFFFFFFFF
+        pool.state = ops.place_span(gl, ts, ppt, t_pad)(
+            pool.state,
+            jnp.asarray(np.full((1,), slot, np.int32)),
+            jnp.asarray(np.full((1,), rec.spec.n, np.int32)),
+            jnp.asarray(np.full(
+                (1,), seed_dt((rec.spec.seed or 0) & seed_mask))),
+            jnp.asarray(np.full((1,), rec.spec.seed is not None, bool)),
+            jnp.asarray(np.full((1,), poison, bool)),
+            jnp.asarray(np.full((1,), n_tiles, np.int32)),
+            jnp.asarray(pg_tbl), jnp.asarray(gpage_tbl),
+            jnp.asarray(tile_idx), jnp.asarray(tile_pages),
+            jnp.asarray(tile_off))
+
     def _place(self, pool: LanePool, ops: batched.PoolOps,
                placed: list[tuple[int, JobState]]):
         cfg = batched.key_config(pool.key)
         bsz = cfg.block_size
+        striped = [(s, r) for s, r in placed
+                   if isinstance(pool.lane_dev[s], list)]
+        placed = [(s, r) for s, r in placed
+                  if not isinstance(pool.lane_dev[s], list)]
+        for slot, rec in striped:        # rare: one dispatch per striped
+            self._place_span_one(pool, ops, slot, rec)
         # PRNGKey folds a Python int to the widest uint the precision mode
         # traces: 32 bits by default, 64 under jax_enable_x64. Mirror that
         # exactly so engine starts stay bit-identical to abo_minimize's for
@@ -1299,25 +1621,39 @@ class SolveEngine:
                 and self.jobs[jid].passes_done >= cfg.n_passes]
         if not fins:
             return 0
+        span_fins = [(s, r) for s, r in fins
+                     if isinstance(pool.lane_dev[s], list)]
+        whole_fins = [(s, r) for s, r in fins
+                      if not isinstance(pool.lane_dev[s], list)]
+        # (slot, rec, fun array row, x row, hist row) for the completion
+        # loop below — whole and striped finishers come from separate
+        # gathers but finish identically
+        outs: list[tuple] = []
         # compact gather: ONE dispatch + one device sync for the FINISHING
         # lanes only — running and idle lanes aren't touched, so turnover
         # costs the finishers' pages instead of O(K * n_pad)
-        if pool.mesh is None:
+        if whole_fins and pool.mesh is None:
             g, v, lanes_np, pages_np = _gather_tables(
-                [(s, pool.page_table[s]) for s, _ in fins], pool.slots)
+                [(s, pool.page_table[s]) for s, _ in whole_fins],
+                pool.slots)
             f_all, x_all, hist_all = ops.finalize(g, v)(
                 pool.state, jnp.asarray(lanes_np), jnp.asarray(pages_np))
-        else:
+            with self._allowed("harvest read-back"):
+                f_np, x_np, h_np = (np.asarray(f_all), np.asarray(x_all),
+                                    np.asarray(hist_all))
+            outs += [(s, r, f_np[i], x_np[i], h_np[i])
+                     for i, (s, r) in enumerate(whole_fins)]
+        elif whole_fins:
             # sharded: finisher i's output row is computed by its resident
             # device (row_dev) and replicated by the owner psum
             D = pool.n_dev
             g = batched.pad_ladder(
-                max(len(pool.page_table[s]) for s, _ in fins), 1)
-            v = batched.pad_ladder(len(fins), 1)
+                max(len(pool.page_table[s]) for s, _ in whole_fins), 1)
+            v = batched.pad_ladder(len(whole_fins), 1)
             row_dev = np.zeros((v,), np.int32)
             lanes_np = np.full((D, v), pool.slots, np.int32)
             pages_np = np.full((D, v, g), batched.SCRATCH_PAGE, np.int32)
-            for i, (slot, _) in enumerate(fins):
+            for i, (slot, _) in enumerate(whole_fins):
                 d = pool.lane_dev[slot]
                 row_dev[i] = d
                 lanes_np[d, i] = slot
@@ -1326,15 +1662,42 @@ class SolveEngine:
             f_all, x_all, hist_all = ops.finalize(g, v)(
                 pool.state, jnp.asarray(row_dev), jnp.asarray(lanes_np),
                 jnp.asarray(pages_np))
-        with self._allowed("harvest read-back"):
-            f_np = np.asarray(f_all)
-            x_np = np.asarray(x_all)
-            h_np = np.asarray(hist_all)
+            with self._allowed("harvest read-back"):
+                f_np, x_np, h_np = (np.asarray(f_all), np.asarray(x_all),
+                                    np.asarray(hist_all))
+            outs += [(s, r, f_np[i], x_np[i], h_np[i])
+                     for i, (s, r) in enumerate(whole_fins)]
+        if span_fins:
+            # striped finishers: no device holds a whole row, so the
+            # gather is stitched per-PAGE by finalize_span's
+            # owner_select over the (v, g) page→device map; f comes from
+            # the lane's span-synced aggregates (exact by construction)
+            D = pool.n_dev
+            g = batched.pad_ladder(
+                max(len(pool.page_table[s]) for s, _ in span_fins), 1)
+            v = batched.pad_ladder(len(span_fins), 1)
+            page_dev = np.zeros((v, g), np.int32)
+            lanes_np = np.full((v,), pool.slots, np.int32)
+            pages_np = np.full((D, v, g), batched.SCRATCH_PAGE, np.int32)
+            for i, (slot, _) in enumerate(span_fins):
+                lanes_np[i] = slot
+                for p, (loc, d) in enumerate(zip(pool.page_table[slot],
+                                                 pool.lane_dev[slot])):
+                    page_dev[i, p] = d
+                    pages_np[d, i, p] = loc
+            f_all, x_all, hist_all = ops.finalize_span(g, v)(
+                pool.state, jnp.asarray(page_dev), jnp.asarray(lanes_np),
+                jnp.asarray(pages_np))
+            with self._allowed("harvest read-back"):
+                f_np, x_np, h_np = (np.asarray(f_all), np.asarray(x_all),
+                                    np.asarray(hist_all))
+            outs += [(s, r, f_np[i], x_np[i], h_np[i])
+                     for i, (s, r) in enumerate(span_fins)]
         now = time.time()
         n_done = 0
-        for i, (slot, rec) in enumerate(fins):
-            fun = float(f_np[i])
-            x = x_np[i, : rec.spec.n]
+        for slot, rec, f_row, x_row, h_row in outs:
+            fun = float(f_row)
+            x = x_row[: rec.spec.n]
             # quarantine: a non-finite fun/x is terminal FAILED, decided
             # on the buffers the harvest already read back — no extra
             # host sync. The lane is evicted and its pages recycled like
@@ -1351,7 +1714,7 @@ class SolveEngine:
             else:
                 rec.fun = fun
                 rec.x = x.copy()
-                rec.history = [float(vv) for vv in h_np[i]]
+                rec.history = [float(vv) for vv in h_row]
                 rec.status = DONE
                 n_done += 1
             rec.done_seq = self._next_done_seq()
@@ -1501,6 +1864,10 @@ class SolveEngine:
             ms["pool_slots"])
         g("engine_pool_device_bytes",
           "device bytes held by pool arrays").set(ms["pool_device_bytes"])
+        g("engine_span_lanes",
+          "lanes striped across the device mesh").set(
+            sum(isinstance(d, list) for pool in self.pools.values()
+                for d in pool.lane_dev))
         per_dev = [{"pages": 0, "slots": 0, "bytes": 0}
                    for _ in range(self.n_dev)]
         for pool in self.pools.values():
@@ -1570,6 +1937,8 @@ class SolveEngine:
                 # lane→(device, page) table, round-tripped exactly
                 "page_table": pool.page_table,
                 "n_dev": pool.n_dev,
+                # v3: an entry is an int (whole lane's device) OR a
+                # per-page device list (striped spanning lane)
                 "lane_dev": pool.lane_dev,
             })
         # journal records at or below this seq are reflected in this
@@ -1577,7 +1946,10 @@ class SolveEngine:
         journal_seq = (self.ckpt.journal_last_seq()
                        if self.journal_every is not None else None)
         aux = {
-            "version": 2,
+            # v3 = v2 + spanning: lane_dev entries may be per-page device
+            # lists and span_pages records the engine budget (v2 readers
+            # must not guess at striped page tables, so the version bumps)
+            "version": 3,
             "lanes": self.lanes,
             "devices": self.n_dev,
             "max_fuse": self.max_fuse,
@@ -1586,6 +1958,7 @@ class SolveEngine:
             "journal_every": self.journal_every,
             "max_queue": self.max_queue,
             "memory_budget_bytes": self.memory_budget_bytes,
+            "span_pages": self.span_pages,
             "journal_seq": journal_seq,
             "dtype": jnp.dtype(self.dtype).name,
             "step_count": self.step_count,
@@ -1658,12 +2031,13 @@ class SolveEngine:
             raise RuntimeError(
                 f"checkpoint step {step} in {checkpoint_dir} has no engine "
                 "aux metadata — not a SolveEngine checkpoint")
-        if aux.get("version") != 2:
+        if aux.get("version") not in (2, 3):
             raise RuntimeError(
                 f"checkpoint step {step} in {checkpoint_dir} has engine aux "
-                f"version {aux.get('version')}; this engine reads version 2 "
-                "(the block-paged lane layout) — re-run the jobs or resume "
-                "with the engine version that wrote it")
+                f"version {aux.get('version')}; this engine reads versions "
+                "2-3 (the block-paged lane layout, v3 adding spanning "
+                "lane_dev page maps) — re-run the jobs or resume with the "
+                "engine version that wrote it")
         eng = cls(lanes=aux["lanes"], dtype=jnp.dtype(aux["dtype"]),
                   objectives=objectives, checkpoint_dir=checkpoint_dir,
                   ckpt_every=ckpt_every, keep=keep,
@@ -1675,6 +2049,7 @@ class SolveEngine:
                   journal_every=aux.get("journal_every"),
                   max_queue=aux.get("max_queue"),
                   memory_budget_bytes=aux.get("memory_budget_bytes"),
+                  span_pages=aux.get("span_pages"),
                   devices=(devices if devices is not None
                            else aux.get("devices", 1)),
                   sanitize=sanitize, faults=faults)
@@ -1723,9 +2098,17 @@ class SolveEngine:
         capacity = p["capacity"]
         n_dev_old = p.get("n_dev", 1)
         if n_dev_old != self.n_dev:
+            # striped lanes re-derive their shard→device round-robin on
+            # the new topology when the family config spans (and shards
+            # keep reduction tiles whole); otherwise lanes land whole
+            cfg = ABOConfig(**p["config"])
+            span_pg = None
+            if cfg.span_coords is not None \
+                    and cfg.span_coords % obj.REDUCE_TILE == 0:
+                span_pg = cfg.span_coords // cfg.block_size
             page_table, lane_dev, capacity, pool_np = self._reshard_pages(
                 n_dev_old, capacity, page_table, lane_dev,
-                np.asarray(host_state.pool))
+                np.asarray(host_state.pool), span_pg)
             host_state = dataclasses.replace(host_state, pool=pool_np)
         if self.mesh is not None:
             state = jax.device_put(host_state,
@@ -1736,7 +2119,11 @@ class SolveEngine:
         used = [set() for _ in range(self.n_dev)]
         for pt, dev in zip(page_table, lane_dev):
             if pt:
-                used[dev].update(pt)
+                if isinstance(dev, list):
+                    for pg, d in zip(pt, dev):
+                        used[d].add(pg)
+                else:
+                    used[dev].update(pt)
         free = [sorted(set(range(1, cap_loc)) - used[d])
                 for d in range(self.n_dev)]
         pool = LanePool(
@@ -1751,13 +2138,21 @@ class SolveEngine:
     # repro: allow[RPR001] resume-time resharding cold path: pure host
     # numpy shuffle of the restored pool image
     def _reshard_pages(self, n_dev_old: int, capacity: int, page_table,
-                       lane_dev, pool_np):
+                       lane_dev, pool_np, span_pg=None):
         """Host-side page remap for a device-count change: every live
         lane lands whole on a new device (balanced by pages, slot order —
         deterministic), its rows copy to fresh local ids, and the new
         global pool array is rebuilt with one fancy-indexed row copy.
         Content is moved, never recomputed, so mid-flight lane state
-        resumes bit-exactly on the new topology."""
+        resumes bit-exactly on the new topology.
+
+        ``span_pg`` (pages per span shard, when the family config spans
+        with tile-whole shards) turns lanes longer than one shard back
+        into striped placements: shard k of the lane re-derives its owner
+        as ``k % n_dev`` — the same round-robin ``alloc_span_pages``
+        uses — so a striped lane resharded D=2→4→1 visits the identical
+        page content at every stop and collapses to a whole lane at D=1
+        automatically (the striped branch requires ``n_dev > 1``)."""
         cap_loc_old = capacity // n_dev_old
         live = [0] * self.n_dev
         next_local = [1] * self.n_dev        # local 0 = per-device scratch
@@ -1767,13 +2162,28 @@ class SolveEngine:
         for slot, (pt, dev) in enumerate(zip(page_table, lane_dev)):
             if pt is None:
                 continue
+            old_devs = dev if isinstance(dev, list) else [dev or 0] * len(pt)
+            if span_pg is not None and self.n_dev > 1 and len(pt) > span_pg:
+                locs, devs = [], []
+                for pg_i, (pg, od) in enumerate(zip(pt, old_devs)):
+                    d = (pg_i // span_pg) % self.n_dev
+                    locs.append(next_local[d])
+                    devs.append(d)
+                    next_local[d] += 1
+                    live[d] += 1
+                    src_idx.append(od * cap_loc_old + pg)
+                    dst_rel.append((d, locs[-1]))
+                new_pt[slot] = locs
+                new_dev[slot] = devs
+                continue
             d = min(range(self.n_dev), key=lambda k: (live[k], k))
             live[d] += len(pt)
             start = next_local[d]
             next_local[d] += len(pt)
             new_pt[slot] = list(range(start, start + len(pt)))
             new_dev[slot] = d
-            src_idx.extend((dev or 0) * cap_loc_old + pg for pg in pt)
+            src_idx.extend(od * cap_loc_old + pg
+                           for pg, od in zip(pt, old_devs))
             dst_rel.extend((d, loc) for loc in new_pt[slot])
         cap_loc_new = batched.pad_ladder(max(next_local), 1)
         new_pool = np.zeros((self.n_dev * cap_loc_new, pool_np.shape[1]),

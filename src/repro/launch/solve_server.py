@@ -25,7 +25,13 @@ With ``--devices D`` the page pools shard across the first D JAX devices
 so D host devices exist before jax initializes); lanes place whole per
 device, stepping is donated and zero-copy, and results stay bit-identical
 at every device count — a snapshot cut on one D resumes on another
-(reshard on load).
+(reshard on load). ``--span PAGES`` additionally stripes any lane larger
+than PAGES pages across the mesh (spanning lanes): the engine derives a
+reduction-tile-aligned ``span_coords`` for the job, the sweep runs
+Gauss-Seidel within each shard and Jacobi across shards, and results are
+bit-identical to ``abo_minimize`` under that span config at every device
+count — this is the path toward the paper's 1e9-variable single-job
+headline, where no one device can hold the lane.
 ``--retain-done N`` bounds the job table: once a result has been
 delivered (or a job cancelled), only the N most recent such records are
 kept — eviction happens at delivery/cancel time, so ``--retain-done 0``
@@ -323,6 +329,15 @@ def main(argv=None):
                          "--xla_force_host_platform_device_count=D to "
                          "expose D host devices. On resume, D overrides "
                          "the snapshot's device count (reshard on load)")
+    ap.add_argument("--span", type=int, default=None, metavar="PAGES",
+                    help="spanning lanes: stripe any lane whose page count "
+                         "exceeds PAGES across the device mesh instead of "
+                         "placing it whole (requires --devices >= 2; the "
+                         "engine derives a tile-aligned span_coords, rows "
+                         "run Gauss-Seidel within a shard and Jacobi "
+                         "across, and results stay bit-identical to "
+                         "abo_minimize with that span config at every D). "
+                         "On resume the snapshot's recorded span wins")
     ap.add_argument("--n", default="1000",
                     help="problem size, or a comma list for a "
                          "heterogeneous-n workload (e.g. 500,1300,6000)")
@@ -421,6 +436,12 @@ def main(argv=None):
                      f"{len(jax.devices())} JAX device(s) are visible; "
                      "launch with XLA_FLAGS=--xla_force_host_platform_"
                      f"device_count={args.devices}")
+    if args.span is not None:
+        if args.span < 1:
+            ap.error(f"--span must be >= 1, got {args.span}")
+        if (args.devices or 1) < 2:
+            ap.error("--span requires --devices >= 2 (a single device has "
+                     "no mesh to stripe a lane across)")
     if args.max_queue is not None and args.max_queue < 1:
         ap.error(f"--max-queue must be >= 1, got {args.max_queue}")
     if args.memory_budget is not None and args.memory_budget < 1:
@@ -448,6 +469,7 @@ def main(argv=None):
                                     max_queue=args.max_queue,
                                     memory_budget_bytes=args.memory_budget,
                                     devices=args.devices,
+                                    span_pages=args.span,
                                     sanitize=args.sanitize,
                                     faults=faults)
     else:
@@ -459,6 +481,7 @@ def main(argv=None):
                              max_queue=args.max_queue,
                              memory_budget_bytes=args.memory_budget,
                              devices=args.devices,
+                             span_pages=args.span,
                              sanitize=args.sanitize,
                              faults=faults)
     service = SolveService(engine)
@@ -521,6 +544,8 @@ def main(argv=None):
              "families": len(engine.pools),
              "families_created": len(engine.family_keys_seen),
              "devices": engine.n_dev, "sanitize": engine.sanitize,
+             "span_pages": engine.span_pages,
+             "span_lanes": engine.stats().get("engine_span_lanes", 0),
              "swept_waste": waste, **engine.memory_stats()}
     if args.compile_budget is not None:
         stats["compiles"] = cg.count

@@ -114,6 +114,44 @@ class SeparableObjective:
             acc = acc + tile_sum(xt, n_full * tile)
         return acc
 
+    def tile_partial(self, xc, tile_idx, n_valid, *, agg_dtype=None):
+        """Masked partial sum of ONE fixed-origin reduction tile.
+
+        ``xc`` is the (REDUCE_TILE,) slice of the solution anchored at
+        global coordinate ``tile_idx * REDUCE_TILE`` — content beyond the
+        physical vector must be zeros (terms of masked indices are still
+        *evaluated* before masking, exactly as :meth:`aggregates` does for
+        its zero-padded tail). Emits the identical ops as the tile reduce
+        inside :meth:`aggregates`, so folding these partials in index order
+        (:meth:`fold_tile_partials`) reproduces ``aggregates`` bit-for-bit.
+        The engine's spanning resync computes these per owning device and
+        bit-pattern-psums the disjoint results (engine/DESIGN.md
+        § Spanning lanes)."""
+        agg_dtype = agg_dtype or _default_agg_dtype()
+        tile = self.REDUCE_TILE
+        idx = tile_idx * tile + jnp.arange(tile)
+        t = self.terms(idx, xc).astype(agg_dtype)
+        mask = (idx < n_valid)[:, None].astype(agg_dtype)
+        return (t * mask).sum(axis=0)
+
+    def fold_tile_partials(self, partials, n_tiles, *, agg_dtype=None):
+        """Left-fold fixed-origin tile partials in index order.
+
+        ``partials`` is (T_pad, n_aggs) with row t holding
+        ``tile_partial`` of tile t (rows at/beyond ``n_tiles`` are
+        ignored); ``n_tiles`` may be traced. The fold is where-guarded —
+        NOT a masked add — because adding a +0.0 row would flip a -0.0
+        accumulator bit. Matches the sequential tile accumulation inside
+        :meth:`aggregates` add-for-add, so the result is bit-identical to
+        ``aggregates`` over the same masked content."""
+        agg_dtype = agg_dtype or _default_agg_dtype()
+        acc0 = jnp.zeros((self.n_aggs,), agg_dtype)
+
+        def body(t, acc):
+            return jnp.where(t < n_tiles, acc + partials[t], acc)
+
+        return jax.lax.fori_loop(0, partials.shape[0], body, acc0)
+
     def value(self, x: jnp.ndarray, n_valid: int | None = None, **kw) -> jnp.ndarray:
         return self.combine(self.aggregates(x, n_valid, **kw))
 

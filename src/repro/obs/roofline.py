@@ -50,7 +50,12 @@ def plan_pass_bytes(plan, block_size: int, itemsize: int) -> int:
 
     Works on unsharded and sharded plans alike: ``swept_slots`` counts
     executed slots across all devices and the sync table's shape carries
-    the device axis when present, so both terms are global totals.
+    the device axis when present, so both terms are global totals. Plans
+    with spanning lanes add ``span_psum_bytes`` — the per-pass tile
+    gather plus the bit-pattern psum of the partial-aggregate table
+    (read + write per device), priced by the plan builder because only
+    it knows the padded table rungs (engine/DESIGN.md § Spanning
+    lanes).
     """
     if plan is None or plan.sync is None:
         return 0
@@ -58,7 +63,8 @@ def plan_pass_bytes(plan, block_size: int, itemsize: int) -> int:
     sync_rows = 1
     for d in plan.sync.pages.shape:
         sync_rows *= int(d)
-    return sweep + sync_rows * block_size * itemsize
+    return (sweep + sync_rows * block_size * itemsize
+            + getattr(plan, "span_psum_bytes", 0))
 
 
 def hlo_bytes_accessed(fn, *args) -> float | None:
