@@ -885,6 +885,276 @@ def spanning_smoke(artifact: str | None = None):
     print(f"spanning smoke OK -> {out}", flush=True)
 
 
+# ---- serving tier: sustained req/s, shed rate, tail latency ---------------
+# The hardened HTTP front door under concurrent clients with a queue
+# sized to overflow: measures sustained request throughput, the shed
+# rate (deliberate 429/503 answers — the overload contract), and client-
+# observed p99 request latency. Every delivered fun/x is asserted
+# bit-identical to standalone abo_minimize: load shedding must never
+# change what the survivors compute.
+SERVE_JOBS = 24
+SERVE_CLIENTS = 4
+SERVE_N = 64
+SERVE_CFG = ABOConfig(samples_per_pass=12, n_passes=3)
+SERVE_MAX_QUEUE = 6                  # forces queue_full sheds mid-burst
+
+
+def _pctl(sorted_vals, q):
+    if not sorted_vals:
+        return None
+    i = min(len(sorted_vals) - 1, int(q * len(sorted_vals)))
+    return sorted_vals[i]
+
+
+def engine_serving():
+    import http.client
+    import threading
+
+    import numpy as np
+
+    from repro.engine.service import SolveService
+    from repro.serve.frontend import Frontend, FrontendConfig
+
+    svc = SolveService(lanes=8, max_queue=SERVE_MAX_QUEUE,
+                       sanitize=SANITIZE)
+    fe = Frontend(svc, 0, FrontendConfig(poll_s=0.005))
+    threading.Thread(target=fe.httpd.serve_forever, daemon=True).start()
+    fe.stepper_thread.start()
+    port = fe.httpd.server_address[1]
+
+    lat: list[float] = []            # client-observed request seconds
+    shed = [0]                       # deliberate 429/503 answers
+    bad = []                         # anything outside the contract
+    results: dict[int, dict] = {}
+    lock = threading.Lock()
+
+    def rq(method, path, body=None):
+        t0 = time.perf_counter()
+        conn = http.client.HTTPConnection("127.0.0.1", port, timeout=120)
+        try:
+            conn.request(method, path, body=body,
+                         headers={"Content-Type": "application/json"})
+            resp = conn.getresponse()
+            payload = json.loads(resp.read())
+            retry = resp.getheader("Retry-After")
+        finally:
+            conn.close()
+        dt = time.perf_counter() - t0
+        with lock:
+            lat.append(dt)
+            if resp.status in (429, 503):
+                shed[0] += 1
+                if retry is None:    # a shed without Retry-After is a bug
+                    bad.append((resp.status, payload))
+            elif resp.status not in (200, 202):
+                bad.append((resp.status, payload))
+        return resp.status, payload, retry
+
+    def client(worker: int):
+        deadline = time.monotonic() + 300
+        jids = {}
+        # burst phase: fire every submission back-to-back — 24 rapid
+        # submits against max_queue=6 is the overload the shed-rate
+        # number measures; Retry-After paces the retries
+        for seed in range(worker, SERVE_JOBS, SERVE_CLIENTS):
+            body = json.dumps({"objective": OBJ, "n": SERVE_N,
+                               "seed": seed,
+                               "config": {"samples_per_pass":
+                                          SERVE_CFG.samples_per_pass,
+                                          "n_passes": SERVE_CFG.n_passes}})
+            while True:              # submit, honoring Retry-After sheds
+                st, out, retry = rq("POST", "/submit", body)
+                if st == 200:
+                    jids[seed] = out["job_id"]
+                    break
+                assert st in (429, 503) and time.monotonic() < deadline, \
+                    (st, out)
+                time.sleep(min(float(retry or 1), 0.5))
+        for seed, jid in jids.items():   # long-poll each to delivery
+            while True:
+                st, out, _ = rq("GET", f"/result?job_id={jid}&wait=10")
+                if st == 200 and out.get("status") == "done":
+                    with lock:
+                        results[seed] = out
+                    break
+                assert st in (202, 429, 503) \
+                    and time.monotonic() < deadline, (st, out)
+
+    # warm lap: compiles outside the timed window
+    rq("POST", "/submit", json.dumps(
+        {"objective": OBJ, "n": SERVE_N, "seed": 10_000,
+         "config": {"samples_per_pass": SERVE_CFG.samples_per_pass,
+                    "n_passes": SERVE_CFG.n_passes}}))
+    t_warm = time.monotonic() + 60
+    while svc.engine.pending() and time.monotonic() < t_warm:
+        time.sleep(0.05)
+    lat.clear(); shed[0] = 0
+
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=client, args=(w,), daemon=True)
+               for w in range(SERVE_CLIENTS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=600)
+    dt = time.perf_counter() - t0
+
+    fe._stop_stepper.set()
+    with fe._wake:
+        fe._wake.notify_all()
+    fe.httpd.shutdown()
+    fe.httpd.server_close()
+
+    if bad:
+        raise AssertionError(f"serving contract broken: {bad[:5]}")
+    if len(results) != SERVE_JOBS:
+        raise AssertionError(
+            f"lost jobs under load: {len(results)}/{SERVE_JOBS} delivered")
+    # shedding must never change what the survivors compute
+    h_got, h_ref = hashlib.sha256(), hashlib.sha256()
+    for seed in range(SERVE_JOBS):
+        out = results[seed]
+        h_got.update(np.float64(out["fun"]).tobytes())
+        h_got.update(np.asarray(out["x"], np.float64).tobytes())
+        ref = abo_minimize(OBJECTIVES[OBJ], SERVE_N, config=SERVE_CFG,
+                           seed=seed)
+        h_ref.update(np.float64(ref.fun).tobytes())
+        h_ref.update(np.asarray(ref.x, np.float64).tobytes())
+    if h_got.hexdigest() != h_ref.hexdigest():
+        raise AssertionError(
+            "engine_serving bit-identity broken: delivered results "
+            "diverge from abo_minimize")
+
+    laps = sorted(lat)
+    reqs = len(lat)
+    p50, p99 = _pctl(laps, 0.50), _pctl(laps, 0.99)
+    shed_rate = shed[0] / reqs if reqs else 0.0
+    _METRICS["engine_serving"] = {
+        "jobs": SERVE_JOBS, "clients": SERVE_CLIENTS,
+        "max_queue": SERVE_MAX_QUEUE,
+        "requests": reqs, "req_per_s": reqs / dt,
+        "shed": shed[0], "shed_rate": shed_rate,
+        "p50_request_s": p50, "p99_request_s": p99,
+        "jobs_per_s": SERVE_JOBS / dt,
+        "bit_identical": True,       # the digest gate just proved it
+    }
+    yield (f"engine_serving_k{SERVE_JOBS}", dt / SERVE_JOBS * 1e6,
+           f"req_per_s={reqs / dt:.1f} shed_rate={shed_rate:.1%} "
+           f"p99_request_s={p99:.3f} jobs_per_s={SERVE_JOBS / dt:.1f} "
+           "bit_identical=True")
+
+
+def serving_smoke(artifact: str | None = None):
+    """CI-sized router chaos gate: two journaled workers, one murdered
+    mid-traffic by an injected ``worker_crash`` fault; assert supervised
+    restart, zero lost acked jobs, only deliberate sheds, and survivor
+    fun/x bit-identical to abo_minimize. Writes the BENCH fragment and
+    the aggregated router metrics (``router_metrics.prom`` next to the
+    artifact) for CI upload."""
+    import http.client
+    import tempfile
+    import threading
+
+    import numpy as np
+
+    from repro.serve.router import Router, WorkerHandle
+
+    tmp = pathlib.Path(tempfile.mkdtemp(prefix="bench_serving_smoke_"))
+    worker_args = ["--lanes", "2", "--journal-every", "2"]
+    handles = [WorkerHandle(i, tmp / f"w{i}", worker_args)
+               for i in range(2)]
+    rt = Router(handles, port=0, probe_s=0.2)
+    port = rt.httpd.server_address[1]
+    obj0, obj1 = "shifted_sphere", "sphere"   # w0 (doomed) / w1 families
+    assert rt.worker_for_family(obj0).index == 0
+    assert rt.worker_for_family(obj1).index == 1
+    rt.spawn_all(inject={0: "worker_crash:nth=3:kind=kill"})
+    assert all(w.port is not None for w in handles), "worker spawn failed"
+    serve_thread = threading.Thread(target=rt.serve, daemon=True)
+    serve_thread.start()
+
+    def rq(method, path, body=None):
+        conn = http.client.HTTPConnection("127.0.0.1", port, timeout=120)
+        try:
+            conn.request(method, path, body=body,
+                         headers={"Content-Type": "application/json"})
+            resp = conn.getresponse()
+            raw = resp.read()
+            return (resp.status, json.loads(raw),
+                    resp.getheader("Retry-After"))
+        finally:
+            conn.close()
+
+    cfg = {"samples_per_pass": 12, "n_passes": 3}
+    plan = [(obj0, 48, s) for s in range(4)] + \
+        [(obj1, 32, s) for s in range(2)]
+    try:
+        acked = {}
+        for obj, n, seed in plan:
+            body = json.dumps({"objective": obj, "n": n, "seed": seed,
+                               "config": cfg})
+            deadline = time.monotonic() + 180
+            while True:
+                st, out, retry = rq("POST", "/submit", body)
+                if st == 200:
+                    acked[out["job_id"]] = (obj, n, seed)
+                    break
+                assert st == 503 and out["code"] in (
+                    "worker_unavailable", "shutting_down") \
+                    and retry is not None \
+                    and time.monotonic() < deadline, (st, out)
+                time.sleep(min(float(retry), 1.0))
+
+        results = {}
+        pending = set(acked)
+        deadline = time.monotonic() + 300
+        while pending and time.monotonic() < deadline:
+            for jid in sorted(pending):
+                st, out, retry = rq("GET", f"/result?job_id={jid}&wait=5")
+                if st == 200 and out.get("status") == "done":
+                    results[jid] = out
+                    pending.discard(jid)
+                elif st == 503:
+                    assert out["code"] in ("worker_unavailable",
+                                           "shutting_down"), out
+                    time.sleep(min(float(retry or 1), 1.0))
+                else:
+                    assert st == 202, (st, out)
+        assert not pending, f"lost jobs after restart: {sorted(pending)}"
+        assert handles[0].restarts >= 1, "worker 0 was never killed"
+
+        for jid, (obj, n, seed) in acked.items():
+            ref = abo_minimize(OBJECTIVES[obj], n,
+                               config=ABOConfig(**cfg), seed=seed)
+            out = results[jid]
+            assert out["fun"] == float(ref.fun), jid
+            assert (np.asarray(out["x"], np.float64).tobytes()
+                    == np.asarray(ref.x, np.float64).tobytes()), jid
+
+        conn = http.client.HTTPConnection("127.0.0.1", port, timeout=30)
+        conn.request("GET", "/metrics")
+        resp = conn.getresponse()
+        metrics_text = resp.read().decode()
+        conn.close()
+        assert 'router_worker_restarts_total{worker="w0"}' in metrics_text
+    finally:
+        rt.begin_shutdown("smoke done")
+        serve_thread.join(timeout=60)
+        for w in handles:
+            w.terminate(grace_s=5)
+
+    _METRICS["engine_serving_smoke"] = {
+        "workers": 2, "jobs": len(plan),
+        "inject": "worker_crash:nth=3:kind=kill",
+        "worker0_restarts": handles[0].restarts,
+        "lost_jobs": 0, "bit_identical": True,
+    }
+    out_path = write_artifact(artifact) if artifact else write_artifact()
+    prom = out_path.parent / "router_metrics.prom"
+    prom.write_text(metrics_text)
+    print(f"serving smoke OK -> {out_path} (+ {prom})", flush=True)
+
+
 def write_artifact(path: str | pathlib.Path = ARTIFACT) -> pathlib.Path:
     """Append this run's metrics to the JSON perf trajectory (a list of
     run records, newest last). Partial runs append whatever scenarios
@@ -926,6 +1196,14 @@ def main():
         art = sys.argv[idx + 1] if len(sys.argv) > idx + 1 else None
         spanning_smoke(art)
         return
+    if "--serving-smoke" in sys.argv[1:]:
+        # CI gate: router chaos — two journaled workers, one killed
+        # mid-traffic; supervised restart, zero lost jobs, bit-identical
+        # delivery; optional artifact path follows
+        idx = sys.argv.index("--serving-smoke")
+        art = sys.argv[idx + 1] if len(sys.argv) > idx + 1 else None
+        serving_smoke(art)
+        return
     if "--sanitize" in sys.argv[1:]:
         # sanitizer mode: the guardrail scenarios only (fast enough for
         # CI; the full bench is the perf gate, this is the invariant gate)
@@ -944,6 +1222,8 @@ def main():
     for name, us, derived in engine_faulted():
         print(f"{name},{us:.1f},{derived}")
     for name, us, derived in engine_roofline():
+        print(f"{name},{us:.1f},{derived}")
+    for name, us, derived in engine_serving():
         print(f"{name},{us:.1f},{derived}")
     for name, us, derived in engine_sharded():
         print(f"{name},{us:.1f},{derived}")

@@ -21,7 +21,8 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table2,table3,kernels,abo_zo,"
                          "engine,engine_mixed,engine_faulted,"
-                         "engine_roofline,engine_sharded,engine_spanning")
+                         "engine_roofline,engine_serving,engine_sharded,"
+                         "engine_spanning")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -67,6 +68,14 @@ def main() -> None:
         # -> BENCH_engine.json
         from benchmarks.engine_bench import engine_roofline
         rows += list(engine_roofline())
+    if want("engine_serving"):
+        # the hardened HTTP front door under concurrent clients with a
+        # queue sized to overflow: sustained req/s, deliberate-shed rate
+        # (429/503 + Retry-After), client-observed p99 request latency,
+        # delivered bits asserted against abo_minimize
+        # -> BENCH_engine.json
+        from benchmarks.engine_bench import engine_serving
+        rows += list(engine_serving())
     if want("engine_sharded"):
         # D=1 vs D=2/4 forced-host-device scaling of the sharded page
         # pools (spawns one child process per device count; bit-identity
@@ -82,8 +91,8 @@ def main() -> None:
         from benchmarks.engine_bench import engine_spanning
         rows += list(engine_spanning())
     if (want("engine") or want("engine_mixed") or want("engine_faulted")
-            or want("engine_roofline") or want("engine_sharded")
-            or want("engine_spanning")):
+            or want("engine_roofline") or want("engine_serving")
+            or want("engine_sharded") or want("engine_spanning")):
         # machine-readable perf trajectory (jobs/s, speedup vs the
         # in-bench sequential lap, executable count, padded-compute waste)
         from benchmarks import engine_bench

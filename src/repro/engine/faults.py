@@ -16,6 +16,15 @@ site               where it fires
 ``fused_step``       in the scheduler, before a fused-sweep dispatch
 ``objective_eval``   per *job* at placement — poisons the lane's
                      iterate with NaN so the objective goes non-finite
+``http_reply``       in the serving front-end, just before a reply body
+                     is written (a ``raise`` here drops the connection —
+                     the torn reply a flaky network produces)
+``worker_crash``     in the serving front-end's stepper loop, at the
+                     step boundary (``kill`` by default — how the router
+                     chaos tests murder a worker mid-traffic)
+``slow_client``      in the serving front-end, before the request body
+                     is read (``delay`` by default — a client that
+                     trickles its upload and must not stall anyone else)
 =================  ====================================================
 
 Schedules are parsed from a compact spec string (``--inject`` /
@@ -30,8 +39,10 @@ Schedules are parsed from a compact spec string (``--inject`` /
 
 Keys: ``nth=N`` (fire on the Nth hit only), ``every=K`` (fire on hits
 K, 2K, ...), ``prob=P:seed=S`` (deterministic per-key Bernoulli via
-sha256 — independent of hit order), ``kind=raise|kill|poison``
-(default: ``poison`` for objective_eval, ``raise`` otherwise).
+sha256 — independent of hit order), ``kind=raise|kill|poison|delay``
+(default: ``poison`` for objective_eval, ``kill`` for worker_crash,
+``delay`` for slow_client, ``raise`` otherwise), ``delay_s=S``
+(sleep length for ``delay`` kinds; default 0.05).
 
 Determinism contract: ``objective_eval`` decisions are keyed by the
 *job id*, not by a process-local hit counter — a killed-and-resumed
@@ -48,6 +59,7 @@ from __future__ import annotations
 
 import hashlib
 import os
+import time
 from dataclasses import dataclass, field
 
 SITES = (
@@ -56,9 +68,22 @@ SITES = (
     "pool_resize",
     "fused_step",
     "objective_eval",
+    # serving-layer sites (repro.serve): the same registry chaos-tests
+    # the wire tier — a worker killed mid-traffic, a torn HTTP reply, a
+    # client that trickles its body — with the same determinism contract
+    "http_reply",
+    "worker_crash",
+    "slow_client",
 )
 
-KINDS = ("raise", "kill", "poison")
+KINDS = ("raise", "kill", "poison", "delay")
+
+# site -> default kind when the spec names none ("raise" otherwise)
+DEFAULT_KINDS = {
+    "objective_eval": "poison",
+    "worker_crash": "kill",
+    "slow_client": "delay",
+}
 
 ENV_VAR = "REPRO_INJECT_FAULTS"
 
@@ -82,6 +107,7 @@ class Fault:
     every: int | None = None    # fire on hits K, 2K, 3K, ...
     prob: float | None = None   # seeded per-key Bernoulli
     seed: int = 0
+    delay_s: float = 0.05       # sleep length for kind=delay
     hits: int = field(default=0, repr=False)
 
     def __post_init__(self):
@@ -91,6 +117,8 @@ class Fault:
             raise ValueError(f"unknown fault kind {self.kind!r}; know {KINDS}")
         if self.kind == "poison" and self.site != "objective_eval":
             raise ValueError("kind=poison only makes sense at objective_eval")
+        if self.delay_s < 0:
+            raise ValueError(f"delay_s must be >= 0, got {self.delay_s}")
         n_scheds = sum(x is not None for x in (self.nth, self.every, self.prob))
         if n_scheds != 1:
             raise ValueError(
@@ -121,11 +149,16 @@ class Fault:
         return self.hits == self.nth
 
     def execute(self, key: str | None = None) -> None:
-        """Raise/kill semantics for a fault check() said should fire.
-        ``poison`` kinds return — the caller keeps control to mark the
-        lane (only objective_eval can be poison, enforced at parse)."""
+        """Raise/kill/delay semantics for a fault check() said should
+        fire. ``poison`` kinds return — the caller keeps control to mark
+        the lane (only objective_eval can be poison, enforced at parse).
+        ``delay`` kinds sleep and return — the caller proceeds, just
+        late (a slow client, a congested reply path)."""
         if self.kind == "kill":
             os._exit(137)
+        if self.kind == "delay":
+            time.sleep(self.delay_s)
+            return
         if self.kind == "raise":
             raise InjectedFault(self.site, detail=key or "")
 
@@ -211,14 +244,14 @@ def parse_fault_spec(spec: str) -> FaultRegistry:
             k = k.strip()
             if k in ("nth", "every", "seed"):
                 kw[k] = int(v)
-            elif k == "prob":
+            elif k in ("prob", "delay_s"):
                 kw[k] = float(v)
             elif k == "kind":
                 kw[k] = v.strip()
             else:
                 raise ValueError(f"unknown fault key {k!r} in {part!r}")
-        if "kind" not in kw and site == "objective_eval":
-            kw["kind"] = "poison"
+        if "kind" not in kw and site in DEFAULT_KINDS:
+            kw["kind"] = DEFAULT_KINDS[site]
         if not any(k in kw for k in ("nth", "every", "prob")):
             kw["nth"] = 1
         faults.append(Fault(**kw))

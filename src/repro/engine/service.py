@@ -2,8 +2,17 @@
 
 This is the boundary a wire protocol (CLI, HTTP, RPC) talks to: every
 method takes and returns JSON-serializable payloads, never JAX objects.
-``repro.launch.solve_server`` mounts it behind argparse and an optional
-demo HTTP listener; ``examples/solve_service.py`` drives it in-process.
+``repro.serve.frontend`` mounts it behind the hardened HTTP front door
+(``repro.launch.solve_server`` wires that up behind argparse);
+``examples/solve_service.py`` drives it in-process.
+
+Error payloads follow the serving tier's standard envelope
+(:mod:`repro.serve.errors`): every miss carries a machine-readable
+``code`` (``unknown_job`` / ``not_done`` / ``conflict``) next to the
+human ``error`` string, plus ``status`` when the job exists — an HTTP
+front-end maps codes to statuses via ``errors.status_for`` without
+string-matching error text, and an embedding application branches the
+same way.
 """
 from __future__ import annotations
 
@@ -11,6 +20,15 @@ import numpy as np
 
 from repro.engine.jobs import CANCELLED, DONE, FAILED, JobSpec
 from repro.engine.scheduler import SolveEngine
+
+# status reported for ids this engine has no record of (either never
+# submitted here, or evicted by the retention GC)
+UNKNOWN = "unknown"
+
+
+def _unknown(job_id: str) -> dict:
+    return {"job_id": job_id, "status": UNKNOWN,
+            "error": "unknown job", "code": "unknown_job"}
 
 
 class SolveService:
@@ -26,7 +44,7 @@ class SolveService:
 
     def poll(self, job_id: str) -> dict:
         if job_id not in self.engine.jobs:
-            return {"job_id": job_id, "error": "unknown job"}
+            return _unknown(job_id)
         return self.engine.poll(job_id)
 
     def result(self, job_id: str, mark_fetched: bool = True) -> dict:
@@ -36,17 +54,19 @@ class SolveService:
         :meth:`self.mark_fetched` only after its reply actually went out,
         so a failed write can't strand the client without x."""
         if job_id not in self.engine.jobs:
-            return {"job_id": job_id, "error": "unknown job"}
+            return _unknown(job_id)
         rec = self.engine.jobs[job_id]
         if rec.status in (CANCELLED, FAILED):
             # terminal-without-result: the status payload IS the answer
-            # (the HTTP front-end maps this to 409, not a generic error)
+            # (the HTTP front-end maps conflict to 409, not a generic
+            # error)
             out = {"job_id": job_id, "status": rec.status,
-                   "error": rec.error or f"job {rec.status}, no result"}
+                   "error": rec.error or f"job {rec.status}, no result",
+                   "code": "conflict"}
             return out
         if rec.status != DONE:
             return {"job_id": job_id, "status": rec.status,
-                    "error": "not done"}
+                    "error": "not done", "code": "not_done"}
         out = {"job_id": job_id, "status": DONE, "fun": rec.fun,
                "history": list(rec.history)}
         # x can be gone after a fetch -> kill -> resume cycle (snapshots
@@ -64,7 +84,7 @@ class SolveService:
 
     def cancel(self, job_id: str) -> dict:
         if job_id not in self.engine.jobs:
-            return {"job_id": job_id, "error": "unknown job"}
+            return _unknown(job_id)
         ok = self.engine.cancel(job_id)
         rec = self.engine.jobs.get(job_id)   # retain_done=0 can evict the
         #                                      record inside cancel itself

@@ -46,25 +46,42 @@ the newest base and re-runs post-base passes deterministically, so
 results still match an uninterrupted run bit-for-bit.
 
 ``--http PORT`` additionally exposes submit/poll/result/cancel as
-JSON-over-HTTP on localhost (stdlib only, demo-grade — single engine lock,
-no auth; hardening is a ROADMAP item). Endpoints:
+JSON-over-HTTP on localhost via the hardened serving tier
+(repro.serve.frontend — stdlib only). Endpoints:
 
     POST /submit   {"objective": "griewank", "n": 1000, "seed": 0}
-    GET  /poll?job_id=job-000000
-    GET  /result?job_id=job-000000
+    GET  /poll?job_id=job-000000[&wait=S]      # long-poll to terminal
+    GET  /result?job_id=job-000000[&wait=S]    # long-poll to done
     POST /cancel   {"job_id": "job-000000"}
     GET  /stats
-    GET  /healthz          # liveness: 200 {"status": "ok"}
-    GET  /metrics          # Prometheus text exposition of the registry
+    GET  /healthz          # liveness: lock-free, 200 {"status": "ok"}
+    GET  /metrics          # Prometheus text, lock-free render
 
-Unknown job ids answer 404, malformed requests 400, and handler failures
-a JSON 500 — never a raw traceback. ``result`` on a CANCELLED/FAILED
-job answers 409 with the status payload (the job is terminal but has no
-result to give). Admission rejections map to backpressure codes:
-``--max-queue`` overflow answers 429, ``--memory-budget`` shedding 503.
-``--verbose`` turns on access logging: one structured JSON line per
-request (method, path, status, duration_ms) on stdout — without it the
-server is silent, as before.
+Every non-200 carries the standard envelope (repro.serve.errors):
+``{"error": ..., "code": ..., "job_id"?: ..., "status"?: ...}`` —
+unknown ids 404 ``unknown_job``, malformed requests schema'd 400s,
+terminal-without-result 409 ``conflict``, a /result before completion
+202 ``not_done``, handler failures a JSON 500 — never a raw traceback.
+Requests are validated at the door (``--max-n`` caps job size), bodies
+are capped (``--max-body``; 411/413 past it), ``--auth SPEC`` arms
+bearer-token tenants with token-bucket rate limits and job quotas
+(401/429), ``--max-inflight`` bounds the request queue and
+``--deadline`` each request's engine-access budget (503 ``saturated``
+/ ``deadline`` sheds with Retry-After). Admission rejections map to
+backpressure codes: ``--max-queue`` overflow answers 429,
+``--memory-budget`` shedding 503 — both with a Retry-After derived
+from queue depth and recent step time. ``--port-file PATH`` publishes
+the bound port (atomic) for supervisors and tests. ``--verbose`` turns
+on access logging: one structured JSON line per request (method, path,
+status, duration_ms) on stdout — without it the server is silent.
+
+``--workers N`` (with ``--http`` and ``--ckpt-dir``) scales out: the
+process becomes a supervisor/router (repro.serve.router) over N engine
+worker processes, each owning a journaled checkpoint subdirectory,
+health-probed and respawned on crash with fsck --repair + journal
+resume — zero acked jobs lost. Submissions route per objective family
+(``crc32(objective) % N``) so compiled executables stay hot; job ids
+come back prefixed (``w0:job-000123``) and route follow-ups.
 
 Shutdown: SIGTERM/SIGINT cut a final snapshot (with ``--ckpt-dir``),
 flush the journal, and exit 0 — in both batch and HTTP modes. A kill
@@ -99,15 +116,13 @@ batch run (what CI uploads as a build artifact).
 from __future__ import annotations
 
 import argparse
-import json
 import signal
 import threading
 import time
 
 from repro.core.abo import ABOConfig
-from repro.engine.jobs import CANCELLED, FAILED, JobSpec
-from repro.engine.scheduler import (MemoryBudgetError, QueueFullError,
-                                    SolveEngine)
+from repro.engine.jobs import JobSpec
+from repro.engine.scheduler import SolveEngine
 from repro.engine.service import SolveService
 
 
@@ -118,155 +133,17 @@ def _mixed_specs(n_jobs, objectives, ns, cfg, seed0=0):
 
 
 def _build_server(service: SolveService, port: int, poll_s: float = 0.01,
-                  verbose: bool = False):
-    """HTTP server + engine-stepper thread (not yet serving — callers run
-    ``serve_forever``; tests drive it from their own thread and
-    ``shutdown()`` it). The lock serializes engine access between the
-    stepper and request handlers. ``verbose`` enables per-request access
-    logging (one structured JSON line on stdout)."""
-    from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
-    from urllib.parse import parse_qs, urlparse
-
-    lock = threading.Lock()
-    c_requests = service.engine.metrics.counter
-
-    def stepper():
-        while True:
-            with lock:
-                if service.engine.pending():
-                    service.step()
-            time.sleep(poll_s)
-
-    class Handler(BaseHTTPRequestHandler):
-        def _finish_request(self, code: int):
-            """Per-request accounting at the single reply choke point:
-            the http_requests_total counter always, and — with
-            --verbose — one structured access-log line."""
-            endpoint = self.path.split("?", 1)[0]
-            c_requests("http_requests_total", "HTTP requests served",
-                       endpoint=endpoint, status=code).inc()
-            if verbose:
-                print(json.dumps(
-                    {"method": self.command, "path": self.path,
-                     "status": code,
-                     "duration_ms": round(
-                         (time.perf_counter() - self._t0) * 1000, 3)}),
-                    flush=True)
-
-        def _reply(self, payload, code=200):
-            # unknown-id lookups are misses, not field-level soft errors
-            if code == 200 and isinstance(payload, dict) \
-                    and payload.get("error") == "unknown job":
-                code = 404
-            body = json.dumps(payload).encode()
-            self.send_response(code)
-            self.send_header("Content-Type", "application/json")
-            self.send_header("Content-Length", str(len(body)))
-            self.end_headers()
-            self.wfile.write(body)
-            self._finish_request(code)
-
-        def _reply_text(self, text: str, code=200,
-                        ctype="text/plain; version=0.0.4"):
-            body = text.encode()
-            self.send_response(code)
-            self.send_header("Content-Type", ctype)
-            self.send_header("Content-Length", str(len(body)))
-            self.end_headers()
-            self.wfile.write(body)
-            self._finish_request(code)
-
-        def log_request(self, *a):      # replaced by the JSON access log
-            pass
-
-        def log_message(self, fmt, *a):
-            # stdlib handler internals (log_error) land here: verbose
-            # routes them to stderr, default stays quiet — the old
-            # unconditional silence hid even hard failures
-            if verbose:
-                import sys
-                print(f"[solve_server] {fmt % a}", file=sys.stderr,
-                      flush=True)
-
-        def _guarded(self, fn):
-            """Run a handler body; malformed input answers 400 and any
-            other failure a JSON 500 — a raw traceback page leaks
-            internals and breaks JSON-speaking clients."""
-            try:
-                fn()
-            except QueueFullError as e:
-                # backpressure, not client error: retry later
-                self._reply({"error": str(e)}, 429)
-            except MemoryBudgetError as e:
-                # shedding under memory pressure: service unavailable
-                self._reply({"error": str(e)}, 503)
-            except (KeyError, TypeError, ValueError) as e:
-                self._reply({"error": str(e)}, 400)
-            except Exception as e:      # noqa: BLE001 — wire boundary
-                self._reply({"error": f"internal error: {e}"}, 500)
-
-        def do_GET(self):
-            self._t0 = time.perf_counter()
-            url = urlparse(self.path)
-            q = parse_qs(url.query)
-            job_id = q.get("job_id", [""])[0]
-
-            def run():
-                with lock:
-                    if url.path == "/poll":
-                        self._reply(service.poll(job_id))
-                    elif url.path == "/result":
-                        # only a reply that actually went out counts as a
-                        # fetch — a broken pipe here must not let snapshots
-                        # evict a solution the client never received
-                        out = service.result(job_id, mark_fetched=False)
-                        if out.get("status") in (CANCELLED, FAILED):
-                            # terminal but result-less: conflict, with
-                            # the status payload (unknown ids keep 404)
-                            self._reply(out, 409)
-                        else:
-                            self._reply(out)
-                            if out.get("status") == "done":
-                                service.mark_fetched(job_id)
-                    elif url.path == "/stats":
-                        self._reply(service.stats())
-                    elif url.path == "/healthz":
-                        eng = service.engine
-                        self._reply({"status": "ok",
-                                     "steps": eng.step_count,
-                                     "active_lanes": eng.active_lanes})
-                    elif url.path == "/metrics":
-                        self._reply_text(service.prometheus())
-                    else:
-                        self._reply({"error": "unknown endpoint"}, 404)
-
-            self._guarded(run)
-
-        def do_POST(self):
-            self._t0 = time.perf_counter()
-            length = int(self.headers.get("Content-Length", 0))
-            try:
-                req = json.loads(self.rfile.read(length) or b"{}")
-            except json.JSONDecodeError:
-                return self._reply({"error": "bad json"}, 400)
-
-            def run():
-                with lock:
-                    if self.path == "/submit":
-                        self._reply(service.submit(req))
-                    elif self.path == "/cancel":
-                        self._reply(service.cancel(req.get("job_id", "")))
-                    else:
-                        self._reply({"error": "unknown endpoint"}, 404)
-
-            self._guarded(run)
-
-    httpd = ThreadingHTTPServer(("127.0.0.1", port), Handler)
-    httpd._engine_lock = lock            # graceful shutdown snapshots
-    #                                      under the same lock the
-    #                                      stepper and handlers use
-    stepper_thread = threading.Thread(target=stepper, daemon=True)
-    return httpd, stepper_thread
+                  verbose: bool = False, config=None):
+    """Compat shim over :class:`repro.serve.frontend.Frontend`: returns
+    ``(httpd, stepper_thread)`` exactly like the old demo builder (tests
+    drive ``serve_forever`` from their own thread and ``shutdown()``
+    it). The Frontend instance rides along as ``httpd._frontend``; pass
+    ``config`` (a FrontendConfig) to harden beyond the defaults."""
+    from repro.serve.frontend import Frontend, FrontendConfig
+    if config is None:
+        config = FrontendConfig(poll_s=poll_s, verbose=verbose)
+    fe = Frontend(service, port, config)
+    return fe.httpd, fe.stepper_thread
 
 
 def _install_signal_handlers(on_signal):
@@ -284,37 +161,22 @@ def _install_signal_handlers(on_signal):
 
 
 def _serve_http(service: SolveService, port: int, poll_s: float = 0.01,
-                verbose: bool = False):
-    """Demo JSON-over-HTTP front-end; blocks until SIGTERM/SIGINT, then
-    cuts a final snapshot (when checkpointing is on) and returns for a
-    clean exit 0."""
-    httpd, stepper_thread = _build_server(service, port, poll_s, verbose)
-    stepper_thread.start()
-
-    def on_signal(signum):
-        print(f"[solve_server] signal {signum}: shutting down", flush=True)
-        # shutdown() blocks until serve_forever exits; calling it from
-        # the serving thread (where this handler runs) would deadlock
-        threading.Thread(target=httpd.shutdown, daemon=True).start()
-
-    _install_signal_handlers(on_signal)
-    print("[solve_server] listening on "
-          f"http://127.0.0.1:{httpd.server_address[1]}", flush=True)
-    try:
-        httpd.serve_forever()
-    finally:
-        engine = service.engine
-        if engine.ckpt is not None:
-            # the lock excludes a mid-step stepper: the snapshot is a
-            # step-boundary-consistent image, journal flushed by append
-            with httpd._engine_lock:
-                engine.snapshot()
-            print("[solve_server] final snapshot cut", flush=True)
-        # a --trace run must not lose its spans to Ctrl-C
-        tracer = engine.tracer
-        if tracer.enabled and tracer.default_path:
-            print(f"[solve_server] trace -> {engine.trace_export()}",
-                  flush=True)
+                verbose: bool = False, config=None,
+                port_file: str | None = None):
+    """Hardened JSON-over-HTTP front-end (repro.serve.frontend); blocks
+    until SIGTERM/SIGINT, then lets in-flight replies finish, cuts a
+    final snapshot (when checkpointing is on) and returns for a clean
+    exit 0."""
+    from repro.serve.frontend import Frontend, FrontendConfig
+    if config is None:
+        config = FrontendConfig(poll_s=poll_s, verbose=verbose)
+    fe = Frontend(service, port, config)
+    if port_file:
+        from repro.serve.worker import _write_port_file
+        _write_port_file(port_file, fe.httpd.server_address[1])
+    _install_signal_handlers(
+        lambda signum: fe.begin_shutdown(f"signal {signum}"))
+    fe.serve()
 
 
 def main(argv=None):
@@ -368,7 +230,41 @@ def main(argv=None):
                     help="resume in-flight jobs from --ckpt-dir")
     ap.add_argument("--http", type=int, default=None, metavar="PORT",
                     help="serve submit/poll/result over HTTP instead of "
-                         "running a synthetic batch")
+                         "running a synthetic batch (0 = ephemeral "
+                         "port; see --port-file)")
+    ap.add_argument("--workers", type=int, default=None, metavar="N",
+                    help="with --http and --ckpt-dir: become a "
+                         "supervisor/router over N engine worker "
+                         "processes (repro.serve.router) — per-family "
+                         "routing, crash respawn with journal resume")
+    ap.add_argument("--auth", default=None, metavar="SPEC",
+                    help="bearer-token tenants: token[:key=val]*[;...] "
+                         "with keys name, rate (req/s token bucket), "
+                         "burst, quota (lifetime job budget); missing/"
+                         "unknown tokens answer 401, over-rate 429")
+    ap.add_argument("--max-body", type=int, default=1 << 20,
+                    metavar="BYTES",
+                    help="reject request bodies larger than BYTES with "
+                         "413 (Content-Length is required: 411 without "
+                         "it, 400 when malformed)")
+    ap.add_argument("--max-n", type=int, default=None, metavar="N",
+                    help="reject submissions with n > N at the door "
+                         "(schema'd 400) — bounds what one request can "
+                         "commission before admission control prices it")
+    ap.add_argument("--deadline", type=float, default=30.0, metavar="S",
+                    help="per-request engine-access budget: a request "
+                         "that cannot reach the engine within S seconds "
+                         "answers 503 with Retry-After")
+    ap.add_argument("--wait-max", type=float, default=60.0, metavar="S",
+                    help="cap on ?wait= long-polls (/result, /poll)")
+    ap.add_argument("--max-inflight", type=int, default=64, metavar="N",
+                    help="bounded request queue: past N concurrent "
+                         "requests the front door sheds 503 saturated "
+                         "instead of piling up threads")
+    ap.add_argument("--port-file", default=None, metavar="PATH",
+                    help="write the bound HTTP port to PATH (atomic) "
+                         "once listening — supervisors and tests read "
+                         "it instead of racing a fixed port")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="enable pass-level span tracing and export "
                          "Chrome-trace-event JSON to PATH when the run "
@@ -453,6 +349,57 @@ def main(argv=None):
             faults = parse_fault_spec(args.inject)
         except ValueError as e:
             ap.error(f"--inject: {e}")
+    if args.max_body < 1:
+        ap.error(f"--max-body must be >= 1, got {args.max_body}")
+    if args.deadline <= 0:
+        ap.error(f"--deadline must be > 0, got {args.deadline}")
+    if args.wait_max < 0:
+        ap.error(f"--wait-max must be >= 0, got {args.wait_max}")
+    if args.max_inflight < 1:
+        ap.error(f"--max-inflight must be >= 1, got {args.max_inflight}")
+    if args.max_n is not None and args.max_n < 1:
+        ap.error(f"--max-n must be >= 1, got {args.max_n}")
+    tenants = None
+    if args.auth:
+        from repro.serve.limits import TenantTable
+        try:
+            tenants = TenantTable.from_spec(args.auth)
+        except ValueError as e:
+            ap.error(f"--auth: {e}")
+    if args.workers is not None:
+        # router mode: this process supervises N worker processes and
+        # never builds an engine of its own
+        if args.workers < 1:
+            ap.error(f"--workers must be >= 1, got {args.workers}")
+        if args.http is None:
+            ap.error("--workers requires --http (the router IS an HTTP "
+                     "front door)")
+        if not args.ckpt_dir:
+            ap.error("--workers requires --ckpt-dir (each worker owns a "
+                     "journaled subdirectory; without one a worker "
+                     "crash would lose acked jobs)")
+        if args.inject:
+            ap.error("--inject with --workers is ambiguous; use "
+                     "python -m repro.serve.router --inject-worker "
+                     "IDX:SPEC to arm one worker")
+        from repro.serve.router import serve_router
+        worker_args = ["--lanes", str(args.lanes),
+                       "--journal-every", str(args.journal_every or 8)]
+        if args.retain_done is not None:
+            worker_args += ["--retain-done", str(args.retain_done)]
+        if args.max_queue is not None:
+            worker_args += ["--max-queue", str(args.max_queue)]
+        if args.memory_budget is not None:
+            worker_args += ["--memory-budget", str(args.memory_budget)]
+        if args.sanitize:
+            worker_args += ["--sanitize"]
+        if args.verbose:
+            worker_args += ["--verbose"]
+        serve_router(args.workers, args.http, args.ckpt_dir,
+                     worker_args=worker_args, tenants=tenants,
+                     max_body_bytes=args.max_body,
+                     port_file=args.port_file, verbose=args.verbose)
+        return None                      # returns only on interrupt
     if args.resume:
         if not args.ckpt_dir:
             ap.error("--resume requires --ckpt-dir (without it there is no "
@@ -489,7 +436,15 @@ def main(argv=None):
         engine.trace(args.trace)
 
     if args.http is not None:
-        _serve_http(service, args.http, verbose=args.verbose)
+        from repro.serve.frontend import FrontendConfig
+        cfg = FrontendConfig(verbose=args.verbose,
+                             max_body_bytes=args.max_body,
+                             deadline_s=args.deadline,
+                             wait_max_s=args.wait_max,
+                             max_inflight=args.max_inflight,
+                             max_n=args.max_n, tenants=tenants)
+        _serve_http(service, args.http, config=cfg,
+                    port_file=args.port_file)
         return None                      # returns only on interrupt
 
     cfg = ABOConfig(samples_per_pass=args.samples, n_passes=args.passes,

@@ -22,6 +22,17 @@ gauges refresh only at stats/scrape boundaries.
 """
 from repro.obs.metrics import (Counter, Gauge, Histogram,  # noqa: F401
                                MetricsRegistry)
-from repro.obs.roofline import (hlo_bytes_accessed,  # noqa: F401
-                                measured_peak_bandwidth, plan_pass_bytes)
 from repro.obs.trace import NULL_SPAN, Tracer  # noqa: F401
+
+# roofline is the one jax-touching module here; resolve its names
+# lazily (PEP 562) so jax-free consumers — the serving router, the
+# lint gate — can import repro.obs.metrics without paying for jax
+_ROOFLINE = ("hlo_bytes_accessed", "measured_peak_bandwidth",
+             "plan_pass_bytes")
+
+
+def __getattr__(name):
+    if name in _ROOFLINE:
+        from repro.obs import roofline
+        return getattr(roofline, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

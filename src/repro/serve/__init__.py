@@ -1,0 +1,36 @@
+"""Production serving tier in front of the solve engine.
+
+The engine (repro.engine) is fault-tolerant; this package extends that
+robustness contract up through the wire so overload, slow clients, and
+worker crashes degrade gracefully instead of stalling or 500ing:
+
+``errors``
+    The standard wire error envelope (``{error, code, job_id?,
+    status?}``) and :class:`ApiError`, the exception every layer maps
+    failures into.
+``validate``
+    Request schema validation — malformed submissions answer schema'd
+    400s naming the offending field, never an engine traceback.
+``limits``
+    Bearer-token auth, per-tenant token-bucket rate limits, and quota
+    accounting.
+``frontend``
+    The hardened single-worker HTTP front door: bounded request
+    admission with backpressure (429/503 + ``Retry-After``), capped
+    bodies, per-request deadlines, long-poll ``/result?wait=``,
+    lock-free ``/healthz`` and ``/metrics``, and a condition-variable
+    stepper that wakes on submit instead of busy-polling.
+``worker`` / ``router``
+    Scale-out: N engine worker processes, each owning a journaled
+    checkpoint dir, behind a supervising router that health-probes
+    them, restarts crashed workers (fsck ``--repair`` + journal
+    resume — zero completed work lost), and routes jobs per objective
+    family so each worker's compiled executables stay hot.
+
+Only ``errors``/``validate``/``limits`` import eagerly here — the HTTP
+modules pull in the engine (and therefore jax), which stdlib-only
+consumers of the envelope must not pay for.
+"""
+from repro.serve.errors import ApiError, envelope  # noqa: F401
+from repro.serve.limits import TenantTable, TokenBucket  # noqa: F401
+from repro.serve.validate import validate_cancel, validate_submit  # noqa: F401

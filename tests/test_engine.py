@@ -394,13 +394,16 @@ def test_http_front_end_hardening():
              "config": {"samples_per_pass": 12, "n_passes": 3}}))
         assert status == 200
         jid = out["job_id"]
-        assert req("GET", f"/result?job_id={jid}")[0] == 200  # not done yet
+        # a /result before completion is the 202 not_done envelope
+        status, out = req("GET", f"/result?job_id={jid}")
+        assert status == 202 and out["code"] == "not_done"
         svc.drain()
         status, out = req("GET", f"/result?job_id={jid}")
         assert status == 200 and len(out["x"]) == 64
 
         assert req("GET", "/poll?job_id=nope") == \
-            (404, {"job_id": "nope", "error": "unknown job"})
+            (404, {"job_id": "nope", "status": "unknown",
+                   "error": "unknown job", "code": "unknown_job"})
         assert req("GET", "/result?job_id=nope")[0] == 404
         assert req("GET", "/poll")[0] == 404                  # missing id
         assert req("GET", "/nosuch")[0] == 404

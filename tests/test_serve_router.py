@@ -1,0 +1,250 @@
+"""Router + supervisor: per-family routing, worker chaos, zero loss.
+
+Units cover the jax-free pieces (id prefixing, metric stamping,
+inject-spec parsing, CLI validation, the jax-free-import guarantee);
+the end-to-end test runs a real two-worker fleet, murders one worker
+mid-traffic with an injected ``worker_crash`` fault, and asserts the
+serving contract: only deliberate sheds (503 ``worker_unavailable``
+with ``Retry-After``), supervised restart + journal resume, zero lost
+acked jobs, and every delivered fun/x bit-identical to
+``abo_minimize``.
+"""
+import http.client
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import ABOConfig, abo_minimize
+from repro.objectives import OBJECTIVES
+from repro.serve.errors import ApiError
+from repro.serve.router import (Router, WorkerHandle, _parse_inject_worker,
+                                _stamp_worker, main as router_main)
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+CFG = {"samples_per_pass": 12, "n_passes": 3}
+
+
+# ------------------------------------------------------------------ units
+def test_stamp_worker():
+    assert _stamp_worker("engine_steps_total 5.0", "w0") == \
+        'engine_steps_total{worker="w0"} 5.0'
+    assert _stamp_worker('c{site="x"} 1.0', "w1") == \
+        'c{site="x",worker="w1"} 1.0'
+    assert _stamp_worker("", "w0") == ""
+
+
+def test_parse_inject_worker():
+    assert _parse_inject_worker([]) == {}
+    assert _parse_inject_worker(["0:worker_crash:nth=3:kind=kill"]) == \
+        {0: "worker_crash:nth=3:kind=kill"}
+    assert _parse_inject_worker(["1:a:b", "0:c"]) == {1: "a:b", 0: "c"}
+    for bad in (["worker_crash"], ["0:"], ["x:spec"]):
+        with pytest.raises(ValueError):
+            _parse_inject_worker(bad)
+
+
+def _dummy_router(n=2):
+    handles = [WorkerHandle(i, f"/nonexistent/w{i}", []) for i in range(n)]
+    return Router(handles, port=0)
+
+
+def test_worker_for_job_and_family_routing():
+    rt = _dummy_router()
+    try:
+        w, raw = rt.worker_for_job("w1:job-000007")
+        assert w.name == "w1" and raw == "job-000007"
+        for bad in ("job-000007", "w9:job-1", "w0:", "", "w0"):
+            with pytest.raises(ApiError) as ei:
+                rt.worker_for_job(bad)
+            assert ei.value.http_status == 404
+            assert ei.value.code == "unknown_job"
+            assert ei.value.status == "unknown"
+        # sticky per-family placement: stable across calls, and the
+        # catalog spreads over both workers (compiled families stay hot)
+        placement = {name: rt.worker_for_family(name).index
+                     for name in OBJECTIVES}
+        assert placement == {name: rt.worker_for_family(name).index
+                             for name in OBJECTIVES}
+        assert set(placement.values()) == {0, 1}
+    finally:
+        rt.httpd.server_close()
+
+
+def test_router_health_reports_dead_workers():
+    rt = _dummy_router()
+    try:
+        h = rt.health()
+        assert h["status"] == "degraded"      # nothing was ever spawned
+        assert set(h["workers"]) == {"w0", "w1"}
+        assert h["workers"]["w0"]["alive"] is False
+    finally:
+        rt.httpd.server_close()
+
+
+def test_router_cli_validation():
+    with pytest.raises(SystemExit):
+        router_main(["--workers", "0", "--ckpt-dir", "/tmp/x"])
+    with pytest.raises(SystemExit):          # inject index out of range
+        router_main(["--workers", "2", "--ckpt-dir", "/tmp/x",
+                     "--inject-worker", "5:worker_crash:nth=1"])
+    with pytest.raises(SystemExit):          # malformed inject spec
+        router_main(["--workers", "2", "--ckpt-dir", "/tmp/x",
+                     "--inject-worker", "nope"])
+    with pytest.raises(SystemExit):          # bad auth spec
+        router_main(["--workers", "1", "--ckpt-dir", "/tmp/x",
+                     "--auth", "tok:zzz=1"])
+
+
+def test_router_import_is_jax_free():
+    """The router must stay importable without paying for jax — it
+    supervises jax processes, it is not one."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    proc = subprocess.run(
+        [sys.executable, "-c",
+         "import sys; import repro.serve.router; "
+         "assert 'jax' not in sys.modules, 'router imported jax'"],
+        env=env, capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+
+
+# ------------------------------------------------------------- chaos e2e
+def _rq(port, method, path, body=None, timeout=60):
+    conn = http.client.HTTPConnection("127.0.0.1", port, timeout=timeout)
+    try:
+        conn.request(method, path, body=body,
+                     headers={"Content-Type": "application/json"})
+        resp = conn.getresponse()
+        raw = resp.read()
+        return resp.status, json.loads(raw), dict(resp.getheaders())
+    finally:
+        conn.close()
+
+
+def _ref(objective, n, seed):
+    res = abo_minimize(OBJECTIVES[objective], n,
+                       config=ABOConfig(**CFG), seed=seed)
+    return float(res.fun), np.asarray(res.x, np.float64).tobytes()
+
+
+def test_two_worker_chaos_kill_one_zero_lost_jobs(tmp_path):
+    """Kill one of two workers mid-traffic (``worker_crash:nth=3`` on
+    its stepper) and require the full contract: supervised restart,
+    journal resume, zero lost acked jobs, deliberate sheds only, and
+    bit-identity to abo_minimize for every delivered result."""
+    worker_args = ["--lanes", "2", "--journal-every", "2"]
+    handles = [WorkerHandle(i, tmp_path / f"w{i}", worker_args)
+               for i in range(2)]
+    rt = Router(handles, port=0, probe_s=0.2)
+    port = rt.httpd.server_address[1]
+
+    # finite-result families, one per worker (schwefel_2_22 also lands
+    # on w0 but its fun is legitimately non-finite -> quarantined, which
+    # is the wrong signal for a delivery test); verify the placement the
+    # plan assumes against the router's own hash
+    obj0, obj1 = "shifted_sphere", "sphere"
+    assert rt.worker_for_family(obj0).index == 0
+    assert rt.worker_for_family(obj1).index == 1
+
+    rt.spawn_all(inject={0: "worker_crash:nth=3:kind=kill"})
+    assert all(w.port is not None for w in handles), "spawn failed"
+    serve_thread = threading.Thread(target=rt.serve, daemon=True)
+    serve_thread.start()
+    try:
+        # 4 jobs for the doomed worker, 2 for the survivor
+        plan = [(obj0, 48, s) for s in range(4)] \
+            + [(obj1, 32, s) for s in range(2)]
+        acked = {}                        # prefixed job id -> (obj, n, s)
+        statuses = []                     # every HTTP status we ever saw
+
+        def submit(obj, n, seed):
+            body = json.dumps({"objective": obj, "n": n, "seed": seed,
+                               "config": CFG})
+            deadline = time.monotonic() + 120
+            while time.monotonic() < deadline:
+                st, out, hdrs = _rq(port, "POST", "/submit", body)
+                statuses.append((st, out.get("code")))
+                if st == 200:
+                    return out["job_id"]
+                # a shed submit was never acked: retrying cannot
+                # duplicate work
+                assert st == 503 and out["code"] in (
+                    "worker_unavailable", "shutting_down"), out
+                assert "Retry-After" in hdrs
+                time.sleep(min(float(hdrs["Retry-After"]), 1.0))
+            raise AssertionError("submit never accepted")
+
+        for obj, n, seed in plan:
+            jid = submit(obj, n, seed)
+            assert jid not in acked, "duplicated job id"
+            acked[jid] = (obj, n, seed)
+        assert sum(j.startswith("w0:") for j in acked) == 4
+
+        # drive every job to completion through the chaos: 503s are
+        # retried against the SAME id (the journal owns the job now)
+        results = {}
+        deadline = time.monotonic() + 300
+        pending = set(acked)
+        while pending and time.monotonic() < deadline:
+            for jid in sorted(pending):
+                st, out, hdrs = _rq(port, "GET",
+                                    f"/result?job_id={jid}&wait=5")
+                statuses.append((st, out.get("code")))
+                if st == 200 and out.get("status") == "done":
+                    results[jid] = out
+                    pending.discard(jid)
+                elif st == 503:
+                    assert out["code"] in ("worker_unavailable",
+                                           "shutting_down"), out
+                    assert "Retry-After" in hdrs
+                    time.sleep(min(float(hdrs["Retry-After"]), 1.0))
+                else:
+                    assert st == 202, (st, out)   # still running
+        assert not pending, f"lost jobs after restart: {sorted(pending)}"
+
+        # the worker really died and really was resurrected
+        assert handles[0].restarts >= 1
+        assert handles[1].restarts == 0
+
+        # no unhandled 5xx anywhere: every status was a deliberate one
+        assert {st for st, _ in statuses} <= {200, 202, 503}
+        assert all(code in ("worker_unavailable", "shutting_down")
+                   for st, code in statuses if st == 503)
+
+        # bit-identity survives the kill -> fsck -> journal-resume path
+        for jid, (obj, n, seed) in acked.items():
+            fun, xb = _ref(obj, n, seed)
+            out = results[jid]
+            assert out["fun"] == fun, (jid, obj)
+            assert np.asarray(out["x"], np.float64).tobytes() == xb, \
+                (jid, obj)
+
+        # aggregated metrics: restart counter + worker-stamped samples
+        st, _, _ = _rq(port, "GET", "/healthz")
+        assert st == 200
+        conn = http.client.HTTPConnection("127.0.0.1", port, timeout=30)
+        conn.request("GET", "/metrics")
+        resp = conn.getresponse()
+        text = resp.read().decode()
+        conn.close()
+        assert resp.status == 200
+        assert 'router_worker_restarts_total{worker="w0"} 1' in text
+        assert 'worker="w1"' in text
+        assert "router_requests_total" in text
+
+        # unknown prefixes 404 with the standard envelope
+        st, out, _ = _rq(port, "GET", "/poll?job_id=zz:job-1")
+        assert st == 404 and out["code"] == "unknown_job"
+        assert out["status"] == "unknown"
+    finally:
+        rt.begin_shutdown("test done")
+        serve_thread.join(timeout=60)     # serve() terminates workers
+        for w in handles:
+            w.terminate(grace_s=5)
